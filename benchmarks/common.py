@@ -1,0 +1,68 @@
+"""Shared benchmark utilities: calibration loading, error metrics, CSV rows."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+ARTIFACTS = os.path.join(ROOT, "artifacts")
+os.makedirs(ARTIFACTS, exist_ok=True)
+
+_ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived):
+    """One CSV row: name,us_per_call,derived."""
+    _ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def rows():
+    return list(_ROWS)
+
+
+def rel_err(pred: float, meas: float) -> float:
+    return abs(pred - meas) / max(abs(meas), 1e-12)
+
+
+def signed_err(pred: float, meas: float) -> float:
+    return (pred - meas) / max(abs(meas), 1e-12)
+
+
+def get_calibration():
+    from repro.core import calibrate
+    path = os.path.join(ARTIFACTS, f"calibration_{calibrate.device_name()}.json")
+    return calibrate.load_or_calibrate(path, verbose=False)
+
+
+def get_neusight(store, *, n_samples=40, steps=800, seed=0):
+    """Train (and cache) the NeuSight baseline on this host."""
+    import pickle
+    from repro.core.baselines import neusight as ns
+    from repro.core import memory_model as mm
+    cache = os.path.join(ARTIFACTS, "neusight_model.pkl")
+    if os.path.exists(cache):
+        with open(cache, "rb") as f:
+            return pickle.load(f)
+    peak = 0.0
+    for t in store.tables.values():
+        if t.key.op == "matmul" and t.key.dtype == "float32":
+            peak = max(peak, max(t.anchors.values()))
+    samples = ns.collect_matmul_dataset(n_samples=n_samples, seed=seed)
+    mem_samples = mm.collect_utility_samples()
+    model = ns.train(samples, mem_samples, peak_flops=peak, steps=steps)
+    with open(cache, "wb") as f:
+        pickle.dump(model, f)
+    return model
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

@@ -1,0 +1,42 @@
+"""NAS preprocessing speed (paper §IV-D2): µs/prediction, PM2Lat vectorized
+Eq(1)/(2) vs NeuSight MLP, and extrapolated wall time for the paper's
+400M-config MatMul grid."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import calibrate
+from repro.core.nas import NASGrid, precompute_cache
+
+
+def run(limit=1_000_000, verbose=True):
+    store = common.get_calibration()
+    dev = calibrate.device_name()
+    grid = NASGrid()
+
+    cache, total_s, us_per, n = precompute_cache(store, dev, grid=grid,
+                                                 limit=limit)
+    common.emit("nas/pm2lat_us_per_prediction", us_per, f"{us_per:.4f}")
+    full_grid_hours = grid.n_configs * us_per / 1e6 / 3600
+    common.emit("nas/pm2lat_full_grid_hours", 0.0, f"{full_grid_hours:.2f}")
+    common.emit("nas/grid_size", 0.0, str(grid.n_configs))
+
+    # NeuSight per-prediction cost (jit'd MLP, per-call as NAS would use it)
+    ns = common.get_neusight(store)
+    reps = 200
+    t0 = time.perf_counter()
+    for i in range(reps):
+        ns.predict_matmul(512 + i, 512, 512)
+    ns_us = (time.perf_counter() - t0) / reps * 1e6
+    common.emit("nas/neusight_us_per_prediction", ns_us, f"{ns_us:.1f}")
+    common.emit("nas/neusight_full_grid_hours", 0.0,
+                f"{grid.n_configs * ns_us / 1e6 / 3600:.1f}")
+    common.emit("nas/speedup", 0.0, f"{ns_us / us_per:.0f}x")
+    return {"pm2lat_us": us_per, "neusight_us": ns_us, "n_sampled": n}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,93 @@
+"""Paper application §IV-D1: two-device pipeline partition of a Qwen-3-style
+model.  Device A = this host; device B = a simulated 2.5x-faster device
+(habitat-style scaling).  Compare the TRUE bottleneck achieved by the
+PM2Lat-chosen split vs the NeuSight-chosen split vs the optimal split
+computed from measured per-block times, and the completion time of 100
+pipelined requests under each plan."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.configs import registry as cr
+from repro.core import calibrate, opgraph as og, profiler
+from repro.core.partition import plan_two_devices
+from repro.core.predictor import PM2Lat
+from repro.models import registry as mr, transformer as T
+
+B_SPEED = 0.4  # device B per-block latency multiplier (B is 2.5x faster)
+
+
+def _measured_block_latencies(cfg, B, S):
+    """Wall-clock per block kind, assembled per layer."""
+    model = mr.build(cfg)
+    params = model.init(jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (B, S, cfg.d_model), jnp.float32)
+    kinds = cfg.layer_kinds
+    by_kind = {}
+    period = len(cfg.block_pattern)
+    for i, kind in enumerate(cfg.block_pattern):
+        p_blk = jax.tree.map(lambda v: v[0], params["blocks"][f"sub{i}"])
+        f = jax.jit(lambda p, x: T.apply_block(p, kind, x, cfg)[0])
+        by_kind[(i, kind)] = profiler.measure(f, p_blk, x)
+    return [by_kind[(li % period, k)] for li, k in enumerate(kinds)]
+
+
+def run(batch=4, seq=128, n_requests=100, verbose=True):
+    store = common.get_calibration()
+    dev = calibrate.device_name()
+    pm = PM2Lat(store, dev)
+    ns = common.get_neusight(store)
+    cfg = dataclasses.replace(cr.get_any("qwen3-mini"), n_layers=12,
+                              compute_dtype="float32")
+
+    true_a = _measured_block_latencies(cfg, batch, seq)
+    true_b = [t * B_SPEED for t in true_a]
+
+    def blocks_from(predictor):
+        per = []
+        for li, kind in enumerate(cfg.layer_kinds):
+            one = dataclasses.replace(cfg, n_layers=1, block_pattern=(kind,))
+            ops = [o for o in og.enumerate_ops(one, batch, seq)
+                   if o.name not in ("embed", "unembed", "final_norm")]
+            t, _ = predictor.predict_ops(ops)
+            per.append(t)
+        return per
+
+    pred_pm = blocks_from(pm)
+    pred_ns = blocks_from(ns)
+
+    plans = {
+        "oracle": plan_two_devices(true_a, true_b),
+        "pm2lat": plan_two_devices(pred_pm, [t * B_SPEED for t in pred_pm]),
+        "neusight": plan_two_devices(pred_ns, [t * B_SPEED for t in pred_ns]),
+    }
+    out = {}
+    for name, plan in plans.items():
+        s = plan.split_point
+        stage_a = sum(true_a[:s])
+        stage_b = sum(true_b[s:])
+        bottleneck = max(stage_a, stage_b)
+        # pipelined completion of n requests: fill + (n-1) * bottleneck
+        completion = stage_a + stage_b + (n_requests - 1) * bottleneck
+        out[name] = {"split": s, "true_bottleneck_ms": bottleneck * 1e3,
+                     "completion_100_s": completion,
+                     "predicted_bottleneck_ms": plan.bottleneck * 1e3}
+        common.emit(f"partition/{name}/split", 0.0, str(s))
+        common.emit(f"partition/{name}/true_bottleneck_ms", 0.0,
+                    f"{bottleneck*1e3:.2f}")
+        common.emit(f"partition/{name}/completion_100req_s", 0.0,
+                    f"{completion:.2f}")
+        if name != "oracle":
+            err = common.rel_err(plan.bottleneck, out["oracle"]["true_bottleneck_ms"] / 1e3)
+            common.emit(f"partition/{name}/bottleneck_pred_err_pct", 0.0,
+                        f"{err*100:.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,173 @@
+"""Deliverable (g): three-term roofline per (arch x shape) from the dry-run
+compiled artifacts, against TPU v5e constants.
+
+Reads artifacts/dryrun_*.json (produced by launch/dryrun.py --all --json) and
+emits, per cell: compute/memory/collective seconds, dominant term,
+MODEL_FLOPS = 6*N(active)*D, HLO-vs-model FLOP ratio, and a one-line
+bottleneck note.  Markdown for EXPERIMENTS.md goes to artifacts/roofline.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import common
+from repro.configs import registry as cr
+from repro.configs import shapes as shp
+from repro.core import device as dev
+
+V5E = dev.TPU_V5E
+CHIPS = {"pod256": 256, "pod2x256": 512}
+
+
+def model_flops(arch: str, shape: shp.ShapeCell) -> float:
+    cfg = cr.get(arch)
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token
+
+
+def _note(dom: str, rep: dict) -> str:
+    if dom == "compute":
+        return "MXU-bound: raise per-chip utilization (larger tiles / fewer remat recomputes)"
+    if dom == "memory":
+        return "HBM-bound: cut activation/state traffic (chunking, bf16 states, fusion)"
+    return "ICI-bound: reduce or overlap collectives (schedule, compression, 2D sharding)"
+
+
+def analyze(reports, verbose=True):
+    rows = []
+    for rep in reports:
+        if not rep.get("ok"):
+            rows.append({"arch": rep["arch"], "shape": rep["shape"],
+                         "mesh": rep["mesh"], "ok": False,
+                         "error": rep.get("error", "")})
+            continue
+        chips = CHIPS.get(rep["mesh"], 256)
+        shape = shp.SHAPES[rep["shape"]]
+        dtype = "bfloat16"
+        # trip-count-exact jaxpr accounting (XLA cost_analysis counts loop
+        # bodies once; see core/jaxpr_cost.py); fall back to raw HLO numbers
+        flops_dev = (rep.get("jaxpr_flops_global", 0.0) / chips
+                     or rep["flops_per_device"])
+        bytes_dev = (rep.get("jaxpr_bytes_global", 0.0) / chips
+                     or rep["bytes_per_device"])
+        compute_s = flops_dev / V5E.peak(dtype)
+        memory_s = bytes_dev / V5E.hbm_bw
+        collective_s = rep["ici_bytes"] / (V5E.ici_bw * V5E.ici_links)
+        dom = max((("compute", compute_s), ("memory", memory_s),
+                   ("collective", collective_s)), key=lambda kv: kv[1])[0]
+        mf = model_flops(rep["arch"], shape)
+        hlo_total = flops_dev * chips
+        ratio = mf / hlo_total if hlo_total else 0.0
+        bound = max(compute_s, memory_s, collective_s)
+        # roofline fraction: useful model flops vs what the dominant term
+        # allows in the same wall time
+        frac = (mf / chips / V5E.peak(dtype)) / bound if bound else 0.0
+        rows.append({"arch": rep["arch"], "shape": rep["shape"],
+                     "mesh": rep["mesh"], "ok": True,
+                     "compute_s": compute_s, "memory_s": memory_s,
+                     "collective_s": collective_s, "dominant": dom,
+                     "model_flops": mf, "flops_ratio": ratio,
+                     "step_lower_bound_s": bound, "roofline_frac": frac,
+                     "note": _note(dom, rep),
+                     "mem_gib": (rep["memory"].get("argument_size_in_bytes", 0)
+                                 + rep["memory"].get("temp_size_in_bytes", 0)) / 2 ** 30,
+                     "options": rep.get("options", {})})
+    return rows
+
+
+def to_markdown(rows) -> str:
+    hdr = ("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+           "dominant | 6ND/HLO | roofline_frac | next lever |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if not r["ok"]:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"FAIL: {r['error'][:40]} | | | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compute_s']:.3e} | {r['memory_s']:.3e} | "
+            f"{r['collective_s']:.3e} | **{r['dominant']}** | "
+            f"{r['flops_ratio']:.2f} | {r['roofline_frac']:.2f} | {r['note']} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def run(pattern=None, verbose=True):
+    """One table per dryrun_*.json variant (baseline / optimized / ...)."""
+    pattern = pattern or os.path.join(common.ARTIFACTS, "dryrun_*.json")
+    all_rows = {}
+    md_parts = []
+    import numpy as np
+    for path in sorted(glob.glob(pattern)):
+        label = os.path.basename(path).replace("dryrun_", "").replace(".json", "")
+        with open(path) as f:
+            reports = json.load(f)
+        seen = {}
+        for r in reports:
+            seen[(r["arch"], r["shape"], r["mesh"])] = r
+        rows = analyze(list(seen.values()), verbose=verbose)
+        all_rows[label] = rows
+        ok_rows = [r for r in rows if r["ok"]]
+        md_parts.append(f"## {label}\n\n" + to_markdown(rows))
+        common.emit(f"roofline/{label}/cells_ok", 0.0,
+                    f"{len(ok_rows)}/{len(rows)}")
+        for dom in ("compute", "memory", "collective"):
+            n = sum(1 for r in ok_rows if r["dominant"] == dom)
+            common.emit(f"roofline/{label}/{dom}_bound_cells", 0.0, str(n))
+        if ok_rows:
+            common.emit(f"roofline/{label}/median_frac", 0.0,
+                        f"{np.median([r['roofline_frac'] for r in ok_rows]):.3f}")
+            common.emit(f"roofline/{label}/best_frac", 0.0,
+                        f"{max(r['roofline_frac'] for r in ok_rows):.3f}")
+    if not all_rows:
+        common.emit("roofline/cells_analyzed", 0.0,
+                    "0 (run launch.dryrun --all --json first)")
+        return []
+    with open(os.path.join(common.ARTIFACTS, "roofline.md"), "w") as f:
+        f.write(chr(10).join(md_parts))
+    # paired improvement summary (same cell present in two variants)
+    labels = list(all_rows)
+    if len(labels) >= 2:
+        base = {(r["arch"], r["shape"], r["mesh"]): r
+                for r in all_rows[labels[0]] if r["ok"]}
+        opt = {(r["arch"], r["shape"], r["mesh"]): r
+               for r in all_rows[labels[-1]] if r["ok"]}
+        gains = []
+        for k in base:
+            if k in opt and base[k]["step_lower_bound_s"] > 0:
+                gains.append(base[k]["step_lower_bound_s"]
+                             / max(opt[k]["step_lower_bound_s"], 1e-12))
+        if gains:
+            common.emit("roofline/paired_median_speedup", 0.0,
+                        f"{np.median(gains):.2f}x")
+            common.emit("roofline/paired_max_speedup", 0.0,
+                        f"{max(gains):.1f}x")
+        # per-cell best-of (the launcher picks the better config per cell)
+        best_gains = [max(g, 1.0) for g in gains]
+        if best_gains:
+            common.emit("roofline/bestof_median_speedup", 0.0,
+                        f"{np.median(best_gains):.2f}x")
+            n_improved = sum(1 for g in gains if g > 1.05)
+            common.emit("roofline/cells_improved_>5pct", 0.0,
+                        f"{n_improved}/{len(gains)}")
+            both = [k for k in base if k in opt]
+            fracs = [max(base[k]["roofline_frac"], opt[k]["roofline_frac"])
+                     for k in both]
+            common.emit("roofline/bestof_median_frac", 0.0,
+                        f"{np.median(fracs):.3f}")
+            common.emit("roofline/bestof_best_frac", 0.0,
+                        f"{max(fracs):.3f}")
+    return [r for rows in all_rows.values() for r in rows]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (plus section banners on
+stderr).  ``--fast`` shrinks sample counts for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _banner(s: str):
+    print(f"# === {s} ===", flush=True)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: table2,table4,table6,fig3,nas,partition,roofline")
+    args = ap.parse_args(argv)
+    want = set(args.only.split(",")) if args.only else None
+
+    def sel(name):
+        return want is None or name in want
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    if sel("fig3"):
+        _banner("Fig 3/4: duration & throughput vs K (rational trend)")
+        from benchmarks import fig3_throughput_vs_k
+        fig3_throughput_vs_k.run()
+    if sel("table2"):
+        _banner("Table II: per-layer error, PM2Lat vs NeuSight vs FLOPs-proxy")
+        from benchmarks import table2_per_layer
+        table2_per_layer.run(samples_per_layer=5 if args.fast else 10)
+    if sel("table4"):
+        _banner("Table IV/V: model-wise error")
+        from benchmarks import table4_model_wise
+        models = ("gpt2-mini", "qwen3-mini") if args.fast else \
+            table4_model_wise.MODELS
+        table4_model_wise.run(models=models,
+                              batches=(1, 4) if args.fast else (1, 4, 8))
+    if sel("table6"):
+        _banner("Table VI: custom (Pallas) kernels")
+        from benchmarks import table6_custom_kernels
+        table6_custom_kernels.run(samples=3 if args.fast else 6)
+    if sel("nas"):
+        _banner("NAS preprocessing speed (paper IV-D2)")
+        from benchmarks import nas_speed
+        nas_speed.run(limit=200_000 if args.fast else 1_000_000)
+    if sel("partition"):
+        _banner("Pipeline partition app (paper IV-D1)")
+        from benchmarks import partition_app
+        partition_app.run(seq=64 if args.fast else 128)
+    if sel("roofline"):
+        _banner("Roofline (dry-run artifacts)")
+        from benchmarks import roofline
+        roofline.run()
+    from benchmarks import common
+    common.emit("benchmarks/total_wall_s", 0.0, f"{time.time()-t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

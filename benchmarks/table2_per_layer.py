@@ -1,0 +1,92 @@
+"""Table II reproduction: per-layer average relative error (%), PM2Lat vs
+NeuSight vs FLOPs-proxy, across layer types {MM, Linear, BMM, SoftMax,
+Vector} on this host.
+
+Paper scale: 1000 samples/layer on 5 GPUs; host scale: --samples per layer on
+1 CPU with the same protocol.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import calibrate, opgraph as og, profiler
+from repro.core.baselines.roofline import RooflineBaseline
+from repro.core.predictor import PM2Lat
+
+
+def _measure(fn, *args):
+    return profiler.measure(jax.jit(fn), *args)
+
+
+def _sample_shapes(rng, layer: str):
+    if layer in ("MM", "Linear"):
+        return (int(2 ** rng.uniform(6, 11)), int(2 ** rng.uniform(6, 11)),
+                int(2 ** rng.uniform(5, 12)))
+    if layer == "BMM":
+        return (int(2 ** rng.uniform(2, 4)), int(2 ** rng.uniform(5, 9)),
+                int(2 ** rng.uniform(5, 9)), int(2 ** rng.uniform(5, 9)))
+    return (int(2 ** rng.uniform(0, 6)), int(2 ** rng.uniform(8, 13)))
+
+
+def run(samples_per_layer=10, seed=0, verbose=True):
+    store = common.get_calibration()
+    dev = calibrate.device_name()
+    pm = PM2Lat(store, dev)
+    ns = common.get_neusight(store)
+    rb = RooflineBaseline.from_store(store, dev)
+    rng = np.random.default_rng(seed)
+    results = {}
+
+    for layer in ("MM", "Linear", "BMM", "SoftMax", "Vector"):
+        errs = {"pm2lat": [], "neusight": [], "flops_proxy": []}
+        for _ in range(samples_per_layer):
+            if layer in ("MM", "Linear"):
+                m, n, k = _sample_shapes(rng, layer)
+                a = jnp.ones((m, k))
+                w = jnp.ones((k, n))
+                if layer == "Linear":
+                    b = jnp.ones((n,))
+                    meas = _measure(lambda a, w, b: a @ w + b, a, w, b)
+                else:
+                    meas = _measure(lambda a, w: a @ w, a, w)
+                op = og.MatmulOp(layer, m=m, n=n, k=k)
+                preds = {"pm2lat": pm.predict_matmul(op),
+                         "neusight": ns.predict_matmul(m, n, k),
+                         "flops_proxy": op.flops / rb.peak_flops}
+            elif layer == "BMM":
+                bsz, m, n, k = _sample_shapes(rng, layer)
+                a = jnp.ones((bsz, m, k))
+                w = jnp.ones((bsz, k, n))
+                meas = _measure(lambda a, w: jnp.einsum("bmk,bkn->bmn", a, w), a, w)
+                op = og.MatmulOp(layer, m=m, n=n, k=k, batch=bsz, kind="bmm")
+                preds = {"pm2lat": pm.predict_matmul(op),
+                         "neusight": ns.predict_matmul(m, n, k, batch=bsz),
+                         "flops_proxy": op.flops / rb.peak_flops}
+            else:
+                b, f = _sample_shapes(rng, layer)
+                x = jnp.ones((b, f))
+                if layer == "SoftMax":
+                    meas = _measure(lambda x: jax.nn.softmax(x, -1), x)
+                    op = og.MemoryOp(layer, "softmax", (b, f))
+                else:  # Vector: add / mul / gelu mix
+                    meas = _measure(lambda x: jax.nn.gelu(x + x) * x, x)
+                    op = og.MemoryOp(layer, "silu_mul", (b, f))
+                feats = op.features()
+                preds = {"pm2lat": pm.predict_memory(op),
+                         "neusight": ns.predict_memory(feats),
+                         "flops_proxy": feats["bytes"] / rb.mem_bw}
+            for kname, p in preds.items():
+                errs[kname].append(common.rel_err(p, meas))
+        results[layer] = {k: float(np.mean(v)) * 100 for k, v in errs.items()}
+        results[layer + "_max"] = {k: float(np.max(v)) * 100 for k, v in errs.items()}
+        for k in ("pm2lat", "neusight", "flops_proxy"):
+            common.emit(f"table2/{layer}/{k}_err_pct", 0.0,
+                        f"{results[layer][k]:.1f}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Table IV/V reproduction: model-wise signed error (%) across batch sizes,
+PM2Lat vs NeuSight, on structural miniatures of the paper's models
+(GPT-2, FLAN-T5, Qwen-3, DeepSeek-R1) plus two assigned-arch reduced configs
+(MoE + hybrid, beyond the paper's set)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.configs import registry as cr
+from repro.core import calibrate, opgraph as og, profiler
+from repro.core.predictor import PM2Lat
+from repro.models import registry as mr
+
+MODELS = ("gpt2-mini", "flan-t5-mini", "qwen3-mini", "deepseek-r1-mini",
+          "moonshot-v1-16b-a3b-reduced", "recurrentgemma-2b-reduced")
+BATCHES = (1, 4, 8)
+SEQ = 128
+
+
+def run(models=MODELS, batches=BATCHES, seq=SEQ, verbose=True):
+    store = common.get_calibration()
+    dev = calibrate.device_name()
+    pm = PM2Lat(store, dev)
+    ns = common.get_neusight(store)
+    out = {}
+    for name in models:
+        cfg = cr.get_any(name)
+        cfg = dataclasses.replace(cfg, compute_dtype="float32")
+        model = mr.build(cfg)
+        params = model.init(jax.random.key(0))
+        fwd = jax.jit(lambda p, t, c: model.forward(p, t, ctx_embed=c)[0])
+        for B in batches:
+            tokens = jnp.zeros((B, seq), jnp.int32)
+            ctx = model.make_ctx(jax.random.key(1), B)
+            meas = profiler.measure(fwd, params, tokens, ctx)
+            ops = og.enumerate_ops(cfg, B, seq)
+            pred_pm, _ = pm.predict_ops(ops)
+            pred_ns, _ = ns.predict_ops(ops)
+            e_pm = common.signed_err(pred_pm, meas) * 100
+            e_ns = common.signed_err(pred_ns, meas) * 100
+            out[(name, B)] = {"meas_ms": meas * 1e3, "pm2lat_pct": e_pm,
+                              "neusight_pct": e_ns}
+            common.emit(f"table4/{name}/bs{B}/meas_ms", meas * 1e6, f"{meas*1e3:.1f}")
+            common.emit(f"table4/{name}/bs{B}/pm2lat_err_pct", 0.0, f"{e_pm:+.1f}")
+            common.emit(f"table4/{name}/bs{B}/neusight_err_pct", 0.0, f"{e_ns:+.1f}")
+    abs_pm = np.mean([abs(v["pm2lat_pct"]) for v in out.values()])
+    abs_ns = np.mean([abs(v["neusight_pct"]) for v in out.values()])
+    common.emit("table4/mean_abs/pm2lat_err_pct", 0.0, f"{abs_pm:.1f}")
+    common.emit("table4/mean_abs/neusight_err_pct", 0.0, f"{abs_ns:.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,24 @@
+"""Paper application IV-D2: NAS latency-cache preprocessing.  Vectorized
+Eq(1)/(2) prediction over the paper's MatMul search grid (~400M configs),
+reporting microseconds/prediction and total cache-build time.
+
+  PYTHONPATH=src python examples/nas_cache.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import nas_speed
+
+
+def main():
+    out = nas_speed.run(limit=500_000)
+    print(f"\nPM2Lat: {out['pm2lat_us']:.3f} us/prediction "
+          f"(paper reports 0.045 ms = 45 us for scalar CPU predictions; "
+          f"vectorization buys several orders of magnitude)")
+    print(f"NeuSight-style MLP: {out['neusight_us']:.1f} us/prediction")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: build an assigned architecture, run a forward pass, and ask
+PM2Lat to predict its latency — then check the prediction against the wall
+clock.
+
+  PYTHONPATH=src python examples/quickstart.py [--arch yi-6b]
+"""
+import argparse
+import dataclasses
+import sys
+
+import jax
+import jax.numpy as jnp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    from repro.configs import registry as cr
+    from repro.core import calibrate, profiler
+    from repro.core.predictor import PM2Lat
+    from repro.models import registry as mr
+
+    # 1. a reduced config of the assigned architecture (CPU-runnable)
+    cfg = dataclasses.replace(cr.reduced(args.arch), compute_dtype="float32")
+    model = mr.build(cfg)
+    print(f"arch={cfg.name} family={cfg.family} params={model.count_params()/1e6:.2f}M")
+
+    # 2. forward pass
+    params = model.init(jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (args.batch, args.seq), 0,
+                                cfg.vocab_size)
+    ctx = model.make_ctx(jax.random.key(2), args.batch)
+    fwd = jax.jit(lambda p, t, c: model.forward(p, t, ctx_embed=c)[0])
+    logits = fwd(params, tokens, ctx)
+    print(f"logits {logits.shape}, finite={bool(jnp.isfinite(logits).all())}")
+
+    # 3. PM2Lat: predict, then measure
+    store = calibrate.load_or_calibrate(verbose=True)  # cached after first run
+    pred = PM2Lat(store, calibrate.device_name())
+    est, rows = pred.predict_model(cfg, args.batch, args.seq)
+    meas = profiler.measure(fwd, params, tokens, ctx)
+    print(f"PM2Lat predicted {est*1e3:.2f} ms | measured {meas*1e3:.2f} ms "
+          f"| error {abs(est-meas)/meas*100:.1f}%")
+    print("top-5 predicted ops:")
+    for r in sorted(rows, key=lambda r: -r.seconds)[:5]:
+        print(f"  {r.name:24s} {r.kind:9s} {r.seconds*1e3:8.3f} ms  [{r.kernel}]")
+
+
+if __name__ == "__main__":
+    main()

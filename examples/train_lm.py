@@ -1,0 +1,36 @@
+"""End-to-end training driver: train a ~5M-param qwen2-family model for a few
+hundred steps on the synthetic-copy-task pipeline with checkpointing, failure
+injection and straggler monitoring — the full production loop in miniature.
+
+  PYTHONPATH=src python examples/train_lm.py                # ~200 steps
+  PYTHONPATH=src python examples/train_lm.py --steps 50     # quicker
+  PYTHONPATH=src python examples/train_lm.py --inject-failure
+"""
+import argparse
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--inject-failure", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    from repro.launch import train as T
+    argv = ["--arch", "qwen2-0.5b", "--reduced", "--steps", str(args.steps),
+            "--batch", str(args.batch), "--seq", str(args.seq),
+            "--lr", "2e-3", "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "25"]
+    if args.inject_failure:
+        argv += ["--fail-at", str(args.steps // 2)]
+    res = T.run(T.parse_args(argv))
+    print(f"loss: {res['first_loss']:.3f} -> {res['final_loss']:.3f} "
+          f"({args.steps} steps, {res['restarts']} restarts, "
+          f"{res['wall_s']:.0f}s)")
+    assert res["final_loss"] < res["first_loss"], "training failed to learn"
+
+
+if __name__ == "__main__":
+    main()

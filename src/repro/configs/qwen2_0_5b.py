@@ -1,0 +1,22 @@
+"""qwen2-0.5b — GQA, QKV bias [arXiv:2407.10671; hf].
+
+24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151936.
+"""
+from repro.configs.base import ATTN, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-0.5b",
+    family="dense",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    d_ff=4864,
+    vocab_size=151936,
+    block_pattern=(ATTN,),
+    mlp_act="silu",
+    qkv_bias=True,
+    rope_theta=1000000.0,
+    tie_embeddings=True,
+    source="[arXiv:2407.10671; hf]",
+)

@@ -1,0 +1,172 @@
+"""NeuSight-style learned baseline (Lee et al., ASPLOS'25; paper §II).
+
+Faithful-in-spirit reimplementation in pure JAX: a tile/wave-featurized MLP
+predicts per-kernel GPU *utilization*; duration = flops / (peak * util).
+Trained with the same relative-error loss family (SMAPE) the paper critiques,
+on measured (M, N, K) samples from this host.  Memory-bound ops use a second
+tiny MLP on byte counts.
+
+This is the comparison target for the Table II/IV/V reproductions; its
+failure modes (loss imbalance, out-of-distribution shapes) are the ones the
+paper documents.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import opgraph as og
+from repro.core import profiler
+from repro.core.predictor import PredictionRow
+
+TILE = 128  # assumed tile for wave counting
+
+
+def matmul_features(m, n, k, batch=1.0):
+    m, n, k, batch = (np.asarray(x, np.float64) for x in (m, n, k, batch))
+    waves = np.ceil(m / TILE) * np.ceil(n / TILE) * batch
+    flops = 2.0 * m * n * k * batch
+    return np.stack([np.log2(m), np.log2(n), np.log2(k), np.log2(batch + 1),
+                     np.log2(waves), np.log2(flops)], axis=-1)
+
+
+def _init_mlp(key, sizes):
+    params = []
+    for i, (a, b) in enumerate(zip(sizes, sizes[1:])):
+        k1, key = jax.random.split(key)
+        params.append({"w": jax.random.normal(k1, (a, b)) / np.sqrt(a),
+                       "b": jnp.zeros((b,))})
+    return params
+
+
+def _mlp(params, x):
+    for i, p in enumerate(params):
+        x = x @ p["w"] + p["b"]
+        if i < len(params) - 1:
+            x = jnp.tanh(x)
+    return x
+
+
+@dataclasses.dataclass
+class NeuSightModel:
+    mlp_params: list
+    peak_flops: float
+    mem_mlp_params: list
+    feat_mean: np.ndarray
+    feat_std: np.ndarray
+    mem_scale: float
+
+    def predict_matmul(self, m, n, k, batch=1) -> float:
+        f = (matmul_features(m, n, k, batch) - self.feat_mean) / self.feat_std
+        util = jax.nn.sigmoid(_mlp(self.mlp_params, jnp.asarray(f)))[..., 0]
+        flops = 2.0 * m * n * k * batch
+        return float(flops / (self.peak_flops * np.maximum(float(util), 1e-4)))
+
+    def predict_memory(self, feats: Dict[str, float]) -> float:
+        x = jnp.asarray([np.log2(feats["bytes"] + 1)])
+        return float(jnp.exp(_mlp(self.mem_mlp_params, x))[0] * self.mem_scale)
+
+    def predict_op(self, op) -> PredictionRow:
+        if op.kind in ("matmul", "bmm"):
+            s = self.predict_matmul(op.m, op.n, op.k, op.batch) * op.count
+            return PredictionRow(op.name, op.kind, s, "neusight_mlp")
+        if op.kind == "attention":
+            # NeuSight decomposes attention into its two BMMs
+            s = (self.predict_matmul(op.sq, op.skv, op.hd, op.batch * op.heads)
+                 + self.predict_matmul(op.sq, op.hd, op.skv, op.batch * op.heads)
+                 ) * op.count
+            return PredictionRow(op.name, op.kind, s, "neusight_mlp")
+        return PredictionRow(op.name, "memory",
+                             self.predict_memory(op.features()) * op.count,
+                             "neusight_mem")
+
+    def predict_ops(self, ops: List) -> Tuple[float, List[PredictionRow]]:
+        rows = [self.predict_op(o) for o in ops]
+        return sum(r.seconds for r in rows), rows
+
+
+def collect_matmul_dataset(n_samples=60, *, dtype=jnp.float32, seed=0,
+                           max_mn=2048, max_k=4096) -> List[dict]:
+    rng = np.random.default_rng(seed)
+    f = jax.jit(lambda a, b: a @ b)
+    out = []
+    for _ in range(n_samples):
+        m = int(2 ** rng.uniform(5, np.log2(max_mn)))
+        n = int(2 ** rng.uniform(5, np.log2(max_mn)))
+        k = int(2 ** rng.uniform(5, np.log2(max_k)))
+        a = jnp.ones((m, k), dtype)
+        b = jnp.ones((k, n), dtype)
+        dur = profiler.measure(f, a, b, min_reps=3, min_total_s=0.02)
+        out.append({"m": m, "n": n, "k": k, "batch": 1, "duration": dur})
+    return out
+
+
+def train(samples: List[dict], mem_samples: List[dict], *, peak_flops: float,
+          steps=2000, lr=1e-2, seed=0, loss="smape") -> NeuSightModel:
+    feats = matmul_features(np.array([s["m"] for s in samples]),
+                            np.array([s["n"] for s in samples]),
+                            np.array([s["k"] for s in samples]),
+                            np.array([s["batch"] for s in samples]))
+    mean, std = feats.mean(0), feats.std(0) + 1e-9
+    X = jnp.asarray((feats - mean) / std)
+    durs = np.array([s["duration"] for s in samples])
+    flops = np.array([2.0 * s["m"] * s["n"] * s["k"] * s["batch"]
+                      for s in samples])
+    util_target = np.clip(flops / (peak_flops * durs), 1e-4, 1.0)
+    y = jnp.asarray(durs)
+    fl = jnp.asarray(flops)
+
+    params = _init_mlp(jax.random.key(seed), (X.shape[1], 64, 64, 1))
+
+    def loss_fn(params):
+        util = jax.nn.sigmoid(_mlp(params, X))[:, 0]
+        pred = fl / (peak_flops * jnp.maximum(util, 1e-4))
+        if loss == "smape":
+            return jnp.mean(jnp.abs(pred - y) / (jnp.abs(pred) + jnp.abs(y)))
+        return jnp.mean(jnp.abs(pred - y) / y)
+
+    params = _adam(loss_fn, params, steps, lr)
+
+    # memory MLP: log-bytes -> log-duration
+    mb = np.array([[np.log2(s["features"]["bytes"] + 1)] for s in mem_samples])
+    md = np.array([s["duration"] for s in mem_samples])
+    scale = float(np.median(md))
+    Xm = jnp.asarray(mb)
+    ym = jnp.asarray(np.log(md / scale))
+    mparams = _init_mlp(jax.random.key(seed + 1), (1, 32, 1))
+
+    def mem_loss(params):
+        pred = _mlp(params, Xm)[:, 0]
+        return jnp.mean((pred - ym) ** 2)
+
+    mparams = _adam(mem_loss, mparams, steps // 2, lr)
+    return NeuSightModel(mlp_params=params, peak_flops=peak_flops,
+                         mem_mlp_params=mparams, feat_mean=mean,
+                         feat_std=std, mem_scale=scale)
+
+
+def _adam(loss_fn, params, steps, lr):
+    import jax
+
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step(params, m, v, t):
+        g = jax.grad(loss_fn)(params)
+        m = jax.tree.map(lambda m, g: 0.9 * m + 0.1 * g, m, g)
+        v = jax.tree.map(lambda v, g: 0.999 * v + 0.001 * g * g, v, g)
+        mh = jax.tree.map(lambda m: m / (1 - 0.9 ** t), m)
+        vh = jax.tree.map(lambda v: v / (1 - 0.999 ** t), v)
+        params = jax.tree.map(
+            lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + 1e-8),
+            params, mh, vh)
+        return params, m, v
+
+    for t in range(1, steps + 1):
+        params, m, v = step(params, m, v, t)
+    return params

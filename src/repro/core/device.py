@@ -1,0 +1,69 @@
+"""Device models.
+
+PM2Lat is per-device by construction: every device gets its own profiled
+throughput tables (``core/calibrate.py``).  The analytical constants below
+describe the dry-run TARGET (TPU v5e) and the measurable host; roofline terms
+and the TPU-mode predictor read them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceModel:
+    name: str
+    peak_flops: dict          # dtype -> FLOP/s per chip
+    hbm_bw: float             # bytes/s per chip
+    ici_bw: float             # bytes/s per link
+    ici_links: int            # links per chip contributing to collectives
+    hbm_bytes: int
+    vmem_bytes: int
+    chips_per_pod: int = 256
+
+    def peak(self, dtype: str) -> float:
+        return self.peak_flops.get(str(dtype), max(self.peak_flops.values()))
+
+
+TPU_V5E = DeviceModel(
+    name="tpu_v5e",
+    peak_flops={"bfloat16": 197e12, "float32": 98.5e12, "int8": 394e12},
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    ici_links=4,
+    hbm_bytes=16 * 1024 ** 3,
+    vmem_bytes=128 * 1024 ** 2,
+    chips_per_pod=256,
+)
+
+
+def _measure_host_flops(n: int = 512, reps: int = 10) -> float:
+    """One-point matmul calibration of the host (used as a fallback default;
+    the real per-kernel tables come from core/calibrate.py)."""
+    import jax
+    import jax.numpy as jnp
+    f = jax.jit(lambda a, b: a @ b)
+    a = jnp.ones((n, n), jnp.float32)
+    b = jnp.ones((n, n), jnp.float32)
+    f(a, b).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        f(a, b).block_until_ready()
+    dt = (time.perf_counter() - t0) / reps
+    return 2 * n ** 3 / dt
+
+
+def host_device_model(measured_peak: float | None = None) -> DeviceModel:
+    peak = measured_peak if measured_peak else 5e10  # conservative 1-core default
+    return DeviceModel(
+        name=f"cpu_host_{os.uname().nodename}",
+        peak_flops={"float32": peak, "bfloat16": peak / 4},
+        hbm_bw=2e10,
+        ici_bw=1e9,
+        ici_links=1,
+        hbm_bytes=32 * 1024 ** 3,
+        vmem_bytes=32 * 1024 ** 2,  # L2-ish
+        chips_per_pod=1,
+    )

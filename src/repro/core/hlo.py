@@ -1,0 +1,211 @@
+"""Compiled-HLO introspection: cost analysis extraction + collective-traffic
+parsing (the dry-run 'profile' — there is no wall clock on this host for TPU).
+
+``collective_stats`` parses the post-SPMD optimized HLO text and, for every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+accumulates operand bytes and estimates per-device ICI traffic with ring
+formulas:
+    all-gather      (g-1)/g * output_bytes
+    reduce-scatter  (g-1)/g * input_bytes
+    all-reduce      2*(g-1)/g * input_bytes
+    all-to-all      (g-1)/g * input_bytes
+    collective-permute  input_bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "e4m3": 1, "e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    # per collective kind: [count, operand_bytes, ici_bytes_estimate]
+    by_kind: Dict[str, list]
+
+    @property
+    def total_operand_bytes(self) -> int:
+        return sum(v[1] for v in self.by_kind.values())
+
+    @property
+    def total_ici_bytes(self) -> int:
+        return sum(v[2] for v in self.by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(v[0] for v in self.by_kind.values())
+
+    def summary(self) -> str:
+        rows = [f"{k}: n={v[0]} operand={v[1]/1e6:.1f}MB ici={v[2]/1e6:.1f}MB"
+                for k, v in sorted(self.by_kind.items()) if v[0]]
+        return "; ".join(rows) if rows else "none"
+
+
+def _computation_blocks(hlo_text: str):
+    """Split optimized HLO into (computation_name, [lines])."""
+    blocks = {}
+    name, buf = None, []
+    for line in hlo_text.splitlines():
+        m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{", line.strip())
+        if m and not line.startswith("  "):
+            if name is not None:
+                blocks[name] = buf
+            name, buf = m.group(1), []
+            if line.lstrip().startswith("ENTRY"):
+                blocks["__entry__"] = buf
+                name = "__entry__"
+        elif name is not None:
+            buf.append(line)
+    if name is not None:
+        blocks[name] = buf
+    return blocks
+
+
+_TRIP_RE = re.compile(r'known_trip_count\":\{\"n\":\"(\d+)')
+_TRIP_RE2 = re.compile(r'known_trip_count":\{"n":"(\d+)')
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+
+
+def _while_multipliers(blocks) -> Dict[str, float]:
+    """Execution-count multiplier per computation (nested whiles compose)."""
+    mult = {name: 1.0 for name in blocks}
+    # edges: computation -> (body computation, trips)
+    edges = {}
+    for name, lines in blocks.items():
+        for ln in lines:
+            if " while(" not in ln:
+                continue
+            mb = _BODY_RE.search(ln)
+            mt = _TRIP_RE2.search(ln) or _TRIP_RE.search(ln)
+            if mb:
+                trips = float(mt.group(1)) if mt else 1.0
+                edges.setdefault(name, []).append((mb.group(1), trips))
+    # propagate from entry via BFS (graph is a DAG of computations)
+    import collections
+    order = collections.deque(["__entry__"])
+    seen = set()
+    while order:
+        cur = order.popleft()
+        if cur in seen or cur not in blocks:
+            continue
+        seen.add(cur)
+        for body, trips in edges.get(cur, []):
+            if body in mult:
+                mult[body] = max(mult[body], mult.get(cur, 1.0) * trips)
+                order.append(body)
+    return mult
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """While-aware accounting: collectives inside loop bodies are multiplied
+    by the loop's known_trip_count (XLA's own cost analysis counts them
+    once — verified and corrected here)."""
+    blocks = _computation_blocks(hlo_text)
+    mult = _while_multipliers(blocks)
+    by_kind: Dict[str, list] = {k: [0, 0, 0] for k in _COLLECTIVES}
+    for comp_name, lines in blocks.items():
+        m_exec = mult.get(comp_name, 1.0)
+        for line in lines:
+            _accumulate_line(line, by_kind, m_exec)
+    return CollectiveStats(by_kind=by_kind)
+
+
+def _accumulate_line(line: str, by_kind, m_exec: float):
+        s = line.strip()
+        if not s or s.startswith("//"):
+            return
+        kind = None
+        for k in _COLLECTIVES:
+            if re.search(rf"\b{k}(-start|-done)?\(", s):
+                kind = k
+                break
+        if kind is None or f"{kind}-done" in s:
+            return
+        # operand bytes: shapes inside the call parens
+        call = s.split(f"{kind}-start(" if f"{kind}-start(" in s else f"{kind}(", 1)
+        if len(call) < 2:
+            return
+        operand_bytes = sum(_shape_bytes(d, dims)
+                            for d, dims in _SHAPE_RE.findall(call[1].split(")")[0]))
+        # output bytes: shapes on the lhs (before the op name)
+        out_bytes = sum(_shape_bytes(d, dims)
+                        for d, dims in _SHAPE_RE.findall(call[0]))
+        g = _group_size(s)
+        if operand_bytes == 0:
+            # optimized-HLO dumps print operands without inline types;
+            # reconstruct from the result shape
+            if kind == "all-gather":
+                operand_bytes = out_bytes // max(g, 1)
+            elif kind == "reduce-scatter":
+                operand_bytes = out_bytes * max(g, 1)
+            else:
+                operand_bytes = out_bytes
+        frac = (g - 1) / g if g > 1 else 0.0
+        if kind == "all-gather":
+            ici = frac * out_bytes
+        elif kind == "reduce-scatter":
+            ici = frac * operand_bytes
+        elif kind == "all-reduce":
+            ici = 2 * frac * operand_bytes
+        elif kind == "all-to-all":
+            ici = frac * operand_bytes
+        else:  # collective-permute
+            ici = operand_bytes
+        rec = by_kind[kind]
+        rec[0] += int(m_exec)
+        rec[1] += int(operand_bytes * m_exec)
+        rec[2] += int(ici * m_exec)
+
+
+def cost_summary(compiled) -> Dict[str, float]:
+    """flops / bytes accessed from compiled.cost_analysis() (per device)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0))}
+
+
+def memory_summary(compiled) -> Dict[str, int]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    return {k: int(getattr(ma, k, 0)) for k in keys}

@@ -1,0 +1,187 @@
+"""Memory-bound (utility) op latency: linear regression over proxy metrics
+(paper §III-C 'Utility Layer Latency Prediction').
+
+The paper collects instruction/byte counters with Nsight Compute and fits a
+linear model instead of hand-crafted per-layer formulas.  Our counters come
+from ``compiled.cost_analysis()`` of the jitted op — the same
+'implementation-level, not theoretical' stance: XLA's fusion decisions are in
+the numbers.
+
+Features per op: [bytes_accessed, flops, transcendentals, 1].
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import profiler
+
+
+def op_features(fn: Callable, *args) -> Dict[str, float]:
+    """Proxy metrics from the compiled op (our NCU stand-in)."""
+    compiled = jax.jit(fn).lower(*args).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {"bytes": float(ca.get("bytes accessed", 0.0)),
+            "flops": float(ca.get("flops", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0))}
+
+
+def feature_vector(feats: Dict[str, float]) -> np.ndarray:
+    return np.array([feats["bytes"], feats["flops"],
+                     feats["transcendentals"], 1.0])
+
+
+# Kernel differentiation for memory-bound ops (same move as the matmul
+# tables): one regression per utility-kernel CLASS.  A single global linear
+# model had 46% train error; per-class models are each near-linear in bytes.
+KERNEL_CLASS = {
+    "softmax": "softmax", "rmsnorm": "norm",
+    "fused_norm_act": "transcendental",
+    "add": "pointwise", "mul": "pointwise", "relu": "pointwise",
+    "gelu": "transcendental", "fused_vec": "transcendental",
+    "silu_mul": "transcendental", "gate_sigmoid": "transcendental",
+    "rope": "pointwise", "embed_gather": "pointwise", "conv1d4": "pointwise",
+    "assoc_scan": "scan", "seq_scan": "scan",
+}
+
+
+def class_of(name: str) -> str:
+    for prefix, cls in KERNEL_CLASS.items():
+        if name.startswith(prefix):
+            return cls
+    return "pointwise"
+
+
+@dataclasses.dataclass
+class MemoryModel:
+    coef: np.ndarray                         # global fallback (4,)
+    train_rel_err: float = 0.0
+    class_coef: Optional[dict] = None        # class -> (4,) coefficients
+
+    def predict(self, feats: Dict[str, float], kernel_class: str = None) -> float:
+        coef = self.coef
+        if self.class_coef and kernel_class in self.class_coef:
+            coef = np.asarray(self.class_coef[kernel_class])
+        return float(feature_vector(feats) @ coef)
+
+    def to_json(self) -> dict:
+        return {"coef": self.coef.tolist(), "train_rel_err": self.train_rel_err,
+                "class_coef": {k: list(v) for k, v in (self.class_coef or {}).items()}}
+
+    @staticmethod
+    def from_json(d: dict) -> "MemoryModel":
+        return MemoryModel(coef=np.asarray(d["coef"]),
+                           train_rel_err=float(d["train_rel_err"]),
+                           class_coef={k: np.asarray(v) for k, v in
+                                       d.get("class_coef", {}).items()} or None)
+
+
+def _lstsq_rel(samples):
+    """Nonnegative relative-space least squares (active-set: drop the most
+    negative coefficient and re-solve — plain clipping after lstsq produces
+    garbage when features are collinear, e.g. softmax bytes ~ flops ~
+    transcendentals)."""
+    X = np.stack([feature_vector(s["features"]) for s in samples])
+    y = np.array([s["duration"] for s in samples])
+    Xr = X / y[:, None]
+    ones = np.ones_like(y)
+    active = list(range(X.shape[1]))
+    coef = np.zeros(X.shape[1])
+    for _ in range(X.shape[1]):
+        c, *_ = np.linalg.lstsq(Xr[:, active], ones, rcond=None)
+        if (c >= 0).all() or len(active) == 1:
+            coef[:] = 0.0
+            coef[active] = np.maximum(c, 0.0)
+            break
+        active.pop(int(np.argmin(c)))
+    rel = float(np.mean(np.abs(X @ coef - y) / y))
+    return coef, rel
+
+
+def fit_memory_model(samples: List[Dict], *, weighted: bool = True) -> MemoryModel:
+    """samples: [{"features": {...}, "duration": s[, "name"]}].  Weighted
+    least squares in relative space (divide rows by duration) so fast and
+    slow kernels count equally — this directly avoids the loss-imbalance
+    failure mode the paper attributes to NeuSight (§IV-B).  Per-kernel-class
+    sub-models when sample names are present."""
+    coef, rel = _lstsq_rel(samples)
+    class_coef = {}
+    by_class: Dict[str, list] = {}
+    for s in samples:
+        if "name" in s:
+            by_class.setdefault(class_of(s["name"]), []).append(s)
+    rels = []
+    for cls, ss in by_class.items():
+        if len(ss) >= 6:
+            c, r = _lstsq_rel(ss)
+            class_coef[cls] = c
+            rels.append(r * len(ss))
+    if rels and sum(len(v) for v in by_class.values()) == len(samples):
+        rel = sum(rels) / len(samples)
+    return MemoryModel(coef=coef, train_rel_err=rel,
+                       class_coef=class_coef or None)
+
+
+# ----- utility-op sample generators (profiling workloads) -----
+
+def utility_workloads(max_feat: int = 16384):
+    """(name, fn, args) triples spanning the paper's utility-layer set,
+    including FUSED elementwise chains (XLA fuses gelu(x+y)*x into one
+    kernel whose duration tracks bytes, not op count — without such samples
+    the regression mispredicted fused Vector ops by ~2x)."""
+    import jax.nn as jnn
+    rng = np.random.default_rng(0)
+    shapes = []
+    for _ in range(16):
+        b = int(rng.integers(1, 96))
+        f = int(2 ** rng.integers(6, int(np.log2(max_feat)) + 1))
+        shapes.append((b, f))
+    out = []
+    for b, f in shapes:
+        x = jnp.asarray(rng.standard_normal((b, f)), jnp.float32)
+        y = jnp.asarray(rng.standard_normal((b, f)), jnp.float32)
+        out += [
+            (f"gelu_{b}x{f}", lambda x: jnn.gelu(x), (x,)),
+            (f"relu_{b}x{f}", lambda x: jnn.relu(x), (x,)),
+            (f"softmax_{b}x{f}", lambda x: jnn.softmax(x, axis=-1), (x,)),
+            (f"add_{b}x{f}", lambda x, y: x + y, (x, y)),
+            (f"mul_{b}x{f}", lambda x, y: x * y, (x, y)),
+            (f"fused_vec_{b}x{f}", lambda x, y: jnn.gelu(x + y) * x, (x, y)),
+            (f"fused_norm_act_{b}x{f}",
+             lambda x: jnn.silu(x) * jax.lax.rsqrt(
+                 jnp.mean(x * x, -1, keepdims=True) + 1e-6),
+             (x,)),
+            (f"rmsnorm_{b}x{f}",
+             lambda x: x * jax.lax.rsqrt(jnp.mean(x * x, -1, keepdims=True) + 1e-6),
+             (x,)),
+        ]
+        if b >= 2 and f >= 256:
+            s3 = jnp.asarray(rng.standard_normal((b, 32, f // 8)), jnp.float32)
+            out += [
+                (f"assoc_scan_{b}x{f}",
+                 lambda x: jax.lax.associative_scan(
+                     lambda a, c: (a[0] * c[0], c[0] * a[1] + c[1]),
+                     (x, x), axis=1)[1], (s3,)),
+                (f"seq_scan_{b}x{f}",
+                 lambda x: jax.lax.scan(
+                     lambda c, xt: (jnp.tanh(c * 0.9 + xt), None),
+                     x[:, 0], x.swapaxes(0, 1))[0], (s3,)),
+            ]
+    return out
+
+
+def collect_utility_samples(workloads=None) -> List[Dict]:
+    workloads = workloads or utility_workloads()
+    samples = []
+    for name, fn, args in workloads:
+        jfn = jax.jit(fn)
+        dur = profiler.measure(jfn, *args)
+        feats = op_features(fn, *args)
+        samples.append({"name": name, "features": feats, "duration": dur})
+    return samples

@@ -1,0 +1,277 @@
+"""Op-graph extraction: ModelConfig + input shape -> the PM2Lat op list.
+
+PM2Lat aggregates per-kernel predictions assuming sequential execution
+(paper §III).  The framework owns the model definitions, so the op graph is
+enumerated directly from the config: every matmul-family op with its
+(batch, M, N, K), every attention call with its geometry, every memory-bound
+op as a jit-lowerable snippet whose proxy features come from
+``cost_analysis`` (cached by shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as C
+from repro.models import layers as L
+
+
+@dataclasses.dataclass
+class MatmulOp:
+    name: str
+    m: int
+    n: int
+    k: int
+    batch: int = 1
+    count: int = 1
+    dtype: str = "float32"
+    kind: str = "matmul"          # 'matmul' | 'bmm'
+
+    @property
+    def flops(self) -> float:
+        return 2.0 * self.batch * self.m * self.n * self.k * self.count
+
+
+@dataclasses.dataclass
+class AttentionOp:
+    name: str
+    batch: int
+    heads: int
+    kv_heads: int
+    sq: int
+    skv: int
+    hd: int
+    causal: bool = True
+    count: int = 1
+    dtype: str = "float32"
+    kind: str = "attention"
+
+    @property
+    def flops(self) -> float:
+        return 4.0 * self.batch * self.heads * self.sq * self.skv * self.hd * self.count
+
+
+@dataclasses.dataclass
+class MemoryOp:
+    name: str
+    snippet: str                  # key into SNIPPETS
+    shape: Tuple[int, ...]
+    count: int = 1
+    dtype: str = "float32"
+    kind: str = "memory"
+
+    def features(self) -> Dict[str, float]:
+        return _snippet_features(self.snippet, self.shape, self.dtype)
+
+
+Op = object  # union
+
+
+# ----- memory-op snippets (jit-lowerable, no allocation) -----
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+SNIPPETS: Dict[str, Callable] = {
+    "rmsnorm": lambda x: x * jax.lax.rsqrt(jnp.mean(x * x, -1, keepdims=True) + 1e-6),
+    "add": lambda x: x + x,
+    "silu_mul": lambda x: jax.nn.silu(x) * x,
+    "gelu": lambda x: jax.nn.gelu(x),
+    "softmax": lambda x: jax.nn.softmax(x, axis=-1),
+    "rope": lambda x: jnp.concatenate(
+        [x[..., : x.shape[-1] // 2] * 0.5 - x[..., x.shape[-1] // 2:] * 0.5,
+         x[..., x.shape[-1] // 2:] * 0.5 + x[..., : x.shape[-1] // 2] * 0.5], -1),
+    "embed_gather": lambda x: jnp.take(x, jnp.zeros((16,), jnp.int32), axis=0),
+    "conv1d4": lambda x: (x + jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+                          + jnp.pad(x, ((0, 0), (2, 0), (0, 0)))[:, :-2]
+                          + jnp.pad(x, ((0, 0), (3, 0), (0, 0)))[:, :-3]),
+    "assoc_scan": lambda x: jax.lax.associative_scan(
+        lambda a, b: (a[0] * b[0], b[0] * a[1] + b[1]), (x, x), axis=1)[1],
+    "seq_scan": lambda x: jax.lax.scan(
+        lambda c, xt: (jnp.tanh(c * 0.9 + xt), None), x[:, 0], x.swapaxes(0, 1))[0],
+    "gate_sigmoid": lambda x: jax.nn.sigmoid(x) * x,
+}
+
+
+@functools.lru_cache(maxsize=4096)
+def _snippet_features(snippet: str, shape: tuple, dtype: str) -> Dict[str, float]:
+    fn = SNIPPETS[snippet]
+    compiled = jax.jit(fn).lower(_sds(shape, dtype)).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {"bytes": float(ca.get("bytes accessed", 0.0)),
+            "flops": float(ca.get("flops", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0))}
+
+
+# ---------------------------------------------------------------------------
+# enumeration
+# ---------------------------------------------------------------------------
+
+def enumerate_ops(cfg: C.ModelConfig, batch: int, seq: int,
+                  dtype: Optional[str] = None) -> List[Op]:
+    """Forward-pass op list for tokens (batch, seq)."""
+    dt = dtype or "float32"
+    d, hq, hkv, hd, ff = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                          cfg.head_dim, cfg.d_ff)
+    T = batch * seq
+    Vp = L.pad_vocab(cfg.vocab_size)
+    ops: List[Op] = [
+        MemoryOp("embed", "embed_gather", (Vp, d), dtype=dt),
+    ]
+    kinds = cfg.layer_kinds
+    from collections import Counter
+    kind_counts = Counter(kinds)
+
+    def attn_ops(n_layers: int, kind: str, prefix: str):
+        window = cfg.sliding_window if kind == C.LOCAL_ATTN else None
+        skv = seq if window is None else seq  # full-seq masked (flash path)
+        out = [
+            MemoryOp(f"{prefix}.ln", "rmsnorm", (T, d), count=n_layers, dtype=dt),
+            MatmulOp(f"{prefix}.wq", m=T, n=hq * hd, k=d, count=n_layers, dtype=dt),
+            MatmulOp(f"{prefix}.wk", m=T, n=hkv * hd, k=d, count=n_layers, dtype=dt),
+            MatmulOp(f"{prefix}.wv", m=T, n=hkv * hd, k=d, count=n_layers, dtype=dt),
+            MemoryOp(f"{prefix}.rope", "rope", (T, hq, hd), count=n_layers, dtype=dt),
+            AttentionOp(f"{prefix}.attn", batch=batch, heads=hq, kv_heads=hkv,
+                        sq=seq, skv=skv, hd=hd, causal=kind != C.ENC_ATTN,
+                        count=n_layers, dtype=dt),
+            MatmulOp(f"{prefix}.wo", m=T, n=d, k=hq * hd, count=n_layers, dtype=dt),
+            MemoryOp(f"{prefix}.residual", "add", (T, d), count=n_layers, dtype=dt),
+        ]
+        return out
+
+    def ffn_ops(n_layers: int, prefix: str):
+        out = [MemoryOp(f"{prefix}.ln2", "rmsnorm", (T, d), count=n_layers, dtype=dt)]
+        if cfg.moe is not None:
+            m = cfg.moe
+            G = batch
+            Sg = T // G
+            cap = max(int(m.capacity_factor * Sg * m.top_k / m.num_experts),
+                      m.top_k, 4)
+            gated = L.is_gated(cfg.mlp_act)
+            out += [
+                MatmulOp(f"{prefix}.router", m=T, n=m.num_experts, k=d,
+                         count=n_layers, dtype=dt),
+                MemoryOp(f"{prefix}.gate", "softmax", (T, m.num_experts),
+                         count=n_layers, dtype=dt),
+                MatmulOp(f"{prefix}.dispatch", m=m.num_experts * cap, n=d, k=Sg,
+                         batch=G, count=n_layers, dtype=dt, kind="bmm"),
+                MatmulOp(f"{prefix}.expert_in", m=cap, n=m.d_ff_expert, k=d,
+                         batch=G * m.num_experts,
+                         count=n_layers * (2 if gated else 1), dtype=dt, kind="bmm"),
+                MemoryOp(f"{prefix}.expert_act", "silu_mul",
+                         (G * m.num_experts * cap, m.d_ff_expert),
+                         count=n_layers, dtype=dt),
+                MatmulOp(f"{prefix}.expert_out", m=cap, n=d, k=m.d_ff_expert,
+                         batch=G * m.num_experts, count=n_layers, dtype=dt,
+                         kind="bmm"),
+                MatmulOp(f"{prefix}.combine", m=Sg, n=d, k=m.num_experts * cap,
+                         batch=G, count=n_layers, dtype=dt, kind="bmm"),
+            ]
+            for i in range(m.num_shared_experts):
+                out += _mlp_ops(f"{prefix}.shared{i}", n_layers, m.d_ff_expert)
+        elif ff > 0:
+            out += _mlp_ops(prefix, n_layers, ff)
+        return out
+
+    def _mlp_ops(prefix: str, n_layers: int, dff: int):
+        gated = L.is_gated(cfg.mlp_act)
+        o = [MatmulOp(f"{prefix}.w_in", m=T, n=dff, k=d,
+                      count=n_layers * (2 if gated else 1), dtype=dt),
+             MemoryOp(f"{prefix}.act", "silu_mul" if gated else "gelu",
+                      (T, dff), count=n_layers, dtype=dt),
+             MatmulOp(f"{prefix}.w_out", m=T, n=d, k=dff, count=n_layers, dtype=dt),
+             MemoryOp(f"{prefix}.residual", "add", (T, d), count=n_layers, dtype=dt)]
+        return o
+
+    # --- main stack ---
+    for kind, n in sorted(kind_counts.items()):
+        if kind in (C.ATTN, C.LOCAL_ATTN):
+            ops += attn_ops(n, kind, kind)
+            ops += ffn_ops(n, kind)
+        elif kind == C.CROSS_ATTN:
+            ops += attn_ops(n, C.ATTN, "self")
+            Lx = cfg.cross_attn_context_len or (
+                cfg.encoder.n_frames if cfg.encoder else 0)
+            Tx = batch * Lx
+            ops += [
+                MatmulOp("cross.wq", m=T, n=hq * hd, k=d, count=n, dtype=dt),
+                MatmulOp("cross.wk", m=Tx, n=hkv * hd, k=d, count=n, dtype=dt),
+                MatmulOp("cross.wv", m=Tx, n=hkv * hd, k=d, count=n, dtype=dt),
+                AttentionOp("cross.attn", batch=batch, heads=hq, kv_heads=hkv,
+                            sq=seq, skv=Lx, hd=hd, causal=False, count=n, dtype=dt),
+                MatmulOp("cross.wo", m=T, n=d, k=hq * hd, count=n, dtype=dt),
+            ]
+            ops += ffn_ops(n, "decoder")
+        elif kind == C.RGLRU:
+            dl = cfg.lru_dim or d
+            ops += [
+                MemoryOp("rglru.ln", "rmsnorm", (T, d), count=n, dtype=dt),
+                MatmulOp("rglru.wx", m=T, n=dl, k=d, count=2 * n, dtype=dt),
+                MemoryOp("rglru.conv", "conv1d4", (batch, seq, dl), count=n, dtype=dt),
+                MatmulOp("rglru.gates", m=T, n=dl, k=dl, count=2 * n, dtype=dt),
+                MemoryOp("rglru.scan", "assoc_scan", (batch, seq, dl), count=n, dtype=dt),
+                MemoryOp("rglru.gate_mul", "silu_mul", (T, dl), count=n, dtype=dt),
+                MatmulOp("rglru.w_out", m=T, n=d, k=dl, count=n, dtype=dt),
+            ]
+            ops += ffn_ops(n, "rglru")
+        elif kind == C.MLSTM:
+            di = 2 * d
+            hdm = di // hq
+            chunk = min(128, seq)
+            nC = max(seq // chunk, 1)
+            ops += [
+                MemoryOp("mlstm.ln", "rmsnorm", (T, d), count=n, dtype=dt),
+                MatmulOp("mlstm.up", m=T, n=2 * di, k=d, count=n, dtype=dt),
+                MemoryOp("mlstm.conv", "conv1d4", (batch, seq, di), count=n, dtype=dt),
+                MatmulOp("mlstm.qkv", m=T, n=di, k=di, count=3 * n, dtype=dt),
+                AttentionOp("mlstm.intra", batch=batch * nC, heads=hq,
+                            kv_heads=hq, sq=chunk, skv=chunk, hd=hdm,
+                            causal=True, count=n, dtype=dt),
+                MatmulOp("mlstm.state", m=hdm, n=hdm, k=chunk,
+                         batch=batch * nC * hq, count=2 * n, dtype=dt, kind="bmm"),
+                MemoryOp("mlstm.gate", "silu_mul", (T, di), count=n, dtype=dt),
+                MatmulOp("mlstm.down", m=T, n=d, k=di, count=n, dtype=dt),
+            ]
+        elif kind == C.SLSTM:
+            ops += [
+                MemoryOp("slstm.ln", "rmsnorm", (T, d), count=n, dtype=dt),
+                MatmulOp("slstm.wx", m=T, n=4 * d, k=d, count=n, dtype=dt),
+                MatmulOp("slstm.rh", m=batch, n=4 * d, k=d, batch=1,
+                         count=n * seq, dtype=dt),
+                MemoryOp("slstm.scan", "seq_scan", (batch, seq, 4 * d),
+                         count=n, dtype=dt),
+            ]
+            from repro.models.recurrent import slstm_ff
+            ops += _mlp_ops("slstm.ff", n, slstm_ff(cfg))
+        elif kind == C.ENC_ATTN:
+            ops += attn_ops(n, C.ENC_ATTN, "enc")
+            ops += ffn_ops(n, "enc")
+
+    if cfg.encoder is not None:
+        Tx = batch * cfg.encoder.n_frames
+        n = cfg.encoder.n_layers
+        ops += [
+            MemoryOp("enc.ln", "rmsnorm", (Tx, d), count=2 * n, dtype=dt),
+            MatmulOp("enc.qkvo", m=Tx, n=d, k=d, count=4 * n, dtype=dt),
+            AttentionOp("enc.attn", batch=batch, heads=hq, kv_heads=hq,
+                        sq=cfg.encoder.n_frames, skv=cfg.encoder.n_frames,
+                        hd=hd, causal=False, count=n, dtype=dt),
+        ]
+        ops += _mlp_ops("enc.ff", n, ff)
+
+    ops += [
+        MemoryOp("final_norm", "rmsnorm", (T, d), dtype=dt),
+        MatmulOp("unembed", m=T, n=Vp, k=d, dtype=dt),
+    ]
+    return ops
+
+
+def total_flops(ops: List[Op]) -> float:
+    return sum(getattr(o, "flops", 0.0) for o in ops)

@@ -1,0 +1,79 @@
+"""Pipeline partition planning from predicted per-block latencies
+(paper application §IV-D1, generalized).
+
+Two-device case: single split point minimizing the max stage time (the
+paper's heuristic).  N-device case: contiguous min-max partition via binary
+search over the bottleneck + greedy feasibility — the planner behind
+launch/plan.py's pipeline-stage balancer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class PartitionPlan:
+    boundaries: List[int]        # stage i = blocks [boundaries[i], boundaries[i+1])
+    stage_times: List[float]
+    bottleneck: float
+
+    @property
+    def split_point(self) -> int:  # two-device convenience
+        return self.boundaries[1]
+
+
+def plan_two_devices(lat_a: Sequence[float], lat_b: Sequence[float],
+                     comm_cost: float = 0.0) -> PartitionPlan:
+    """Device A runs blocks [0, s), device B runs [s, L). lat_a/lat_b are
+    per-block latencies of the SAME blocks measured/predicted per device."""
+    L = len(lat_a)
+    assert len(lat_b) == L
+    pre = [0.0]
+    for t in lat_a:
+        pre.append(pre[-1] + t)
+    suf = [0.0]
+    for t in reversed(lat_b):
+        suf.append(suf[-1] + t)
+    suf = suf[::-1]
+    best_s, best = 0, float("inf")
+    for s in range(L + 1):
+        bottleneck = max(pre[s], suf[s] + (comm_cost if 0 < s < L else 0.0))
+        if bottleneck < best:
+            best, best_s = bottleneck, s
+    return PartitionPlan(boundaries=[0, best_s, L],
+                         stage_times=[pre[best_s], suf[best_s]],
+                         bottleneck=best)
+
+
+def plan_stages(latencies: Sequence[float], n_stages: int) -> PartitionPlan:
+    """Homogeneous devices: contiguous min-max partition (binary search +
+    greedy packing)."""
+    lats = list(latencies)
+    lo, hi = max(lats), sum(lats)
+
+    def feasible(cap: float):
+        stages, cur, used = [0], 0.0, 1
+        for i, t in enumerate(lats):
+            if cur + t > cap and cur > 0:
+                used += 1
+                stages.append(i)
+                cur = 0.0
+                if used > n_stages:
+                    return None
+            cur += t
+        stages.append(len(lats))
+        while len(stages) < n_stages + 1:
+            stages.insert(-1, stages[-1])
+        return stages
+
+    for _ in range(50):
+        mid = (lo + hi) / 2
+        if feasible(mid) is not None:
+            hi = mid
+        else:
+            lo = mid
+    stages = feasible(hi)
+    times = [sum(lats[a:b]) for a, b in zip(stages, stages[1:])]
+    return PartitionPlan(boundaries=stages, stage_times=times,
+                         bottleneck=max(times))

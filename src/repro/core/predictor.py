@@ -1,0 +1,146 @@
+"""PM2Lat predictor: kernel-differentiated throughput interpolation for
+compute ops + linear proxy-metric regression for memory-bound ops, aggregated
+sequentially over the op graph (paper §III-C).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs import base as C
+from repro.core import opgraph as og
+from repro.core.memory_model import MemoryModel
+from repro.core.table import KernelKey, TableStore, ThroughputTable
+
+
+@dataclasses.dataclass
+class PredictionRow:
+    name: str
+    kind: str
+    seconds: float
+    kernel: str
+
+
+class PM2Lat:
+    def __init__(self, store: TableStore, device: str):
+        self.store = store
+        self.device = device
+        mm = store.memory_model
+        self.memory_model = MemoryModel.from_json(mm) if isinstance(mm, dict) else mm
+
+    # ----- per-op -----
+    def _table(self, op_family: str, kernel: str, dtype: str) -> ThroughputTable:
+        t = self.store.get(KernelKey(op_family, kernel, dtype, self.device))
+        if t is None:
+            # dtype fallback (e.g. bf16 profiled only for matmul)
+            for cand in self.store.tables.values():
+                if cand.key.op == op_family and cand.key.kernel == kernel:
+                    return cand
+            raise KeyError((op_family, kernel, dtype, self.device))
+        return t
+
+    def _nearest_grid_table(self, op_family: str, dtype: str, m: int,
+                            n: int) -> ThroughputTable:
+        """Kernel selection across profiled reference grids: nearest in
+        (log-area, log-aspect) — the predictor-side half of the config
+        oracle (select the kernel the library would run, then use ITS
+        table)."""
+        import math
+        best, score = None, None
+        for t in self.store.tables.values():
+            if t.key.op != op_family or not t.key.kernel.startswith("xla_default"):
+                continue
+            if t.key.dtype != dtype or t.key.device != self.device:
+                continue
+            m0, n0 = t.ref_grid
+            sc = (abs(math.log(m * n / (m0 * n0))) +
+                  0.5 * abs(math.log((m / n) / (m0 / n0))))
+            if score is None or sc < score:
+                best, score = t, sc
+        if best is None:
+            return self._table(op_family, "xla_default", dtype)
+        return best
+
+    def predict_matmul(self, op: og.MatmulOp, kernel: str = None) -> float:
+        if kernel is not None:
+            t = self._table(op.kind, kernel, op.dtype)
+        elif op.kind == "matmul":
+            t = self._nearest_grid_table("matmul", op.dtype, op.m, op.n)
+        else:
+            t = self._table(op.kind, "xla_default", op.dtype)
+        return t.predict(op.m, op.n, op.k, batch=op.batch) * op.count
+
+    def predict_attention(self, op: og.AttentionOp,
+                          kernel: str = "fa_jnp") -> float:
+        t = self._table("attention", kernel, op.dtype)
+        thr = t.interpolate_throughput(op.skv)
+        return op.flops / thr
+
+    def predict_memory(self, op: og.MemoryOp) -> float:
+        from repro.core.memory_model import class_of
+        return self.memory_model.predict(op.features(),
+                                         class_of(op.snippet)) * op.count
+
+    def predict_op(self, op) -> PredictionRow:
+        if op.kind in ("matmul", "bmm"):
+            return PredictionRow(op.name, op.kind, self.predict_matmul(op),
+                                 "xla_default")
+        if op.kind == "attention":
+            return PredictionRow(op.name, op.kind, self.predict_attention(op),
+                                 "fa_jnp")
+        return PredictionRow(op.name, "memory", self.predict_memory(op), "linreg")
+
+    # ----- model level -----
+    def predict_ops(self, ops: List) -> Tuple[float, List[PredictionRow]]:
+        rows = [self.predict_op(op) for op in ops]
+        return sum(r.seconds for r in rows), rows
+
+    def predict_model(self, cfg: C.ModelConfig, batch: int, seq: int,
+                      dtype: Optional[str] = None):
+        ops = og.enumerate_ops(cfg, batch, seq, dtype=dtype)
+        return self.predict_ops(ops)
+
+    def predict_blocks(self, cfg: C.ModelConfig, batch: int, seq: int,
+                       dtype: Optional[str] = None) -> List[float]:
+        """Per-transformer-block latency (for the partition planner)."""
+        per_layer = []
+        for li, kind in enumerate(cfg.layer_kinds):
+            one = dataclasses.replace(cfg, n_layers=len(cfg.block_pattern),
+                                      block_pattern=(kind,))
+            ops = og.enumerate_ops(
+                dataclasses.replace(one, n_layers=1), batch, seq, dtype=dtype)
+            # strip embed/unembed/final-norm (not per-block)
+            ops = [o for o in ops
+                   if o.name not in ("embed", "unembed", "final_norm")]
+            total, _ = self.predict_ops(ops)
+            per_layer.append(total)
+        return per_layer
+
+
+# ---------------------------------------------------------------------------
+# Fast vectorized matmul predictor (NAS preprocessing, paper §IV-D2)
+# ---------------------------------------------------------------------------
+
+class VectorizedMatmulPredictor:
+    """numpy-vectorized Eq(1)/Eq(2) over anchor tables: microseconds per
+    prediction across millions of (M, N, K) configs."""
+
+    def __init__(self, table: ThroughputTable):
+        self.ks = np.array(sorted(table.anchors), dtype=np.float64)
+        self.thr = np.array([table.anchors[int(k)] for k in self.ks])
+        self.org_dur = table.org_dur
+        self.k_max = table.k_max
+        self.org_thr = table.anchors[table.k_max]
+        m0, n0 = table.ref_grid
+        self.ref_area = float(m0 * n0)
+
+    def predict(self, m, n, k, batch=1):
+        """All args broadcastable numpy arrays. Returns seconds array."""
+        m = np.asarray(m, np.float64)
+        n = np.asarray(n, np.float64)
+        k = np.asarray(k, np.float64)
+        thr = np.interp(k, self.ks, self.thr)          # Eq (2), vectorized
+        dur_ref = self.org_dur * (k / self.k_max) * (self.org_thr / thr)  # Eq (1)
+        return dur_ref * (m * n * np.asarray(batch, np.float64) / self.ref_area)

@@ -1,0 +1,64 @@
+"""Measurement protocol (paper §III-C): warm-up, repeated timed runs with a
+minimum total-time budget, robust (median-of-groups) aggregation.
+
+The paper uses >=25 reps / >=500 ms per kernel via CUPTI on a dedicated GPU.
+This host is a 1-core VM with ~30% CV on millisecond-scale ops right after
+warm-up, so we (a) warm up until timings stabilize, (b) batch calls into
+groups of >=2 ms and (c) report the MEDIAN of group means — robust to the
+scheduler-interference outliers a shared VM suffers.  Set
+``PM2LAT_PAPER_BUDGET=1`` for the paper's full budget.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+PAPER = bool(int(os.environ.get("PM2LAT_PAPER_BUDGET", "0")))
+MIN_REPS = 25 if PAPER else 9
+MIN_TOTAL_S = 0.5 if PAPER else 0.06
+GROUP_TARGET_S = 0.002
+MAX_TOTAL_S = 2.0 if PAPER else 0.6
+
+
+def _call(fn, args):
+    out = fn(*args)
+    jax.block_until_ready(out)
+
+
+def measure(fn: Callable, *args, min_reps: int = None,
+            min_total_s: float = None) -> float:
+    """Robust seconds-per-call estimate for jitted ``fn(*args)``."""
+    min_reps = min_reps or MIN_REPS
+    min_total_s = min_total_s or MIN_TOTAL_S
+    # warm-up: compile + frequency ramp (two timed singles, keep warming
+    # while the second is much faster than the first)
+    _call(fn, args)
+    t0 = time.perf_counter()
+    _call(fn, args)
+    t1 = time.perf_counter() - t0
+    for _ in range(3):
+        t0 = time.perf_counter()
+        _call(fn, args)
+        t2 = time.perf_counter() - t0
+        if t2 > 0.75 * t1:
+            t1 = min(t1, t2)
+            break
+        t1 = t2
+    group = max(1, int(GROUP_TARGET_S / max(t1, 1e-9)))
+    means = []
+    reps = 0
+    start = time.perf_counter()
+    while True:
+        g0 = time.perf_counter()
+        for _ in range(group):
+            _call(fn, args)
+        means.append((time.perf_counter() - g0) / group)
+        reps += group
+        elapsed = time.perf_counter() - start
+        if (reps >= min_reps and elapsed >= min_total_s) or elapsed > MAX_TOTAL_S:
+            break
+    return float(np.median(means))

@@ -1,0 +1,63 @@
+"""Deterministic synthetic token pipeline.
+
+Produces reproducible, host-shardable LM batches: a mixture of (a) Zipf-ish
+unigram tokens and (b) short copy patterns so a small model's loss visibly
+decreases within a few hundred steps (used by examples/train_lm.py).
+
+The pipeline is step-indexed (stateless): ``batch_at(step)`` is a pure
+function of (seed, step), so checkpoint-restart resumes mid-stream with no
+stored iterator state, and every data-parallel host can slice its own shard
+deterministically — the property a 1000-node deployment needs from a data
+layer (no coordination, no replay log).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    pattern_len: int = 8          # copy-motif length
+    zipf_a: float = 1.2
+
+
+class SyntheticLM:
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        # fixed bank of motifs the stream repeats (learnable structure)
+        self.motifs = rng.integers(
+            0, cfg.vocab_size, size=(64, cfg.pattern_len)).astype(np.int32)
+        ranks = np.arange(1, cfg.vocab_size + 1, dtype=np.float64)
+        p = 1.0 / ranks ** cfg.zipf_a
+        self.unigram = (p / p.sum()).astype(np.float64)
+
+    def batch_at(self, step: int, *, host_id: int = 0, num_hosts: int = 1):
+        """Returns {"tokens","labels"} with local batch B/num_hosts."""
+        cfg = self.cfg
+        assert cfg.global_batch % num_hosts == 0
+        B = cfg.global_batch // num_hosts
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, step, host_id]))
+        S = cfg.seq_len + 1
+        noise = rng.choice(cfg.vocab_size, size=(B, S), p=self.unigram)
+        seq = noise.astype(np.int32)
+        # overwrite random spans with repeated motifs
+        n_spans = max(1, S // (4 * cfg.pattern_len))
+        for b in range(B):
+            for _ in range(n_spans):
+                m = self.motifs[rng.integers(0, len(self.motifs))]
+                reps = 1 + int(rng.integers(0, 3))
+                start = int(rng.integers(0, max(S - reps * cfg.pattern_len, 1)))
+                span = np.tile(m, reps)[: S - start]
+                seq[b, start:start + len(span)] = span
+        return {"tokens": jnp.asarray(seq[:, :-1]),
+                "labels": jnp.asarray(seq[:, 1:])}

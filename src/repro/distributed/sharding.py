@@ -1,0 +1,259 @@
+"""Mesh context + logical sharding constraints + parameter partition specs.
+
+Conventions
+-----------
+Mesh axes: single-pod ``('data','model')``; multi-pod ``('pod','data','model')``.
+``'pod'`` and ``'data'`` are data-parallel/FSDP axes; ``'model'`` is the
+tensor/expert-parallel axis.
+
+Model code never names mesh axes directly.  It calls ``constrain(x, 'dp',
+None, 'tp')`` with *logical* entries:
+
+  - ``'dp'``  -> all data-parallel axes present in the mesh (tuple)
+  - ``'tp'``  -> the 'model' axis
+  - ``None``  -> unsharded
+  - a raw mesh-axis name or tuple of names is passed through verbatim
+
+Outside a ``mesh_context`` every constraint is a no-op, so the exact same
+model code runs single-device (tests/benchmarks) and distributed (dry-run,
+launcher).
+
+``act_mode`` selects the activation-sharding scheme at block boundaries:
+``'tp'`` keeps hidden states replicated over 'model' (Megatron-TP), ``'sp'``
+shards the sequence dim over 'model' (Megatron sequence parallelism).  This is
+a first-class hillclimbing knob (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+DP_AXIS_NAMES = ("pod", "data")
+TP_AXIS_NAME = "model"
+
+
+class _Ctx:
+    def __init__(self, mesh: Mesh, act_mode: str, remat: bool):
+        self.mesh = mesh
+        self.act_mode = act_mode
+        self.remat = remat
+        self.dp_axes = tuple(a for a in DP_AXIS_NAMES if a in mesh.axis_names)
+        self.tp_axis = TP_AXIS_NAME if TP_AXIS_NAME in mesh.axis_names else None
+
+
+def _current() -> Optional[_Ctx]:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Optional[Mesh], *, act_mode: str = "tp", remat: bool = True):
+    assert act_mode in ("tp", "sp"), act_mode
+    prev = _current()
+    _STATE.ctx = _Ctx(mesh, act_mode, remat) if mesh is not None else None
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _STATE.ctx = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    ctx = _current()
+    return ctx.mesh if ctx else None
+
+
+def act_mode() -> str:
+    ctx = _current()
+    return ctx.act_mode if ctx else "tp"
+
+
+def remat_enabled() -> bool:
+    ctx = _current()
+    return ctx.remat if ctx else False
+
+
+def dp_size() -> int:
+    ctx = _current()
+    if not ctx:
+        return 1
+    n = 1
+    for a in ctx.dp_axes:
+        n *= ctx.mesh.shape[a]
+    return n
+
+
+def tp_size() -> int:
+    ctx = _current()
+    if not ctx or not ctx.tp_axis:
+        return 1
+    return ctx.mesh.shape[ctx.tp_axis]
+
+
+def resolve(entry):
+    """Logical entry -> mesh axis name(s) or None."""
+    ctx = _current()
+    if ctx is None or entry is None:
+        return None
+    if entry == "dp":
+        return ctx.dp_axes if ctx.dp_axes else None
+    if entry == "tp":
+        return ctx.tp_axis
+    return entry  # raw axis name / tuple
+
+
+def spec(*entries) -> P:
+    return P(*[resolve(e) for e in entries])
+
+
+def _divisible(dim: int, axes) -> bool:
+    ctx = _current()
+    if axes is None or ctx is None:
+        return True
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= ctx.mesh.shape[a]
+    return n > 0 and dim % n == 0
+
+
+def constrain(x: jax.Array, *entries):
+    """with_sharding_constraint with logical entries; no-op without a mesh.
+
+    Entries whose mesh extent does not divide the dim are dropped (replicated)
+    so callers never have to special-case small batches (e.g. long_500k B=1).
+    """
+    ctx = _current()
+    if ctx is None:
+        return x
+    assert len(entries) == x.ndim, (entries, x.shape)
+    resolved = []
+    for dim, e in zip(x.shape, entries):
+        axes = resolve(e)
+        resolved.append(axes if _divisible(dim, axes) else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*resolved)))
+
+
+def constrain_hidden(x: jax.Array):
+    """Block-boundary activation constraint: (batch, seq, d_model)."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    if ctx.act_mode == "sp" and x.ndim >= 3:
+        return constrain(x, "dp", "tp", *([None] * (x.ndim - 2)))
+    return constrain(x, "dp", *([None] * (x.ndim - 1)))
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition specs (path-pattern rules)
+# ---------------------------------------------------------------------------
+# Paths are '/'-joined key paths produced by jax.tree_util.  Scanned
+# parameters carry a leading n_periods dim handled by the '~stack~' marker.
+
+_RULES: Sequence[tuple[str, tuple]] = (
+    # embeddings / unembed: (padded_vocab, d_model)
+    (r"(^|/)(embed|unembed)/w$",        ("tp", "dp")),
+    # attention projections
+    (r"/wq/w$",                         ("dp", "tp")),
+    (r"/wk/w$",                         ("dp", "tp")),
+    (r"/wv/w$",                         ("dp", "tp")),
+    (r"/wo/w$",                         ("tp", "dp")),
+    (r"/w[qkv]/b$",                     ("tp",)),
+    # dense mlp
+    (r"/(w_in|w_gate)/w$",              ("dp", "tp")),
+    (r"/w_out/w$",                      ("tp", "dp")),
+    # moe
+    (r"/router/w$",                     ("dp", None)),
+    (r"/experts/(w_in|w_gate)$",        ("tp", "dp", None)),
+    (r"/experts/w_out$",                ("tp", None, "dp")),
+    (r"/shared\d*/(w_in|w_gate)/w$",    ("dp", "tp")),
+    (r"/shared\d*/w_out/w$",            ("tp", "dp")),
+    # rg-lru block
+    (r"/(conv)/w$",                     (None, "tp")),
+    (r"/(wx|wg)/w$",                    ("dp", "tp")),
+    (r"/(w_lru_out)/w$",                ("tp", "dp")),
+    (r"/lru/(a_param|w_r|w_i)(/w)?$",   None),  # small; handled below
+    # xlstm
+    (r"/(w_up|w_qkv|w_if)/w$",          ("dp", "tp")),
+    (r"/(w_down)/w$",                   ("tp", "dp")),
+    (r"/slstm/(wx|rh)/w$",              ("dp", "tp")),
+    # norms / scalars / biases default: replicated
+)
+
+
+def _rule_for(path: str):
+    for pat, sp_ in _RULES:
+        if re.search(pat, path):
+            return sp_
+    return None
+
+
+def param_spec_for(path: str, shape: tuple, stacked: bool) -> P:
+    """PartitionSpec for one parameter leaf."""
+    ctx = _current()
+    entries = _rule_for(path)
+    ndim = len(shape)
+    lead = 1 if stacked else 0
+    out = [None] * ndim
+    if entries is not None:
+        body_shape = shape[lead:]
+        ents = list(entries)[: len(body_shape)]
+        for i, (dim, e) in enumerate(zip(body_shape, ents)):
+            axes = resolve(e)
+            if axes is not None and _divisible(dim, axes):
+                out[lead + i] = axes
+    else:
+        # fallback: shard the largest divisible dim over dp (pure FSDP) for
+        # anything big (>= 1M elements) so no parameter is fully replicated.
+        size = 1
+        for d in shape:
+            size *= d
+        if ctx is not None and size >= 1 << 20:
+            dims = sorted(range(lead, ndim), key=lambda i: -shape[i])
+            for i in dims:
+                if _divisible(shape[i], resolve("dp")):
+                    out[i] = resolve("dp")
+                    break
+    return P(*out)
+
+
+def params_partition_specs(params, stacked_paths=()):
+    """Pytree of PartitionSpec mirroring ``params``.
+
+    ``stacked_paths``: iterable of path-prefixes whose leaves carry a leading
+    scan (n_periods) dimension.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    specs = []
+    for kp, leaf in flat:
+        path = "/".join(_key_str(k) for k in kp)
+        stacked = any(path.startswith(p) or ("/" + p) in path for p in stacked_paths)
+        specs.append(param_spec_for(path, leaf.shape, stacked))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named_shardings(tree_of_specs, mesh: Optional[Mesh] = None):
+    mesh = mesh or current_mesh()
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_of_specs,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)

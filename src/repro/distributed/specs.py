@@ -1,0 +1,123 @@
+"""Partition-spec trees for every train/serve state object.
+
+All rules live here + sharding.py so the launcher, checkpointing, and the
+fault-tolerance re-mesh logic agree on one source of truth.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as sh
+from repro.training import optimizer as opt
+
+STACKED_PREFIXES = ("blocks", "encoder/blocks")
+
+
+def params_specs(abstract_params, *, serve: bool = False):
+    """Parameter partition specs.
+
+    ``serve=True``: drop the data-parallel (FSDP) axes — weights replicated
+    over dp, sharded over 'model' only.  Decode steps otherwise all-gather
+    every FSDP shard once per token, which made every decode cell
+    collective-bound in the baseline sweep (EXPERIMENTS.md §Perf B).
+    Serving weights are expected in bf16 (see launch/dryrun.py serve_opt).
+    """
+    specs = sh.params_partition_specs(abstract_params,
+                                      stacked_paths=STACKED_PREFIXES)
+    if not serve:
+        return specs
+    dp_axes = set(sh.DP_AXIS_NAMES)
+
+    def strip(spec):
+        ents = []
+        for e in spec:
+            if e is None:
+                ents.append(None)
+            elif isinstance(e, (tuple, list)):
+                kept = tuple(a for a in e if a not in dp_axes)
+                ents.append(kept if kept else None)
+            else:
+                ents.append(None if e in dp_axes else e)
+        return P(*ents)
+
+    return jax.tree_util.tree_map(strip, specs,
+                                  is_leaf=lambda s: isinstance(s, P))
+
+
+def opt_specs(abstract_opt: opt.OptState, p_specs):
+    return opt.OptState(step=P(), m=p_specs, v=p_specs)
+
+
+def batch_specs(batch_abstract):
+    def spec_for(path, leaf):
+        ndim = len(leaf.shape)
+        ents = ["dp"] + [None] * (ndim - 1)
+        resolved = [sh.resolve(e) for e in ents]
+        if leaf.shape[0] % max(sh.dp_size(), 1):
+            resolved[0] = None
+        return P(*resolved)
+    flat = jax.tree_util.tree_flatten_with_path(batch_abstract)[0]
+    treedef = jax.tree_util.tree_structure(batch_abstract)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(kp, leaf) for kp, leaf in flat])
+
+
+def _cache_leaf_spec(path: str, shape, cfg) -> P:
+    """Decode-cache leaf sharding.
+
+    kv caches (B, W, Hkv, hd) [+ leading stack dim under layers/scan]:
+      batch -> dp; heads -> tp when divisible, else cache seq -> tp
+      (flash-decoding-style sequence sharding; XLA inserts the cross-shard
+      softmax reduction).
+    recurrent states: wide state dim -> tp.
+    """
+    stacked = "/scan/" in path or path.endswith("/scan")
+    lead = 1 if stacked else 0
+    nd = len(shape)
+    out = [None] * nd
+    name = path.rsplit("/", 1)[-1]
+    dp_ax, tp_ax = sh.resolve("dp"), sh.resolve("tp")
+
+    def try_set(i, ax):
+        if ax is not None and shape[i] % _axsize(ax) == 0 and out[i] is None:
+            out[i] = ax
+            return True
+        return False
+
+    if name in ("k", "v") and nd - lead == 4:
+        try_set(lead + 0, dp_ax)                 # batch
+        if not try_set(lead + 2, tp_ax):         # kv heads
+            try_set(lead + 1, tp_ax)             # else: cache sequence
+    elif name in ("h", "c", "n", "m", "C", "conv"):
+        try_set(lead + 0, dp_ax)
+        # last dim is the wide one (dl / di / hd)
+        try_set(nd - 1, tp_ax)
+    elif name == "pos":
+        pass
+    else:
+        try_set(lead + 0, dp_ax)
+    return P(*out)
+
+
+def _axsize(ax) -> int:
+    mesh = sh.current_mesh()
+    if mesh is None:
+        return 1
+    if isinstance(ax, str):
+        return mesh.shape[ax]
+    n = 1
+    for a in ax:
+        n *= mesh.shape[a]
+    return n
+
+
+def cache_specs(cache_abstract, cfg):
+    flat = jax.tree_util.tree_flatten_with_path(cache_abstract)[0]
+    treedef = jax.tree_util.tree_structure(cache_abstract)
+    specs = []
+    for kp, leaf in flat:
+        path = "/".join(sh._key_str(k) for k in kp)
+        specs.append(_cache_leaf_spec(path, leaf.shape, cfg))
+    return jax.tree_util.tree_unflatten(treedef, specs)

@@ -1,0 +1,46 @@
+"""Elastic re-mesh: rebuild the mesh from surviving devices and re-shard state.
+
+At 1000+ nodes, losing a host means either waiting for a hot spare or
+shrinking the data-parallel extent.  ``plan_elastic_mesh`` picks the largest
+(data, model) grid that (a) fits the healthy-device count, (b) keeps the
+'model' extent unchanged (TP degree is baked into weight shards), and (c)
+keeps global batch divisible.  ``reshard`` moves live arrays onto the new
+mesh with device_put — no checkpoint round-trip needed when the params are
+still addressable.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed import sharding as sh
+from repro.distributed import specs as sp
+
+
+def plan_elastic_mesh(n_healthy: int, *, model_degree: int,
+                      global_batch: int) -> Optional[tuple]:
+    """Returns (data_degree, model_degree) or None if no valid grid exists."""
+    if n_healthy < model_degree:
+        return None
+    data = n_healthy // model_degree
+    while data >= 1:
+        if global_batch % data == 0:
+            return (data, model_degree)
+        data -= 1
+    return None
+
+
+def make_elastic_mesh(devices, data: int, model: int) -> Mesh:
+    import numpy as np
+    grid = np.asarray(devices[: data * model]).reshape(data, model)
+    return Mesh(grid, ("data", "model"))
+
+
+def reshard(tree, specs, new_mesh: Mesh):
+    """device_put every leaf to its spec on the new mesh."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(new_mesh, s)),
+        tree, specs,
+        is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, (list, dict)))

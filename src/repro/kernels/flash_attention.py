@@ -1,0 +1,116 @@
+"""Flash-attention Pallas kernel (online softmax, causal/window masks, GQA).
+
+TPU adaptation of the paper's F-Attn/C-Attn targets: tiles sized for VMEM,
+MXU-aligned (bq, bk) blocks, f32 accumulators in scratch, additive masks
+computed from block indices (never materialized at (Sq,Skv)).
+
+Like the matmul kernel, the (bq, bk) block configuration is a PM2Lat kernel
+identity: core/calibrate.py profiles each config as its own kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class FlashConfig:
+    bq: int
+    bk: int
+
+    @property
+    def name(self) -> str:
+        return f"fa_{self.bq}x{self.bk}"
+
+
+CONFIGS: Tuple[FlashConfig, ...] = (
+    FlashConfig(128, 128),
+    FlashConfig(128, 256),
+    FlashConfig(256, 256),
+    FlashConfig(256, 512),
+    FlashConfig(512, 512),
+)
+
+
+def select_config(Sq: int, Skv: int, hd: int) -> FlashConfig:
+    for c in sorted(CONFIGS, key=lambda c: -(c.bq * c.bk)):
+        if Sq % c.bq == 0 and Skv % c.bk == 0:
+            return c
+    return CONFIGS[0]
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               n_kv: int, bq: int, bk: int, causal: bool, window,
+               scale: float, q_offset: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, hd)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+    if causal:
+        i = pl.program_id(1)
+        qp = q_offset + i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kp = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = qp >= kp
+        if window is not None:
+            mask &= (qp - kp) < window
+        s = s + jnp.where(mask, 0.0, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = (acc_ref[...] * corr
+                    + jnp.dot(p, v_ref[0].astype(jnp.float32),
+                              preferred_element_type=jnp.float32))
+
+    @pl.when(j == n_kv - 1)
+    def _():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, config: FlashConfig, *, causal=True,
+                           window=None, q_offset: int = 0,
+                           interpret: bool = False):
+    """q (BH, Sq, hd), k/v (BH, Skv, hd) -> (BH, Sq, hd)."""
+    BH, Sq, hd = q.shape
+    Skv = k.shape[1]
+    assert Sq % config.bq == 0 and Skv % config.bk == 0, ((Sq, Skv), config)
+    n_kv = Skv // config.bk
+    grid = (BH, Sq // config.bq, n_kv)
+    from jax.experimental.pallas import tpu as pltpu
+    kern = functools.partial(
+        _fa_kernel, n_kv=n_kv, bq=config.bq, bk=config.bk, causal=causal,
+        window=window, scale=1.0 / float(hd) ** 0.5, q_offset=q_offset)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, config.bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, config.bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, config.bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, config.bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((config.bq, hd), jnp.float32),
+            pltpu.VMEM((config.bq, 1), jnp.float32),
+            pltpu.VMEM((config.bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

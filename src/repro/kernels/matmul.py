@@ -1,0 +1,119 @@
+"""Tiled MXU matmul Pallas kernel with explicit BlockSpec VMEM tiling.
+
+The (bm, bk, bn) block configuration IS the kernel identity in the PM2Lat
+sense: the same GEMM runs as genuinely different kernels with different
+VMEM working sets, grid shapes and ragged-tail behavior — the TPU analogue
+of cuBLAS algo/tile selection.  ``CONFIGS`` is the public kernel family;
+``select_config`` is our ``cublasLtMatmulAlgoGetHeuristic`` equivalent
+(deterministic, queried by both the executor and the latency predictor).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class MatmulConfig:
+    bm: int
+    bk: int
+    bn: int
+
+    @property
+    def name(self) -> str:
+        return f"mm_{self.bm}x{self.bk}x{self.bn}"
+
+    def vmem_bytes(self, in_dtype=jnp.bfloat16) -> int:
+        e = jnp.dtype(in_dtype).itemsize
+        return self.bm * self.bk * e + self.bk * self.bn * e + self.bm * self.bn * 4
+
+
+# The kernel family (all MXU-aligned: multiples of 8x128 lanes).
+CONFIGS: Tuple[MatmulConfig, ...] = (
+    MatmulConfig(128, 128, 128),
+    MatmulConfig(128, 256, 128),
+    MatmulConfig(128, 512, 128),
+    MatmulConfig(256, 128, 256),
+    MatmulConfig(256, 256, 256),
+    MatmulConfig(256, 512, 256),
+    MatmulConfig(512, 256, 128),
+    MatmulConfig(512, 512, 512),
+    MatmulConfig(8, 128, 128),      # skinny-M (decode-style GEMV-ish)
+    MatmulConfig(8, 512, 256),
+)
+
+VMEM_BUDGET = 96 * 1024 * 1024  # leave headroom of v5e's 128MB
+
+
+def select_config(M: int, N: int, K: int,
+                  dtype=jnp.bfloat16) -> MatmulConfig:
+    """Deterministic config oracle (PM2Lat's heuristic-API analogue).
+
+    Prefers the largest VMEM-feasible tiles with the least padding waste,
+    skinny tiles for small M (decode).
+    """
+    best, best_score = None, None
+    for c in CONFIGS:
+        if c.vmem_bytes(dtype) > VMEM_BUDGET:
+            continue
+        pm, pn, pk = (-M % c.bm), (-N % c.bn), (-K % c.bk)
+        waste = ((M + pm) * (N + pn) * (K + pk)) / max(M * N * K, 1) - 1.0
+        # fewer grid steps (bigger tiles) good; padding waste bad
+        grid = ((M + pm) // c.bm) * ((N + pn) // c.bn) * ((K + pk) // c.bk)
+        score = (waste * 4.0, grid, -c.bm * c.bn)
+        if best is None or score < best_score:
+            best, best_score = c, score
+    return best
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_kernel(a, b, config: MatmulConfig, *, out_dtype=None,
+                  interpret: bool = False):
+    """a (M,K) @ b (K,N) -> (M,N). Dims must be multiples of the block
+    config (ops.matmul pads handles ragged shapes)."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    assert M % config.bm == 0 and K % config.bk == 0 and N % config.bn == 0, (
+        (M, K, N), config)
+    out_dtype = out_dtype or a.dtype
+    n_k = K // config.bk
+    grid = (M // config.bm, N // config.bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((config.bm, config.bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((config.bk, config.bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((config.bm, config.bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[_vmem_scratch(config)],
+        interpret=interpret,
+    )(a, b)
+
+
+def _vmem_scratch(config: MatmulConfig):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM((config.bm, config.bn), jnp.float32)
+
+

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b, out_dtype=None):
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """q (B,Sq,H,hd), k/v (B,Skv,H,hd) -> (B,Sq,H,hd). Materializes scores
+    (oracle only)."""
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(hd)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        qp = jnp.arange(Sq)[:, None] + (Skv - Sq)
+        kp = jnp.arange(Skv)[None, :]
+        m = qp >= kp
+        if window is not None:
+            m &= (qp - kp) < window
+        s = jnp.where(m[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

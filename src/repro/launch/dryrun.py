@@ -1,0 +1,314 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell with ShapeDtypeStruct inputs (no allocation) and report
+memory/cost/collective statistics.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+
+The XLA_FLAGS line above MUST stay the first statement: jax fixes the device
+count at first backend initialization.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry as cr
+from repro.configs import shapes as shp
+from repro.core import device as dev
+from repro.core import hlo
+from repro.core import jaxpr_cost
+from repro.distributed import sharding as sh
+from repro.distributed import specs as sp
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry as mr
+from repro.training import optimizer as opt
+from repro.training import step as tstep
+
+
+def input_specs(arch: str, shape: shp.ShapeCell, *, cache_dtype=jnp.bfloat16,
+                param_dtype=None):
+    """ShapeDtypeStruct stand-ins for every input of the lowered step."""
+    model = mr.build(cr.get(arch))
+    B, S = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    params = model.abstract_params()
+    if param_dtype is not None:
+        pd = jnp.dtype(param_dtype)
+        params = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(
+                x.shape, pd if jnp.issubdtype(x.dtype, jnp.floating) else x.dtype),
+            params)
+    if shape.kind == "train":
+        batch = {"tokens": tok, "labels": tok}
+        if model.needs_ctx():
+            batch["ctx"] = model.ctx_spec(B)
+        return {"params": params,
+                "opt_state": opt.abstract_opt_state(params),
+                "batch": batch}
+    if shape.kind == "prefill":
+        d = {"params": params, "tokens": tok}
+        if model.needs_ctx():
+            d["ctx"] = model.ctx_spec(B)
+        return d
+    # decode: one new token against a cache of seq_len
+    return {"params": params,
+            "token": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "cache": model.abstract_cache(B, S, dtype=cache_dtype)}
+
+
+@dataclasses.dataclass
+class CellReport:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    error: str = ""
+    compile_s: float = 0.0
+    flops_per_device: float = 0.0
+    bytes_per_device: float = 0.0
+    collectives: dict = dataclasses.field(default_factory=dict)
+    jaxpr_flops_global: float = 0.0
+    jaxpr_bytes_global: float = 0.0
+    jaxpr_bytes_prefusion_global: float = 0.0
+    jaxpr_transcendentals_global: float = 0.0
+    ici_bytes: float = 0.0
+    collective_operand_bytes: float = 0.0
+    memory: dict = dataclasses.field(default_factory=dict)
+    n_params: int = 0
+    options: dict = dataclasses.field(default_factory=dict)
+
+    def row(self) -> str:
+        if not self.ok:
+            return f"{self.arch:26s} {self.shape:12s} {self.mesh:9s} FAIL {self.error[:90]}"
+        mem = self.memory.get("argument_size_in_bytes", 0) + self.memory.get(
+            "temp_size_in_bytes", 0)
+        chips = 512 if self.mesh == "pod2x256" else 256
+        return (f"{self.arch:26s} {self.shape:12s} {self.mesh:9s} ok "
+                f"compile={self.compile_s:6.1f}s flops/dev={self.jaxpr_flops_global/chips:.3e} "
+                f"bytes/dev={self.jaxpr_bytes_global/chips:.3e} ici/dev={self.ici_bytes:.3e} "
+                f"mem/dev={mem/2**30:.2f}GiB")
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               act_mode: str = "tp", block_skip: bool = False,
+               num_microbatches: int = 1, remat: bool = True,
+               fused_ce: bool = True, moe_dispatch: str = None,
+               moe_tokens_per_group: int = None, mlstm_chunk: int = None,
+               mlstm_state_dtype: str = None,
+               kv_block: int = None, serve_opt: bool = False,
+               verbose: bool = True, keep_hlo: bool = False) -> CellReport:
+    shape = shp.SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x256" if multi_pod else "pod256"
+    rep = CellReport(arch=arch, shape=shape_name, mesh=mesh_name, ok=False,
+                     options={"act_mode": act_mode, "block_skip": block_skip,
+                              "num_microbatches": num_microbatches,
+                              "remat": remat, "fused_ce": fused_ce,
+                              "moe_dispatch": moe_dispatch,
+                              "kv_block": kv_block, "serve_opt": serve_opt})
+    if moe_dispatch:
+        os.environ["REPRO_MOE_DISPATCH"] = moe_dispatch
+    if moe_tokens_per_group:
+        os.environ["REPRO_MOE_TOKENS_PER_GROUP"] = str(moe_tokens_per_group)
+        rep.options["moe_tokens_per_group"] = moe_tokens_per_group
+    if mlstm_chunk:
+        os.environ["REPRO_MLSTM_CHUNK"] = str(mlstm_chunk)
+        rep.options["mlstm_chunk"] = mlstm_chunk
+    if mlstm_state_dtype:
+        os.environ["REPRO_MLSTM_STATE_DTYPE"] = mlstm_state_dtype
+        rep.options["mlstm_state_dtype"] = mlstm_state_dtype
+    if kv_block:
+        import repro.models.attention as _A
+        _A.DEFAULT_KV_BLOCK = kv_block
+    if serve_opt:
+        os.environ["REPRO_DECODE_WRITE"] = "where"
+    model = mr.build(cr.get(arch))
+    rep.n_params = model.count_params()
+    t0 = time.perf_counter()
+    try:
+        with sh.mesh_context(mesh, act_mode=act_mode, remat=remat):
+            is_serve = shape.kind in ("prefill", "decode")
+            specs_in = input_specs(
+                arch, shape,
+                param_dtype=jnp.bfloat16 if (serve_opt and is_serve) else None)
+            p_specs = sp.params_specs(specs_in["params"],
+                                      serve=serve_opt and is_serve)
+            ns = lambda tree: jax.tree.map(
+                lambda s: NamedSharding(mesh, s), tree,
+                is_leaf=lambda s: isinstance(s, P))
+
+            if shape.kind == "train":
+                adamw = opt.AdamWConfig()
+                step_fn = tstep.build_train_step(
+                    model, adamw, num_microbatches=num_microbatches,
+                    block_skip=block_skip, fused_ce=fused_ce)
+                o_specs = sp.opt_specs(specs_in["opt_state"], p_specs)
+                b_specs = sp.batch_specs(specs_in["batch"])
+                m_specs = jax.tree.map(lambda *_: P(), {"loss": 0, "ce": 0,
+                                                        "lb_loss": 0, "z_loss": 0,
+                                                        "grad_norm": 0, "lr": 0})
+                jf = jax.jit(step_fn,
+                             in_shardings=(ns(p_specs), ns(o_specs), ns(b_specs)),
+                             out_shardings=(ns(p_specs), ns(o_specs), ns(m_specs)),
+                             donate_argnums=(0, 1))
+                lowered = jf.lower(specs_in["params"], specs_in["opt_state"],
+                                   specs_in["batch"])
+                _jc = jaxpr_cost.cost_of(step_fn, specs_in["params"],
+                                         specs_in["opt_state"], specs_in["batch"])
+            elif shape.kind == "prefill":
+                def prefill_fn(params, tokens, ctx=None):
+                    return model.prefill(params, tokens, ctx_embed=ctx,
+                                         max_len=shape.seq_len + 64)
+                c_abs = jax.eval_shape(
+                    prefill_fn, specs_in["params"], specs_in["tokens"],
+                    specs_in.get("ctx"))[1]
+                c_specs = sp.cache_specs(c_abs, model.cfg)
+                logits_spec = P(sh.resolve("dp") if shape.global_batch % max(sh.dp_size(), 1) == 0 else None,
+                                sh.resolve("tp"))
+                args = [specs_in["params"], specs_in["tokens"]]
+                in_sh = [ns(p_specs),
+                         NamedSharding(mesh, P(sh.resolve("dp") if shape.global_batch % max(sh.dp_size(), 1) == 0 else None, None))]
+                if "ctx" in specs_in:
+                    args.append(specs_in["ctx"])
+                    in_sh.append(NamedSharding(mesh, P(None, None, None)))
+                jf = jax.jit(prefill_fn, in_shardings=tuple(in_sh),
+                             out_shardings=(NamedSharding(mesh, logits_spec),
+                                            ns(c_specs)))
+                lowered = jf.lower(*args)
+                _jc = jaxpr_cost.cost_of(prefill_fn, *args)
+            else:  # decode
+                def decode_fn(params, token, cache):
+                    return model.decode_step(params, token, cache)
+                c_specs = sp.cache_specs(specs_in["cache"], model.cfg)
+                dp_ok = shape.global_batch % max(sh.dp_size(), 1) == 0
+                logits_spec = P(sh.resolve("dp") if dp_ok else None, sh.resolve("tp"))
+                tok_sh = NamedSharding(mesh, P(sh.resolve("dp") if dp_ok else None))
+                jf = jax.jit(decode_fn,
+                             in_shardings=(ns(p_specs), tok_sh, ns(c_specs)),
+                             out_shardings=(NamedSharding(mesh, logits_spec),
+                                            ns(c_specs)),
+                             donate_argnums=(2,))
+                lowered = jf.lower(specs_in["params"], specs_in["token"],
+                                   specs_in["cache"])
+                _jc = jaxpr_cost.cost_of(decode_fn, specs_in["params"],
+                                         specs_in["token"], specs_in["cache"])
+
+            compiled = lowered.compile()
+            rep.compile_s = time.perf_counter() - t0
+            cs = hlo.cost_summary(compiled)
+            rep.flops_per_device = cs["flops"]
+            rep.bytes_per_device = cs["bytes"]
+            rep.jaxpr_flops_global = _jc["flops"]
+            rep.jaxpr_bytes_global = _jc["bytes"]
+            rep.jaxpr_bytes_prefusion_global = _jc.get("bytes_prefusion", 0.0)
+            rep.jaxpr_transcendentals_global = _jc["transcendentals"]
+            text = compiled.as_text()
+            stats = hlo.collective_stats(text)
+            rep.collectives = {k: v for k, v in stats.by_kind.items() if v[0]}
+            rep.ici_bytes = float(stats.total_ici_bytes)
+            rep.collective_operand_bytes = float(stats.total_operand_bytes)
+            rep.memory = hlo.memory_summary(compiled)
+            rep.ok = True
+            if keep_hlo:
+                rep.options["hlo_path"] = _dump_hlo(rep, text)
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        rep.error = f"{type(e).__name__}: {e}"
+        rep.compile_s = time.perf_counter() - t0
+    if verbose:
+        print(rep.row(), flush=True)
+    return rep
+
+
+def _dump_hlo(rep: CellReport, text: str) -> str:
+    out = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts")
+    os.makedirs(out, exist_ok=True)
+    path = os.path.join(out, f"hlo_{rep.arch}_{rep.shape}_{rep.mesh}.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    return path
+
+
+def roofline_terms(rep: CellReport, device: dev.DeviceModel,
+                   dtype: str = "bfloat16") -> dict:
+    """Three roofline terms (seconds) from a dry-run report (per device)."""
+    peak = device.peak(dtype)
+    compute_s = rep.flops_per_device / peak
+    memory_s = rep.bytes_per_device / device.hbm_bw
+    collective_s = rep.ici_bytes / (device.ici_bw * device.ici_links)
+    dom = max((("compute", compute_s), ("memory", memory_s),
+               ("collective", collective_s)), key=lambda kv: kv[1])
+    return {"compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": collective_s, "dominant": dom[0],
+            "step_s_lower_bound": max(compute_s, memory_s, collective_s)}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--act-mode", default="tp", choices=["tp", "sp"])
+    ap.add_argument("--block-skip", action="store_true")
+    ap.add_argument("--num-microbatches", type=int, default=1)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--naive-ce", action="store_true")
+    ap.add_argument("--moe-dispatch", default=None, choices=[None, "einsum", "gather"])
+    ap.add_argument("--moe-tokens-per-group", type=int, default=None)
+    ap.add_argument("--mlstm-chunk", type=int, default=None)
+    ap.add_argument("--mlstm-state-dtype", default=None)
+    ap.add_argument("--kv-block", type=int, default=None)
+    ap.add_argument("--serve-opt", action="store_true",
+                    help="bf16 weights, no FSDP regather for prefill/decode")
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--keep-hlo", action="store_true")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        cells = shp.cells(cr.ARCH_NAMES)
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, shp.SHAPES[args.shape])]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    reports = []
+    for arch, cell in cells:
+        for mp in meshes:
+            reports.append(lower_cell(
+                arch, cell.name, multi_pod=mp, act_mode=args.act_mode,
+                block_skip=args.block_skip,
+                num_microbatches=args.num_microbatches,
+                remat=not args.no_remat, fused_ce=not args.naive_ce,
+                moe_dispatch=args.moe_dispatch,
+                moe_tokens_per_group=args.moe_tokens_per_group,
+                mlstm_chunk=args.mlstm_chunk,
+                mlstm_state_dtype=args.mlstm_state_dtype,
+                kv_block=args.kv_block,
+                serve_opt=args.serve_opt, keep_hlo=args.keep_hlo))
+
+    n_fail = sum(1 for r in reports if not r.ok)
+    print(f"\n{len(reports) - n_fail}/{len(reports)} cells compiled")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([dataclasses.asdict(r) for r in reports], f, indent=1)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

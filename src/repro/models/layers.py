@@ -1,0 +1,115 @@
+"""Core parameterized layers (functional: init_* -> params dict, apply fns).
+
+Parameters are plain nested dicts of jnp arrays; init functions mirror the
+partition-spec path rules in distributed/sharding.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import sharding as sh
+
+
+def pad_vocab(vocab_size: int, multiple: int = 256) -> int:
+    return ((vocab_size + multiple - 1) // multiple) * multiple
+
+
+def _init_w(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+# ----- linear -----
+
+def init_linear(key, d_in, d_out, *, bias=False, dtype=jnp.float32, scale=None):
+    p = {"w": _init_w(key, (d_in, d_out), scale=scale, dtype=dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=dtype)
+    return p
+
+
+def linear(p, x, compute_dtype=None):
+    w = p["w"]
+    if compute_dtype is not None:
+        w = w.astype(compute_dtype)
+        x = x.astype(compute_dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ----- norm -----
+
+def init_rmsnorm(d):
+    return {"scale": jnp.ones((d,), dtype=jnp.float32)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(dt)
+
+
+# ----- activations -----
+
+def act_fn(name):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "geglu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+def is_gated(name):
+    return name in ("silu", "geglu")
+
+
+# ----- mlp -----
+
+def init_mlp(key, d_model, d_ff, act, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {"w_in": init_linear(ks[0], d_model, d_ff, dtype=dtype),
+         "w_out": init_linear(ks[1], d_ff, d_model, dtype=dtype)}
+    if is_gated(act):
+        p["w_gate"] = init_linear(ks[2], d_model, d_ff, dtype=dtype)
+    return p
+
+
+def mlp(p, x, act, compute_dtype=None):
+    h = linear(p["w_in"], x, compute_dtype)
+    if "w_gate" in p:
+        g = linear(p["w_gate"], x, compute_dtype)
+        h = act_fn(act)(g) * h
+    else:
+        h = act_fn(act)(h)
+    h = sh.constrain(h, *(["dp"] + [None] * (h.ndim - 2) + ["tp"]))
+    return linear(p["w_out"], h, compute_dtype)
+
+
+# ----- embedding -----
+
+def init_embed(key, vocab_size, d_model, dtype=jnp.float32):
+    pv = pad_vocab(vocab_size)
+    # 1/sqrt(d) so tied-unembedding logits are O(1) after the final rmsnorm
+    return {"w": _init_w(key, (pv, d_model), scale=d_model ** -0.5, dtype=dtype)}
+
+
+def embed(p, tokens, compute_dtype=None):
+    w = p["w"]
+    if compute_dtype is not None:
+        w = w.astype(compute_dtype)
+    y = jnp.take(w, tokens, axis=0)
+    return sh.constrain_hidden(y)
+
+
+def unembed(p, x, compute_dtype=None):
+    """x (..., d) -> logits (..., padded_vocab)."""
+    w = p["w"]
+    if compute_dtype is not None:
+        w = w.astype(compute_dtype)
+        x = x.astype(compute_dtype)
+    logits = x @ w.T
+    return sh.constrain(logits, *(["dp"] + [None] * (logits.ndim - 2) + ["tp"]))

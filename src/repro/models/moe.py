@@ -1,0 +1,176 @@
+"""Mixture-of-Experts FFN: GShard/Switch-style static capacity dispatch.
+
+Two dispatch modes (env ``REPRO_MOE_DISPATCH`` or the ``dispatch_mode`` arg):
+
+  - ``einsum`` (default, GShard-faithful baseline): one-hot dispatch/combine
+    einsums.  Cost O(T * E * C * d) FLOPs — dominates everything for
+    fine-grained MoE (64 experts top-6), see EXPERIMENTS.md §Perf.
+  - ``gather``: same routing decisions, but dispatch = scatter-add and
+    combine = gather + weighted sum.  O(E * C * d) bytes, ~0 matmul FLOPs.
+    Bit-identical outputs (tested).
+
+Top-k routing with per-group expert capacity so every op shape is static —
+this is exactly the extension the paper (§IV-B) names as the prerequisite for
+applying PM2Lat to MoE: with capacity dispatch, per-expert token counts are
+fixed and the dispatch/combine einsums enter the op graph like any matmul.
+
+Experts are sharded over the 'model' mesh axis (expert parallelism); the
+group dim over the data axes, so the dispatch einsum lowers to an all-to-all
+style exchange under GSPMD.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.distributed import sharding as sh
+from repro.models import layers as L
+
+
+def init_moe(key, d_model, moe: MoEConfig, act):
+    ks = jax.random.split(key, 4 + moe.num_shared_experts)
+    E, dff = moe.num_experts, moe.d_ff_expert
+    gated = L.is_gated(act)
+    p = {
+        "router": L.init_linear(ks[0], d_model, E),
+        "experts": {
+            "w_in": L._init_w(ks[1], (E, d_model, dff)),
+            "w_out": L._init_w(ks[2], (E, dff, d_model)),
+        },
+    }
+    if gated:
+        p["experts"]["w_gate"] = L._init_w(ks[3], (E, d_model, dff))
+    for i in range(moe.num_shared_experts):
+        p[f"shared{i}"] = L.init_mlp(ks[4 + i], d_model, dff, act)
+    return p
+
+
+def expert_capacity(tokens_per_group: int, moe: MoEConfig) -> int:
+    cap = int(moe.capacity_factor * tokens_per_group * moe.top_k / moe.num_experts)
+    return max(cap, moe.top_k, 4)
+
+
+def _top_k_mask(router_probs, moe: MoEConfig, capacity: int):
+    """router_probs (G, S, E) -> dispatch (G,S,E,C) bool, combine (G,S,E,C) f32,
+    aux metrics. Classic GShard position-in-expert assignment, k slots."""
+    G, S, E = router_probs.shape
+    gates, idx = jax.lax.top_k(router_probs, moe.top_k)       # (G,S,k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+
+    base_count = jnp.zeros((G, E), dtype=jnp.int32)
+    dispatch = jnp.zeros((G, S, E, capacity), dtype=jnp.bool_)
+    combine = jnp.zeros((G, S, E, capacity), dtype=jnp.float32)
+    for kk in range(moe.top_k):
+        onehot = jax.nn.one_hot(idx[..., kk], E, dtype=jnp.int32)   # (G,S,E)
+        pos = jnp.cumsum(onehot, axis=1) - 1 + base_count[:, None, :]
+        keep = (pos < capacity) & (onehot > 0)
+        pos_c = jax.nn.one_hot(jnp.where(keep, pos, capacity), capacity + 1,
+                               dtype=jnp.float32)[..., :capacity]   # (G,S,E,C)
+        slot = onehot[..., None].astype(jnp.float32) * pos_c
+        dispatch |= slot > 0
+        combine += slot * gates[..., kk][..., None, None]
+        base_count = base_count + jnp.sum(onehot, axis=1)
+    return dispatch, combine
+
+
+def load_balance_loss(router_probs, dispatch):
+    """Switch-style aux loss: E * <fraction routed> . <mean prob>."""
+    E = router_probs.shape[-1]
+    frac = jnp.mean(jnp.any(dispatch, axis=-1).astype(jnp.float32), axis=(0, 1))
+    prob = jnp.mean(router_probs, axis=(0, 1))
+    return E * jnp.sum(frac * prob)
+
+
+def _top_k_routing(router_probs, moe: MoEConfig, capacity: int):
+    """Index form of _top_k_mask's assignment: expert_idx/slot/keep/gates,
+    each (G,S,K). Identical routing decisions (shared cumsum logic)."""
+    G, S, E = router_probs.shape
+    gates, idx = jax.lax.top_k(router_probs, moe.top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    base_count = jnp.zeros((G, E), dtype=jnp.int32)
+    slots, keeps = [], []
+    for kk in range(moe.top_k):
+        onehot = jax.nn.one_hot(idx[..., kk], E, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=1) - 1 + base_count[:, None, :]
+        pos_k = jnp.take_along_axis(pos, idx[..., kk][..., None], -1)[..., 0]
+        keep = pos_k < capacity
+        slots.append(pos_k)
+        keeps.append(keep)
+        base_count = base_count + jnp.sum(onehot, axis=1)
+    return (idx, jnp.stack(slots, -1), jnp.stack(keeps, -1), gates)
+
+
+def moe_ffn(p, x, moe: MoEConfig, act, *, num_groups=None, compute_dtype=None,
+            dispatch_mode=None):
+    """x (B, S, d) -> (y, aux) with aux = {"lb_loss", "z_loss"}."""
+    mode = dispatch_mode or os.environ.get("REPRO_MOE_DISPATCH", "einsum")
+    B, S, d = x.shape
+    T = B * S
+    if num_groups is None:
+        tpg = int(os.environ.get("REPRO_MOE_TOKENS_PER_GROUP", "0"))
+        # Smaller groups shrink the (G,Sg,E,C) dispatch tensor linearly in
+        # Sg at equal expert compute (capacity follows the group): the
+        # one-hot dispatch traffic was the dominant memory term for MoE
+        # training cells (§Perf A).  Default: one group per batch row.
+        num_groups = max(T // tpg, 1) if tpg else B
+    G = min(num_groups, T)
+    while T % G:
+        G -= 1
+    xg = x.reshape(G, T // G, d)
+    xg = sh.constrain(xg, "dp", None, None)
+
+    logits = L.linear(p["router"], xg.astype(jnp.float32))       # (G,Sg,E) f32 router
+    probs = jax.nn.softmax(logits, axis=-1)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    cap = expert_capacity(T // G, moe)
+    cdt = compute_dtype or xg.dtype
+
+    if mode == "gather":
+        E = moe.num_experts
+        e_idx, slot, keep, gates = _top_k_routing(probs, moe, cap)
+        # LB loss without the (G,S,E,C) mask tensor
+        routed = jnp.zeros(probs.shape, jnp.float32)
+        for kk in range(moe.top_k):
+            routed += (jax.nn.one_hot(e_idx[..., kk], E)
+                       * keep[..., kk, None].astype(jnp.float32))
+        lb = E * jnp.sum(jnp.mean(routed, axis=(0, 1))
+                         * jnp.mean(probs, axis=(0, 1)))
+        flat = jnp.where(keep, e_idx * cap + slot, E * cap)      # dump slot
+        g_iota = jnp.arange(G)[:, None, None]
+        xe = jnp.zeros((G, E * cap + 1, d), cdt)
+        xe = xe.at[g_iota, flat].add(xg.astype(cdt)[:, :, None, :])
+        xe = xe[:, : E * cap].reshape(G, E, cap, d)
+    else:
+        dispatch, combine = _top_k_mask(probs, moe, cap)
+        lb = load_balance_loss(probs, dispatch)
+        disp = dispatch.astype(cdt)
+        xe = jnp.einsum("gsec,gsd->gecd", disp, xg.astype(cdt))  # (G,E,C,d)
+    xe = sh.constrain(xe, "dp", "tp", None, None)
+    w_in = p["experts"]["w_in"].astype(cdt)
+    h = jnp.einsum("gecd,edf->gecf", xe, w_in)
+    if "w_gate" in p["experts"]:
+        g = jnp.einsum("gecd,edf->gecf", xe, p["experts"]["w_gate"].astype(cdt))
+        h = L.act_fn(act)(g) * h
+    else:
+        h = L.act_fn(act)(h)
+    h = sh.constrain(h, "dp", "tp", None, None)
+    ye = jnp.einsum("gecf,efd->gecd", h, p["experts"]["w_out"].astype(cdt))
+    ye = sh.constrain(ye, "dp", "tp", None, None)
+
+    if mode == "gather":
+        ye_flat = jnp.concatenate(
+            [ye.reshape(G, moe.num_experts * cap, d),
+             jnp.zeros((G, 1, d), ye.dtype)], axis=1)
+        picked = ye_flat[jnp.arange(G)[:, None, None], flat]      # (G,S,K,d)
+        w = jnp.where(keep, gates, 0.0).astype(cdt)
+        y = jnp.sum(picked * w[..., None], axis=2)
+    else:
+        y = jnp.einsum("gsec,gecd->gsd", combine.astype(cdt), ye)
+    y = y.reshape(B, S, d)
+
+    for i in range(moe.num_shared_experts):
+        y = y + L.mlp(p[f"shared{i}"], x, act, compute_dtype)
+    return y, {"lb_loss": lb, "z_loss": z_loss}

@@ -1,0 +1,423 @@
+"""Recurrent blocks: RG-LRU (Griffin/RecurrentGemma) and xLSTM (mLSTM, sLSTM).
+
+Training paths:
+  - RG-LRU: associative scan (log-free, gates in [0,1)) — O(S log S) depth.
+  - mLSTM: *chunkwise-parallel* form (matmul-heavy, states materialized once
+    per chunk) with a step-recurrent reference used for decode and testing.
+    The chunkwise form is the TPU-native adaptation: the recurrent form is
+    hopelessly memory-bound (a (B,H,hd,hd) state read+written every step);
+    chunking converts it to MXU matmuls — see EXPERIMENTS.md §Perf.
+  - sLSTM: sequential lax.scan (hidden-to-gate recurrence is not
+    parallelizable), exponential gating with max-stabilizer.
+
+Decode paths are single recurrent steps with O(1) state — this is what makes
+``long_500k`` applicable to xlstm-1.3b / recurrentgemma-2b only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as sh
+from repro.models import layers as L
+
+RGLRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d
+# ---------------------------------------------------------------------------
+
+def init_conv1d(key, width, channels):
+    return {"w": (jax.random.normal(key, (width, channels)) / width).astype(jnp.float32)}
+
+
+def conv1d_causal(p, x):
+    """x (B,S,C) -> (B,S,C), causal depthwise."""
+    w = p["w"].astype(x.dtype)
+    width = w.shape[0]
+    S = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):  # tap i multiplies x_{t-(width-1-i)}
+        out = out + xp[:, i:i + S] * w[i]
+    return out
+
+
+def conv1d_step(p, x_t, conv_state):
+    """x_t (B,1,C); conv_state (B,width-1,C) holds previous inputs."""
+    w = p["w"].astype(x_t.dtype)
+    width = w.shape[0]
+    window = jnp.concatenate([conv_state.astype(x_t.dtype), x_t], axis=1)  # (B,width,C)
+    y = jnp.einsum("bwc,wc->bc", window, w)[:, None, :]
+    new_state = window[:, 1:] if width > 1 else conv_state
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def init_rglru_block(key, cfg):
+    d = cfg.d_model
+    dl = cfg.lru_dim or d
+    ks = jax.random.split(key, 6)
+    # Λ init so that a^c = sigmoid(Λ)^c spans ~[0.9, 0.999]
+    lam = jnp.linspace(2.0, 6.0, dl)
+    return {
+        "wx": L.init_linear(ks[0], d, dl),
+        "wg": L.init_linear(ks[1], d, dl),
+        "conv": init_conv1d(ks[2], cfg.rglru_conv_width, dl),
+        "lru": {
+            "a_param": lam.astype(jnp.float32),
+            "w_r": L.init_linear(ks[3], dl, dl),
+            "w_i": L.init_linear(ks[4], dl, dl),
+        },
+        "w_lru_out": L.init_linear(ks[5], dl, d),
+    }
+
+
+def _rglru_gates(p, xb):
+    r = jax.nn.sigmoid(L.linear(p["lru"]["w_r"], xb.astype(jnp.float32)))
+    i = jax.nn.sigmoid(L.linear(p["lru"]["w_i"], xb.astype(jnp.float32)))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lru"]["a_param"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xb.astype(jnp.float32))
+    return a, b
+
+
+def rglru_scan(p, xb, h0=None):
+    """xb (B,S,dl) -> (B,S,dl) via associative linear recurrence h=a*h+b."""
+    a, b = _rglru_gates(p, xb)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(xb.dtype)
+
+
+def rglru_step(p, x_t, h_prev):
+    """x_t (B,1,dl); h_prev (B,dl)."""
+    a, b = _rglru_gates(p, x_t)
+    h = a[:, 0] * h_prev + b[:, 0]
+    return h.astype(x_t.dtype)[:, None, :], h
+
+
+def rglru_block(p, x, cfg, compute_dtype=None, return_state=False):
+    """Full Griffin recurrent block: (B,S,d) -> (B,S,d)."""
+    g = jax.nn.silu(L.linear(p["wg"], x, compute_dtype))
+    xb = L.linear(p["wx"], x, compute_dtype)
+    xb = sh.constrain(xb, "dp", None, "tp")
+    conv_state = xb[:, -(cfg.rglru_conv_width - 1):, :]
+    xc = conv1d_causal(p["conv"], xb)
+    h = rglru_scan(p, xc)
+    h = sh.constrain(h, "dp", None, "tp")
+    out = L.linear(p["w_lru_out"], h * g, compute_dtype)
+    if return_state:
+        return out, {"h": h[:, -1].astype(jnp.float32), "conv": conv_state}
+    return out
+
+
+def rglru_block_step(p, x_t, cache, cfg, compute_dtype=None):
+    g = jax.nn.silu(L.linear(p["wg"], x_t, compute_dtype))
+    xb = L.linear(p["wx"], x_t, compute_dtype)
+    xb, conv_state = conv1d_step(p["conv"], xb, cache["conv"])
+    y, h = rglru_step(p, xb, cache["h"])
+    out = L.linear(p["w_lru_out"], y * g, compute_dtype)
+    return out, {"h": h, "conv": conv_state}
+
+
+def init_rglru_cache(cfg, batch, dtype=jnp.float32):
+    dl = cfg.lru_dim or cfg.d_model
+    return {"h": jnp.zeros((batch, dl), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.rglru_conv_width - 1, dl), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+MLSTM_EXPAND = 2
+MLSTM_CONV_WIDTH = 4
+
+
+def mlstm_dims(cfg):
+    di = MLSTM_EXPAND * cfg.d_model
+    H = cfg.n_heads
+    return di, H, di // H
+
+
+def init_mlstm_block(key, cfg):
+    d = cfg.d_model
+    di, H, hd = mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": L.init_linear(ks[0], d, 2 * di),
+        "conv": init_conv1d(ks[1], MLSTM_CONV_WIDTH, di),
+        "wq": L.init_linear(ks[2], di, di),
+        "wk": L.init_linear(ks[3], di, di),
+        "wv": L.init_linear(ks[4], di, di),
+        "w_if": L.init_linear(ks[5], di, 2 * H, bias=True),
+        "out_norm": L.init_rmsnorm(di),
+        "w_down": L.init_linear(ks[6], di, d),
+    }
+
+
+def _mlstm_qkvif(p, x_m, cfg, compute_dtype):
+    di, H, hd = mlstm_dims(cfg)
+    B, S, _ = x_m.shape
+    c = conv1d_causal(p["conv"], x_m)
+    c = jax.nn.silu(c)
+    q = L.linear(p["wq"], c, compute_dtype).reshape(B, S, H, hd)
+    k = L.linear(p["wk"], c, compute_dtype).reshape(B, S, H, hd) / jnp.sqrt(hd).astype(x_m.dtype)
+    v = L.linear(p["wv"], x_m, compute_dtype).reshape(B, S, H, hd)
+    # gates from the compute-dtype stream; only the (B,S,2H) OUTPUT goes f32
+    # (an f32 cast of x_m (B,S,di) dragged 4-byte copies of the widest
+    # activation through every resharding collective - §Perf C)
+    gates = L.linear(p["w_if"], x_m, compute_dtype).astype(jnp.float32)
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)
+    f_logsig = -jax.nn.softplus(-f_raw)                           # log sigmoid(f)
+    return q, k, v, i_raw, f_logsig
+
+
+def mlstm_cell_recurrent(q, k, v, i_raw, f_logsig, state=None):
+    """Reference/decode cell. q,k,v (B,S,H,hd); gates (B,S,H) f32.
+    Returns h (B,S,H,hd) and final state (C (B,H,hd,hd), n (B,H,hd), m (B,H))."""
+    B, S, H, hd = q.shape
+    if state is None:
+        C = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n = jnp.zeros((B, H, hd), jnp.float32)
+        m = jnp.full((B, H), -jnp.inf, jnp.float32)
+    else:
+        C, n, m = state
+
+    def step(carry, xs_t):
+        C, n, m = carry
+        qt, kt, vt, it, ft = xs_t
+        qt = qt.astype(jnp.float32)
+        kt = kt.astype(jnp.float32)
+        vt = vt.astype(jnp.float32)
+        m_new = jnp.maximum(ft + m, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(ft + m - m_new)
+        C = f_s[..., None, None] * C + i_s[..., None, None] * (vt[..., :, None] * kt[..., None, :])
+        n = f_s[..., None] * n + i_s[..., None] * kt
+        denom = jnp.abs(jnp.einsum("bhd,bhd->bh", n, qt))
+        denom = jnp.maximum(denom, jnp.exp(-m_new))
+        h = jnp.einsum("bhvd,bhd->bhv", C, qt) / denom[..., None]
+        return (C, n, m_new), h
+
+    xs = tuple(jnp.moveaxis(a, 0, 1) for a in
+               (q, k, v, i_raw, f_logsig))
+    (C, n, m), hs = jax.lax.scan(step, (C, n, m),
+                                 tuple(a.swapaxes(0, 1) for a in (q, k, v, i_raw, f_logsig)))
+    h = jnp.moveaxis(hs, 0, 1)  # (B,S,H,hd)
+    return h.astype(q.dtype), (C, n, m)
+
+
+def mlstm_cell_chunkwise(q, k, v, i_raw, f_logsig, chunk: int = 128,
+                         state_dtype=None):
+    """Chunkwise-parallel mLSTM (matmul form). Matches the recurrent cell.
+
+    Mixed precision: q/k/v stay in their input dtype (bf16 in training) and
+    every einsum accumulates in f32 via preferred_element_type — an f32 cast
+    of the (B,S,di) streams would double the dominant HBM traffic (§Perf C).
+    ``state_dtype`` (env REPRO_MLSTM_STATE_DTYPE) controls the carried
+    (B,H,hd,hd) matrix-memory dtype: f32 default, bf16 halves the largest
+    state stream at ~1e-2 relative output error (tested).
+    """
+    B, S, H, hd = q.shape
+    if S % chunk:
+        chunk = S  # fall back to one chunk
+    sdt = jnp.dtype(state_dtype or os.environ.get("REPRO_MLSTM_STATE_DTYPE",
+                                                  "float32"))
+    cdt = q.dtype
+    nC = S // chunk
+    resh = lambda x: x.reshape(B, nC, chunk, *x.shape[2:])
+    qc, kc, vc = resh(q), resh(k), resh(v)
+    ic, fc = resh(i_raw), resh(f_logsig)
+    b = jnp.cumsum(fc, axis=2)                # (B,nC,L,H) intra-chunk log decay
+    b_total = b[:, :, -1]                     # (B,nC,H)
+
+    # intra-chunk score decay D[t,tau] = b_t - b_tau + i_tau (tau <= t)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    f32 = jnp.float32
+
+    def step2(carry, xs):
+        Cp, np_, mp = carry
+        qj, kj, vj, ij, bj, btot = xs
+        g_local = bj[:, :, None, :] - bj[:, None, :, :] + ij[:, None, :, :]
+        g_local = jnp.where(tri[None, :, :, None], g_local, -jnp.inf)
+        m_intra = jnp.max(g_local, axis=2)
+        m_t = jnp.maximum(bj + mp[:, None, :], m_intra)
+        inter_w = jnp.exp(bj + mp[:, None, :] - m_t)
+        Sij = jnp.einsum("blhd,bthd->blth", qj, kj,
+                         preferred_element_type=f32)
+        P = jnp.where(tri[None, :, :, None], jnp.exp(g_local - m_t[:, :, None, :]), 0.0)
+        SP = Sij * P
+        num = (inter_w[..., None] * jnp.einsum("blhd,bhvd->blhv", qj,
+                                               Cp.astype(cdt),
+                                               preferred_element_type=f32)
+               + jnp.einsum("blth,bthv->blhv", SP.astype(cdt), vj,
+                            preferred_element_type=f32))
+        den = (inter_w * jnp.einsum("blhd,bhd->blh", qj, np_.astype(cdt),
+                                    preferred_element_type=f32)
+               + jnp.sum(SP, axis=2))
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        h = num / den[..., None]
+        # chunk-end state update
+        g_end = btot[:, None, :] - bj + ij                                    # (B,L,H)
+        m_end = jnp.maximum(btot + mp, jnp.max(g_end, axis=1))                # (B,H)
+        w_end = jnp.exp(g_end - m_end[:, None, :])                            # (B,L,H)
+        C_new = (jnp.exp(btot + mp - m_end)[..., None, None] * Cp.astype(f32)
+                 + jnp.einsum("blh,blhv,blhd->bhvd", w_end.astype(cdt),
+                              vj, kj, preferred_element_type=f32))
+        n_new = (jnp.exp(btot + mp - m_end)[..., None] * np_.astype(f32)
+                 + jnp.einsum("blh,blhd->bhd", w_end.astype(cdt), kj,
+                              preferred_element_type=f32))
+        return (C_new.astype(sdt), n_new.astype(sdt), m_end), h
+
+    C0 = jnp.zeros((B, H, hd, hd), sdt)
+    n0 = jnp.zeros((B, H, hd), sdt)
+    m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    qs = jnp.moveaxis(qc, 1, 0)
+    xs = (qs, jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+          jnp.moveaxis(ic, 1, 0), jnp.moveaxis(b, 1, 0), jnp.moveaxis(b_total, 1, 0))
+    (C, n, m), hs = jax.lax.scan(step2, (C0, n0, m0), xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, H, hd)
+    return h.astype(q.dtype), (C.astype(jnp.float32), n.astype(jnp.float32), m)
+
+
+import os
+
+
+def mlstm_block(p, x, cfg, *, compute_dtype=None, chunk=None,
+                use_chunkwise=True, return_state=False):
+    B, S, d = x.shape
+    chunk = chunk or int(os.environ.get("REPRO_MLSTM_CHUNK", "128"))
+    di, H, hd = mlstm_dims(cfg)
+    u = L.linear(p["w_up"], x, compute_dtype)
+    x_m, z = jnp.split(u, 2, axis=-1)
+    x_m = sh.constrain(x_m, "dp", None, "tp")
+    q, k, v, i_raw, f_logsig = _mlstm_qkvif(p, x_m, cfg, compute_dtype)
+    if use_chunkwise:
+        h, state = mlstm_cell_chunkwise(q, k, v, i_raw, f_logsig, chunk=chunk)
+    else:
+        h, state = mlstm_cell_recurrent(q, k, v, i_raw, f_logsig)
+    h = L.rmsnorm(p["out_norm"], h.reshape(B, S, di))
+    h = h * jax.nn.silu(z)
+    h = sh.constrain(h, "dp", None, "tp")
+    out = L.linear(p["w_down"], h, compute_dtype)
+    if return_state:
+        C, n, m = state
+        cache = {"C": C, "n": n, "m": m,
+                 "conv": x_m[:, -(MLSTM_CONV_WIDTH - 1):, :]}
+        return out, cache
+    return out
+
+
+def mlstm_block_step(p, x_t, cache, cfg, compute_dtype=None):
+    B = x_t.shape[0]
+    di, H, hd = mlstm_dims(cfg)
+    u = L.linear(p["w_up"], x_t, compute_dtype)
+    x_m, z = jnp.split(u, 2, axis=-1)
+    c, conv_state = conv1d_step(p["conv"], x_m, cache["conv"])
+    c = jax.nn.silu(c)
+    q = L.linear(p["wq"], c, compute_dtype).reshape(B, 1, H, hd)
+    k = L.linear(p["wk"], c, compute_dtype).reshape(B, 1, H, hd) / jnp.sqrt(hd).astype(x_t.dtype)
+    v = L.linear(p["wv"], x_m, compute_dtype).reshape(B, 1, H, hd)
+    gates = L.linear(p["w_if"], x_m.astype(jnp.float32))
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)
+    f_logsig = -jax.nn.softplus(-f_raw)
+    h, state = mlstm_cell_recurrent(q, k, v, i_raw, f_logsig,
+                                    state=(cache["C"], cache["n"], cache["m"]))
+    h = L.rmsnorm(p["out_norm"], h.reshape(B, 1, di))
+    h = h * jax.nn.silu(z)
+    out = L.linear(p["w_down"], h, compute_dtype)
+    C, n, m = state
+    return out, {"C": C, "n": n, "m": m, "conv": conv_state}
+
+
+def init_mlstm_cache(cfg, batch, dtype=jnp.float32):
+    di, H, hd = mlstm_dims(cfg)
+    return {"C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32),
+            "m": jnp.full((batch, H), -jnp.inf, jnp.float32),
+            "conv": jnp.zeros((batch, MLSTM_CONV_WIDTH - 1, di), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_ff(cfg):
+    ff = int(round(4 * cfg.d_model / 3))
+    return ((ff + 127) // 128) * 128
+
+
+def init_slstm_block(key, cfg):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "slstm": {
+            "wx": L.init_linear(ks[0], d, 4 * d, bias=True),
+            "rh": L.init_linear(ks[1], d, 4 * d),
+        },
+        "ff": L.init_mlp(ks[2], d, slstm_ff(cfg), "gelu"),
+    }
+
+
+def slstm_cell(p, x, state=None):
+    """x (B,S,d) sequential scan. state: (c,n,h,m) each (B,d).
+
+    The input projection is fed as scan ``xs`` (time-major), NOT indexed per
+    step from a loop-invariant array — per-step dynamic_slice of a (B,S,4d)
+    buffer and its scatter-add transpose were 75% of xlstm's whole-model
+    HBM-traffic estimate (§Perf C)."""
+    B, S, d = x.shape
+    wx = L.linear(p["wx"], x.astype(jnp.float32))  # (B,S,4d)
+    if state is None:
+        zeros = jnp.zeros((B, d), jnp.float32)
+        state = (zeros, zeros + 1e-6, zeros, zeros - 1e30)
+
+    def step(carry, wx_t):
+        c, n, h, m = carry
+        gates = wx_t + L.linear(p["rh"], h)
+        z_raw, i_raw, f_raw, o_raw = jnp.split(gates, 4, axis=-1)
+        m_new = jnp.maximum(f_raw + m, i_raw)
+        i_s = jnp.exp(i_raw - m_new)
+        f_s = jnp.exp(f_raw + m - m_new)
+        c = f_s * c + i_s * jnp.tanh(z_raw)
+        n = f_s * n + i_s
+        h = jax.nn.sigmoid(o_raw) * c / jnp.maximum(n, 1e-6)
+        return (c, n, h, m_new), h
+
+    state, hs = jax.lax.scan(step, state, wx.swapaxes(0, 1))
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype), state
+
+
+def slstm_block(p, x, cfg, compute_dtype=None, return_state=False):
+    h, (c, n, hh, m) = slstm_cell(p["slstm"], x)
+    h = sh.constrain_hidden(h)
+    out = L.mlp(p["ff"], h, "gelu", compute_dtype)
+    if return_state:
+        return out, {"c": c, "n": n, "h": hh, "m": m}
+    return out
+
+
+def slstm_block_step(p, x_t, cache, cfg, compute_dtype=None):
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    h, (c, n, hh, m) = slstm_cell(p["slstm"], x_t, state)
+    out = L.mlp(p["ff"], h, "gelu", compute_dtype)
+    return out, {"c": c, "n": n, "h": hh, "m": m}
+
+
+def init_slstm_cache(cfg, batch, dtype=jnp.float32):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z + 1e-6, "h": z, "m": z - 1e30}

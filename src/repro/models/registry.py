@@ -1,0 +1,84 @@
+"""Model facade: bind a ModelConfig to init/forward/prefill/decode functions
+and the stub modality-context specs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as C
+from repro.configs import registry as cfg_registry
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: C.ModelConfig
+
+    # ----- params -----
+    def init(self, key):
+        return T.init_params(key, self.cfg)
+
+    def abstract_params(self):
+        return T.abstract_params(self.cfg)
+
+    def count_params(self) -> int:
+        return T.count_params(self.cfg)
+
+    # ----- compute -----
+    def forward(self, params, tokens, *, ctx_embed=None, block_skip=False,
+                return_hidden=False):
+        return T.forward(params, tokens, self.cfg, ctx_embed=ctx_embed,
+                         block_skip=block_skip, return_hidden=return_hidden)
+
+    def unembed_params(self, params):
+        return params.get("unembed", params["embed"])
+
+    def prefill(self, params, tokens, *, ctx_embed=None, max_len=None):
+        return T.prefill(params, tokens, self.cfg, ctx_embed=ctx_embed,
+                         max_len=max_len)
+
+    def decode_step(self, params, token, cache):
+        return T.decode_step(params, token, cache, self.cfg)
+
+    def init_cache(self, batch, seq_len, *, pos=None, dtype=jnp.bfloat16):
+        return T.init_cache(self.cfg, batch, seq_len, pos=pos, dtype=dtype)
+
+    def abstract_cache(self, batch, seq_len, dtype=jnp.bfloat16):
+        return T.abstract_cache(self.cfg, batch, seq_len, dtype=dtype)
+
+    # ----- stub modality frontends -----
+    def needs_ctx(self) -> bool:
+        return T._needs_ctx(self.cfg)
+
+    def ctx_len(self) -> int:
+        cfg = self.cfg
+        if cfg.encoder is not None:
+            return cfg.encoder.n_frames
+        return cfg.cross_attn_context_len
+
+    def ctx_spec(self, batch: int):
+        """ShapeDtypeStruct for the stub frame/patch embeddings."""
+        if not self.needs_ctx():
+            return None
+        return jax.ShapeDtypeStruct((batch, self.ctx_len(), self.cfg.d_model),
+                                    jnp.dtype(self.cfg.compute_dtype))
+
+    def make_ctx(self, key, batch: int):
+        spec = self.ctx_spec(batch)
+        if spec is None:
+            return None
+        return jax.random.normal(key, spec.shape, jnp.float32).astype(spec.dtype)
+
+    @property
+    def padded_vocab(self) -> int:
+        return L.pad_vocab(self.cfg.vocab_size)
+
+
+def build(cfg_or_name) -> Model:
+    if isinstance(cfg_or_name, str):
+        cfg_or_name = cfg_registry.get_any(cfg_or_name)
+    return Model(cfg=cfg_or_name)

@@ -1,0 +1,442 @@
+"""Unified decoder stack for all 10 assigned architectures.
+
+Layers are grouped into repeating *super-blocks* (one block-pattern period)
+and lowered as ``lax.scan`` over stacked per-period parameters, so HLO size is
+O(period), not O(n_layers) — essential for fast multi-arch dry-run compiles.
+A non-divisible remainder is unrolled (``rem``).
+
+Three execution modes share the block definitions:
+  - ``forward``      : training/teacher-forcing over a full sequence
+  - ``prefill``      : forward + emit per-layer caches and last-token logits
+  - ``decode_step``  : one token against the caches (serve_step body)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as C
+from repro.distributed import sharding as sh
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import recurrent as R
+
+Params = Dict[str, Any]
+
+
+def _attn_spec(cfg, kind, *, block_skip=False):
+    window = cfg.sliding_window if kind == C.LOCAL_ATTN else None
+    return A.AttnSpec(causal=kind != C.ENC_ATTN, window=window,
+                      causal_block_skip=block_skip)
+
+
+# ---------------------------------------------------------------------------
+# per-block init / apply
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: C.ModelConfig, kind: str) -> Params:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p: Params = {"ln1": L.init_rmsnorm(d)}
+    if kind in (C.ATTN, C.LOCAL_ATTN, C.ENC_ATTN):
+        p["attn"] = A.init_attn(ks[0], cfg)
+    elif kind == C.CROSS_ATTN:
+        p["attn"] = A.init_attn(ks[0], cfg)
+        p["ln_x"] = L.init_rmsnorm(d)
+        p["xattn"] = A.init_attn(ks[1], cfg, cross=True)
+    elif kind == C.RGLRU:
+        p["rec"] = R.init_rglru_block(ks[0], cfg)
+    elif kind == C.MLSTM:
+        p["mlstm"] = R.init_mlstm_block(ks[0], cfg)
+        return p
+    elif kind == C.SLSTM:
+        p["slstm_blk"] = R.init_slstm_block(ks[0], cfg)
+        return p
+    else:
+        raise ValueError(kind)
+    if cfg.d_ff > 0:
+        p["ln2"] = L.init_rmsnorm(d)
+        if cfg.moe is not None and kind != C.ENC_ATTN:
+            p["moe"] = M.init_moe(ks[2], d, cfg.moe, cfg.mlp_act)
+        else:
+            p["mlp"] = L.init_mlp(ks[2], d, cfg.d_ff, cfg.mlp_act)
+    return p
+
+
+def _ffn(p, x, cfg, cdt):
+    """Second half of a block: norm + MLP/MoE + residual. Returns (x, aux)."""
+    aux = {"lb_loss": jnp.zeros((), jnp.float32), "z_loss": jnp.zeros((), jnp.float32)}
+    if "mlp" in p:
+        x = x + L.mlp(p["mlp"], L.rmsnorm(p["ln2"], x, cfg.norm_eps), cfg.mlp_act, cdt)
+    elif "moe" in p:
+        y, aux = M.moe_ffn(p["moe"], L.rmsnorm(p["ln2"], x, cfg.norm_eps), cfg.moe,
+                           cfg.mlp_act, compute_dtype=cdt)
+        x = x + y
+    return sh.constrain_hidden(x), aux
+
+
+def apply_block(p, kind, x, cfg, *, ctx=None, cdt=None, block_skip=False,
+                want_cache=None):
+    """Training/prefill application. Returns (x, aux, cache_or_None).
+    ``want_cache``: None, or an int decode-capacity for the seeded cache."""
+    cache = None
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind in (C.ATTN, C.LOCAL_ATTN, C.ENC_ATTN, C.CROSS_ATTN):
+        spec = _attn_spec(cfg, kind if kind != C.CROSS_ATTN else C.ATTN,
+                          block_skip=block_skip)
+        y, (k, v) = A.attn_forward(p["attn"], h, cfg, spec, compute_dtype=cdt,
+                                   rope=kind != C.ENC_ATTN)
+        x = x + y
+        if want_cache:
+            cache = {"self": _seed_cache(cfg, k, v, kind, want_cache)}
+        if kind == C.CROSS_ATTN:
+            hx = L.rmsnorm(p["ln_x"], x, cfg.norm_eps)
+            yx, (kx, vx) = A.attn_forward(p["xattn"], hx, cfg,
+                                          A.AttnSpec(causal=False), ctx=ctx,
+                                          compute_dtype=cdt, rope=False)
+            x = x + yx
+            if want_cache:
+                cache["cross"] = {"k": kx, "v": vx}
+    elif kind == C.RGLRU:
+        if want_cache:
+            y, rec = R.rglru_block(p["rec"], h, cfg, cdt, return_state=True)
+            cache = {"rec": rec}
+        else:
+            y = R.rglru_block(p["rec"], h, cfg, cdt)
+        x = x + y
+    elif kind == C.MLSTM:
+        if want_cache:
+            y, rec = R.mlstm_block(p["mlstm"], h, cfg, compute_dtype=cdt,
+                                   return_state=True)
+            cache = {"rec": rec}
+        else:
+            y = R.mlstm_block(p["mlstm"], h, cfg, compute_dtype=cdt)
+        return sh.constrain_hidden(x + y), _zero_aux(), cache
+    elif kind == C.SLSTM:
+        if want_cache:
+            y, rec = R.slstm_block(p["slstm_blk"], h, cfg, cdt,
+                                   return_state=True)
+            cache = {"rec": rec}
+        else:
+            y = R.slstm_block(p["slstm_blk"], h, cfg, cdt)
+        return sh.constrain_hidden(x + y), _zero_aux(), cache
+    else:
+        raise ValueError(kind)
+    x = sh.constrain_hidden(x)
+    x, aux = _ffn(p, x, cfg, cdt)
+    return x, aux, cache
+
+
+def apply_block_decode(p, kind, x, cache, pos, cfg, cdt=None):
+    """One-token decode. Returns (x, new_cache)."""
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind in (C.ATTN, C.LOCAL_ATTN, C.CROSS_ATTN):
+        window = cfg.sliding_window if kind == C.LOCAL_ATTN else None
+        y, new_self = A.attn_decode(p["attn"], h, cfg, cache["self"], pos,
+                                    window=window, compute_dtype=cdt)
+        x = x + y
+        new_cache = {"self": new_self}
+        if kind == C.CROSS_ATTN:
+            hx = L.rmsnorm(p["ln_x"], x, cfg.norm_eps)
+            yx, _ = A.attn_decode(p["xattn"], hx, cfg, cache["cross"], pos,
+                                  compute_dtype=cdt, cross=True)
+            x = x + yx
+            new_cache["cross"] = cache["cross"]
+    elif kind == C.RGLRU:
+        y, rec = R.rglru_block_step(p["rec"], h, cache["rec"], cfg, cdt)
+        x = x + y
+        new_cache = {"rec": rec}
+    elif kind == C.MLSTM:
+        y, rec = R.mlstm_block_step(p["mlstm"], h, cache["rec"], cfg, cdt)
+        return sh.constrain_hidden(x + y), {"rec": rec}
+    elif kind == C.SLSTM:
+        y, rec = R.slstm_block_step(p["slstm_blk"], h, cache["rec"], cfg, cdt)
+        return sh.constrain_hidden(x + y), {"rec": rec}
+    else:
+        raise ValueError(kind)
+    x = sh.constrain_hidden(x)
+    x, _ = _ffn(p, x, cfg, cdt)
+    return x, new_cache
+
+
+# ----- cache seeding from a prefill pass -----
+
+def _seed_cache(cfg, k, v, kind, capacity):
+    """k/v (B,S,Hkv,hd) post-RoPE -> ring/full cache with decode capacity."""
+    S = k.shape[1]
+    if kind == C.LOCAL_ATTN:
+        W = min(cfg.sliding_window, capacity)
+        n = min(W, S)
+        tail_pos = jnp.arange(S - n, S)
+        slots = jnp.mod(tail_pos, W)
+        kc = jnp.zeros((k.shape[0], W) + k.shape[2:], k.dtype).at[:, slots].set(k[:, -n:])
+        vc = jnp.zeros_like(kc).at[:, slots].set(v[:, -n:])
+        return {"k": kc, "v": vc}
+    pad = max(capacity - S, 0)
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return {"k": k, "v": v}
+
+
+def _zero_aux():
+    return {"lb_loss": jnp.zeros((), jnp.float32), "z_loss": jnp.zeros((), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# whole-model init
+# ---------------------------------------------------------------------------
+
+def grouping(cfg: C.ModelConfig) -> Tuple[int, int]:
+    """(n_periods, n_rem) for the scan grouping."""
+    period = len(cfg.block_pattern)
+    return cfg.n_layers // period, cfg.n_layers % period
+
+
+def init_params(key, cfg: C.ModelConfig) -> Params:
+    period = len(cfg.block_pattern)
+    n_periods, n_rem = grouping(cfg)
+    keys = jax.random.split(key, 8 + cfg.n_layers + (cfg.encoder.n_layers if cfg.encoder else 0))
+    ki = iter(range(len(keys)))
+    p: Params = {"embed": L.init_embed(keys[next(ki)], cfg.vocab_size, cfg.d_model),
+                 "final_norm": L.init_rmsnorm(cfg.d_model)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = L.init_embed(keys[next(ki)], cfg.vocab_size, cfg.d_model)
+    if n_periods > 0:
+        blocks = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            per = [init_block(keys[next(ki)], cfg, kind) for _ in range(n_periods)]
+            blocks[f"sub{i}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+        p["blocks"] = blocks
+    for r in range(n_rem):
+        kind = cfg.block_pattern[r]
+        p[f"rem{r}"] = init_block(keys[next(ki)], cfg, kind)
+    if cfg.encoder is not None:
+        enc = [init_block(keys[next(ki)], cfg, C.ENC_ATTN)
+               for _ in range(cfg.encoder.n_layers)]
+        p["encoder"] = {"blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+                        "final_norm": L.init_rmsnorm(cfg.d_model)}
+    return p
+
+
+def abstract_params(cfg: C.ModelConfig):
+    """ShapeDtypeStruct pytree — no allocation (for the dry-run)."""
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+
+
+def count_params(cfg: C.ModelConfig) -> int:
+    leaves = jax.tree.leaves(abstract_params(cfg))
+    return sum(int(x.size) for x in leaves)
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper) and stub modality contexts
+# ---------------------------------------------------------------------------
+
+def encode(p_enc, ctx_embed, cfg, cdt=None):
+    """Encoder stack over stub frame embeddings (B, n_frames, d)."""
+    def body(x, per_params):
+        x, _, _ = apply_block(per_params, C.ENC_ATTN, x, cfg, cdt=cdt)
+        return x, None
+    x, _ = jax.lax.scan(body, ctx_embed, p_enc["blocks"])
+    return L.rmsnorm(p_enc["final_norm"], x, cfg.norm_eps)
+
+
+def context_for(params, cfg, ctx_embed, cdt=None):
+    if cfg.encoder is not None:
+        return encode(params["encoder"], ctx_embed, cfg, cdt)
+    return ctx_embed  # vlm: precomputed patch embeddings
+
+
+# ---------------------------------------------------------------------------
+# full forward / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _cdt(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def forward(params, tokens, cfg: C.ModelConfig, *, ctx_embed=None,
+            block_skip=False, return_hidden=False):
+    """tokens (B,S) -> (logits (B,S,Vp), aux dict); with
+    ``return_hidden`` returns the final-norm hidden states instead of logits
+    (the fused-CE loss path computes chunked logits itself)."""
+    cdt = _cdt(cfg)
+    x = L.embed(params["embed"], tokens, cdt)
+    ctx = context_for(params, cfg, ctx_embed, cdt) if _needs_ctx(cfg) else None
+    period = len(cfg.block_pattern)
+    n_periods, n_rem = grouping(cfg)
+    lb = jnp.zeros((), jnp.float32)
+    zl = jnp.zeros((), jnp.float32)
+
+    if n_periods > 0:
+        def body(carry, per_params):
+            x, lb, zl = carry
+            for i, kind in enumerate(cfg.block_pattern):
+                x, aux, _ = apply_block(per_params[f"sub{i}"], kind, x, cfg,
+                                        ctx=ctx, cdt=cdt, block_skip=block_skip)
+                lb = lb + aux["lb_loss"]
+                zl = zl + aux["z_loss"]
+            return (x, lb, zl), None
+        if sh.remat_enabled():
+            body = jax.checkpoint(body)
+        (x, lb, zl), _ = jax.lax.scan(body, (x, lb, zl), params["blocks"])
+    for r in range(n_rem):
+        x, aux, _ = apply_block(params[f"rem{r}"], cfg.block_pattern[r], x, cfg,
+                                ctx=ctx, cdt=cdt, block_skip=block_skip)
+        lb = lb + aux["lb_loss"]
+        zl = zl + aux["z_loss"]
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if return_hidden:
+        return x, {"lb_loss": lb, "z_loss": zl}
+    logits = L.unembed(params.get("unembed", params["embed"]), x, cdt)
+    return logits, {"lb_loss": lb, "z_loss": zl}
+
+
+def prefill(params, tokens, cfg: C.ModelConfig, *, ctx_embed=None,
+            max_len=None):
+    """Returns (last_token_logits (B,Vp), cache). Scan over super-blocks with
+    per-layer caches emitted as scan outputs (keeps HLO O(period)).
+    ``max_len``: decode capacity of the seeded caches (default: seq_len + 64).
+    """
+    cdt = _cdt(cfg)
+    S = tokens.shape[1]
+    max_len = max_len or S + 64
+    x = L.embed(params["embed"], tokens, cdt)
+    ctx = context_for(params, cfg, ctx_embed, cdt) if _needs_ctx(cfg) else None
+    n_periods, n_rem = grouping(cfg)
+    period = len(cfg.block_pattern)
+    cache: Params = {"pos": jnp.array(S, jnp.int32)}
+    layers: Params = {}
+    if n_periods > 0:
+        def body(x, per_params):
+            caches = {}
+            for i, kind in enumerate(cfg.block_pattern):
+                x, _, lc = apply_block(per_params[f"sub{i}"], kind, x, cfg,
+                                       ctx=ctx, cdt=cdt, want_cache=max_len)
+                caches[f"sub{i}"] = lc
+            return x, caches
+        x, scan_caches = jax.lax.scan(body, x, params["blocks"])
+        layers["scan"] = scan_caches
+    for r in range(n_rem):
+        x, _, lc = apply_block(params[f"rem{r}"], cfg.block_pattern[r], x, cfg,
+                               ctx=ctx, cdt=cdt, want_cache=max_len)
+        layers[f"rem{r}"] = lc
+    cache["layers"] = layers
+    x = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = L.unembed(params.get("unembed", params["embed"]), x, cdt)[:, 0]
+    return logits, cache
+
+
+def decode_step(params, token, cache, cfg: C.ModelConfig):
+    """token (B,) int32; cache from init_cache/prefill. Returns (logits (B,Vp),
+    new_cache)."""
+    cdt = _cdt(cfg)
+    pos = cache["pos"]
+    x = L.embed(params["embed"], token[:, None], cdt)
+    period = len(cfg.block_pattern)
+    n_periods, n_rem = grouping(cfg)
+    new_cache: Params = {"pos": pos + 1}
+
+    if n_periods > 0:
+        def body(x, xs):
+            per_params, per_cache = xs
+            out_caches = {}
+            for i, kind in enumerate(cfg.block_pattern):
+                x, nc = apply_block_decode(per_params[f"sub{i}"], kind, x,
+                                           per_cache[f"sub{i}"], pos, cfg, cdt)
+                out_caches[f"sub{i}"] = nc
+            return x, out_caches
+        x, nc = jax.lax.scan(body, x, (params["blocks"], cache["layers"]["scan"]))
+        new_cache.setdefault("layers", {})["scan"] = nc
+    for r in range(n_rem):
+        li = n_periods * period + r
+        x, nc = apply_block_decode(params[f"rem{r}"], cfg.block_pattern[r], x,
+                                   cache["layers"][f"rem{r}"], pos, cfg, cdt)
+        new_cache.setdefault("layers", {})[f"rem{r}"] = nc
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params.get("unembed", params["embed"]), x, cdt)[:, 0]
+    return logits, new_cache
+
+
+# ----- cache construction -----
+
+def init_layer_cache(cfg, kind, batch, seq_len, dtype=jnp.bfloat16):
+    if kind in (C.ATTN, C.CROSS_ATTN):
+        c = {"self": A.init_kv_cache(cfg, batch, seq_len, dtype=dtype)}
+        if kind == C.CROSS_ATTN:
+            W = cfg.cross_attn_context_len
+            shape = (batch, W, cfg.n_kv_heads, cfg.head_dim)
+            c["cross"] = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        return c
+    if kind == C.LOCAL_ATTN:
+        return {"self": A.init_kv_cache(cfg, batch, seq_len,
+                                        window=cfg.sliding_window, dtype=dtype)}
+    if kind == C.RGLRU:
+        return {"rec": R.init_rglru_cache(cfg, batch, dtype)}
+    if kind == C.MLSTM:
+        return {"rec": R.init_mlstm_cache(cfg, batch, dtype)}
+    if kind == C.SLSTM:
+        return {"rec": R.init_slstm_cache(cfg, batch, dtype)}
+    raise ValueError(kind)
+
+
+def init_cache(cfg, batch, seq_len, *, pos=None, dtype=jnp.bfloat16):
+    """Decode cache with capacity seq_len, positioned at ``pos`` (default
+    seq_len-1, i.e. 'a KV cache of seq_len')."""
+    period = len(cfg.block_pattern)
+    n_periods, n_rem = grouping(cfg)
+    cache: Params = {"pos": jnp.array(seq_len - 1 if pos is None else pos, jnp.int32)}
+    layers: Params = {}
+    if n_periods > 0:
+        scan_caches = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            per = [init_layer_cache(cfg, kind, batch, seq_len, dtype)
+                   for _ in range(n_periods)]
+            scan_caches[f"sub{i}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+        layers["scan"] = scan_caches
+    for r in range(n_rem):
+        layers[f"rem{r}"] = init_layer_cache(cfg, cfg.block_pattern[r], batch,
+                                             seq_len, dtype)
+    cache["layers"] = layers
+    return cache
+
+
+def abstract_cache(cfg, batch, seq_len, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, seq_len, dtype=dtype))
+
+
+def _stack_layer_caches(cfg, layer_caches):
+    period = len(cfg.block_pattern)
+    n_periods, n_rem = grouping(cfg)
+    layers: Params = {}
+    if n_periods > 0:
+        scan_caches = {}
+        for i in range(period):
+            per = [layer_caches[p * period + i] for p in range(n_periods)]
+            scan_caches[f"sub{i}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+        layers["scan"] = scan_caches
+    for r in range(n_rem):
+        layers[f"rem{r}"] = layer_caches[n_periods * period + r]
+    return layers
+
+
+def _layer_params(params, cfg, li):
+    """Per-layer params view (slices the stacked scan params)."""
+    period = len(cfg.block_pattern)
+    n_periods, _ = grouping(cfg)
+    if li < n_periods * period:
+        pi, i = divmod(li, period)
+        return jax.tree.map(lambda x: x[pi], params["blocks"][f"sub{i}"])
+    return params[f"rem{li - n_periods * period}"]
+
+
+def _needs_ctx(cfg):
+    return cfg.encoder is not None or any(
+        k == C.CROSS_ATTN for k in cfg.block_pattern)

@@ -1,0 +1,107 @@
+"""Batched serving engine: continuous-batching style request scheduler over
+jitted prefill/decode steps, with greedy/temperature sampling.
+
+The engine keeps one fixed-capacity decode batch; finished slots are refilled
+from the request queue (fixed shapes => one compiled decode step).  This is
+the small-host twin of the decode_32k/long_500k dry-run cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    out_tokens: Optional[list] = None
+    t_submit: float = 0.0
+    t_done: float = 0.0
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefills: int = 0
+    decode_steps: int = 0
+    tokens_out: int = 0
+
+    def throughput(self, wall_s: float) -> float:
+        return self.tokens_out / max(wall_s, 1e-9)
+
+
+class ServingEngine:
+    def __init__(self, model, params, *, max_batch: int = 4,
+                 max_len: int = 256, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.rng = np.random.default_rng(seed)
+        self.stats = EngineStats()
+        cfg = model.cfg
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(
+            lambda p, t, c: model.prefill(p, t, ctx_embed=c, max_len=max_len))
+
+    def _sample(self, logits: np.ndarray, temperature: float) -> int:
+        vocab = self.model.cfg.vocab_size
+        logits = np.asarray(logits, np.float32)[:vocab]
+        if temperature <= 0:
+            return int(np.argmax(logits))
+        z = logits / temperature
+        z -= z.max()
+        p = np.exp(z)
+        p /= p.sum()
+        return int(self.rng.choice(vocab, p=p))
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Sequential-prefill + batched-decode loop (single host)."""
+        t_start = time.perf_counter()
+        queue = list(requests)
+        for r in queue:
+            r.t_submit = time.perf_counter()
+            r.out_tokens = []
+        done: List[Request] = []
+        # serve in waves of max_batch with identical prompt lengths per wave
+        while queue:
+            wave = queue[: self.max_batch]
+            queue = queue[self.max_batch:]
+            S = max(len(r.prompt) for r in wave)
+            toks = np.zeros((len(wave), S), np.int32)
+            for i, r in enumerate(wave):
+                toks[i, S - len(r.prompt):] = r.prompt  # left-pad
+            ctx = self.model.make_ctx(jax.random.key(0), len(wave))
+            logits, cache = self._prefill(self.params, jnp.asarray(toks), ctx)
+            self.stats.prefills += 1
+            logits = np.asarray(logits)
+            live = list(range(len(wave)))
+            next_tok = np.array([self._sample(logits[i], wave[i].temperature)
+                                 for i in range(len(wave))], np.int32)
+            steps = max(r.max_new_tokens for r in wave)
+            for _ in range(steps):
+                for i in live:
+                    wave[i].out_tokens.append(int(next_tok[i]))
+                live = [i for i in live
+                        if len(wave[i].out_tokens) < wave[i].max_new_tokens]
+                if not live:
+                    break
+                logits, cache = self._decode(self.params,
+                                             jnp.asarray(next_tok), cache)
+                self.stats.decode_steps += 1
+                logits = np.asarray(logits)
+                next_tok = np.array([self._sample(logits[i], wave[i].temperature)
+                                     for i in range(len(wave))], np.int32)
+            for r in wave:
+                r.t_done = time.perf_counter()
+                self.stats.tokens_out += len(r.out_tokens)
+                done.append(r)
+        self.wall_s = time.perf_counter() - t_start
+        return done

@@ -1,0 +1,98 @@
+"""Training objective: causal-LM cross-entropy with padded-vocab masking,
+router auxiliary losses, and z-loss.
+
+Two CE paths:
+  - ``fused`` (default): never materializes (tokens, vocab) logits — scans
+    over sequence chunks, computing each chunk's logits from hidden states
+    inside the (checkpointed) scan body.  This is what makes large-vocab
+    training fit HBM (see EXPERIMENTS.md §Perf iteration 1).
+  - ``naive``: full logits then softmax; the paper-faithful/naive baseline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as sh
+from repro.models import layers as L
+
+LB_LOSS_WEIGHT = 0.01
+Z_LOSS_WEIGHT = 1e-4
+_CE_TARGET_ELEMS = 1 << 24  # per-chunk global logits budget (elements)
+
+
+def _mask_padded(logits, vocab_size):
+    Vp = logits.shape[-1]
+    if Vp > vocab_size:
+        iota = jnp.arange(Vp)
+        logits = jnp.where(iota < vocab_size, logits, -1e30)
+    return logits
+
+
+def cross_entropy(logits, labels, vocab_size: int):
+    """Naive CE. logits (B,S,Vp); labels (B,S). Mean over tokens."""
+    logits = _mask_padded(logits.astype(jnp.float32), vocab_size)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+def _ce_chunk(S: int, batch: int, padded_vocab: int) -> int:
+    target = max(16, _CE_TARGET_ELEMS // max(batch * padded_vocab // 256, 1))
+    ch = 1
+    for c in range(1, S + 1):
+        if S % c == 0 and c <= target:
+            ch = c
+    return ch
+
+
+def fused_cross_entropy(hidden, unembed_w, labels, vocab_size: int,
+                        compute_dtype=jnp.bfloat16):
+    """hidden (B,S,d) -> mean CE without materializing (B,S,Vp).
+
+    Scans over sequence chunks; each chunk computes logits, its lse and the
+    label log-prob, then discards the logits.  The scan body is checkpointed
+    so backward recomputes chunk logits instead of saving them.
+    """
+    B, S, d = hidden.shape
+    Vp = unembed_w.shape[0]
+    ch = _ce_chunk(S, B, Vp)
+    nc = S // ch
+    xs = (hidden.reshape(B, nc, ch, d).swapaxes(0, 1),
+          labels.reshape(B, nc, ch).swapaxes(0, 1))
+    w = unembed_w.astype(compute_dtype)
+
+    @jax.checkpoint
+    def body(acc, xs_i):
+        x_c, y_c = xs_i
+        logits = x_c.astype(compute_dtype) @ w.T
+        logits = sh.constrain(logits, "dp", None, "tp")
+        logits = _mask_padded(logits.astype(jnp.float32), vocab_size)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, y_c[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - ll), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), xs)
+    return total / (B * S)
+
+
+def loss_fn(params, batch, model, *, block_skip=False, fused_ce=True):
+    """batch: {"tokens","labels"[, "ctx"]}. Returns (loss, metrics)."""
+    if fused_ce:
+        hidden, aux = model.forward(params, batch["tokens"],
+                                    ctx_embed=batch.get("ctx"),
+                                    block_skip=block_skip, return_hidden=True)
+        ce = fused_cross_entropy(hidden, model.unembed_params(params)["w"],
+                                 batch["labels"], model.cfg.vocab_size,
+                                 compute_dtype=jnp.dtype(model.cfg.compute_dtype))
+    else:
+        logits, aux = model.forward(params, batch["tokens"],
+                                    ctx_embed=batch.get("ctx"),
+                                    block_skip=block_skip)
+        ce = cross_entropy(logits, batch["labels"], model.cfg.vocab_size)
+    n_layers = model.cfg.n_layers
+    loss = (ce + LB_LOSS_WEIGHT * aux["lb_loss"] / max(n_layers, 1)
+            + Z_LOSS_WEIGHT * aux["z_loss"] / max(n_layers, 1))
+    return loss, {"ce": ce, "lb_loss": aux["lb_loss"], "z_loss": aux["z_loss"]}

@@ -1,0 +1,67 @@
+"""train_step builder: value_and_grad + microbatch accumulation + AdamW.
+
+The returned step function is pure (params, opt_state, batch) -> (params,
+opt_state, metrics) and is what the launcher jits with in/out shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as sh
+from repro.training import objective
+from repro.training import optimizer as opt
+
+
+def build_train_step(model, adamw: opt.AdamWConfig, *,
+                     num_microbatches: int = 1, block_skip: bool = False,
+                     fused_ce: bool = True, grad_transform=None):
+    """``grad_transform``: optional fn(grads) -> grads applied before the
+    optimizer (e.g. compressed cross-pod all-reduce)."""
+
+    def compute_grads(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            objective.loss_fn, has_aux=True)(params, batch, model,
+                                             block_skip=block_skip,
+                                             fused_ce=fused_ce)
+        metrics["loss"] = loss
+        return grads, metrics
+
+    def accumulate(params, batch):
+        if num_microbatches == 1:
+            return compute_grads(params, batch)
+        # split batch leading dim into microbatches and scan
+        def resh(x):
+            B = x.shape[0]
+            assert B % num_microbatches == 0, (B, num_microbatches)
+            return x.reshape(num_microbatches, B // num_microbatches, *x.shape[1:])
+        mb = jax.tree.map(resh, batch)
+
+        def body(carry, mb_i):
+            g_acc, m_acc = carry
+            g, m = compute_grads(params, mb_i)
+            g_acc = jax.tree.map(jnp.add, g_acc, g)
+            m_acc = jax.tree.map(jnp.add, m_acc, m)
+            return (g_acc, m_acc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        m0 = {k: jnp.zeros((), jnp.float32)
+              for k in ("loss", "ce", "lb_loss", "z_loss")}
+        (g, m), _ = jax.lax.scan(body, (g0, m0), mb)
+        inv = 1.0 / num_microbatches
+        return (jax.tree.map(lambda x: x * inv, g),
+                jax.tree.map(lambda x: x * inv, m))
+
+    def train_step(params, opt_state, batch):
+        grads, metrics = accumulate(params, batch)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        new_params, new_opt, opt_metrics = opt.apply_updates(
+            params, grads, opt_state, adamw)
+        metrics.update(opt_metrics)
+        return new_params, new_opt, metrics
+
+    return train_step

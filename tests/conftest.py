@@ -1,0 +1,31 @@
+import dataclasses
+import os
+
+import jax
+import pytest
+
+# Tests must see the real (single) device — the 512-device override belongs
+# exclusively to launch/dryrun.py.
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), \
+    "do not set the dry-run device-count flag for tests"
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)
+
+
+def small_cfg(name: str, **overrides):
+    """Reduced, fp32-compute config for numerics tests."""
+    from repro.configs import registry as cr
+    cfg = cr.reduced(name)
+    return dataclasses.replace(cfg, compute_dtype="float32", **overrides)
+
+
+@pytest.fixture(scope="session")
+def calibration_store():
+    """Session-cached host calibration (fast budget)."""
+    from repro.core import calibrate
+    return calibrate.load_or_calibrate(
+        os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                     "calibration_cpu_host.json"), verbose=False)

@@ -1,0 +1,71 @@
+import pytest
+
+from repro.configs import base as C
+from repro.configs import registry as cr
+from repro.configs import shapes as shp
+
+
+def test_all_ten_archs_present():
+    assert len(cr.ARCH_NAMES) == 10
+    families = {cr.get(n).family for n in cr.ARCH_NAMES}
+    assert families == {"ssm", "moe", "dense", "audio", "hybrid", "vlm"}
+
+
+def test_cell_count_and_long_context_skips():
+    cells = shp.cells(cr.ARCH_NAMES)
+    # 10 archs x 4 shapes - 8 long_500k skips (full-attention archs)
+    assert len(cells) == 32
+    long_archs = {a for a, s in cells if s.name == "long_500k"}
+    assert long_archs == {"xlstm-1.3b", "recurrentgemma-2b"}
+
+
+@pytest.mark.parametrize("name", cr.ARCH_NAMES)
+def test_exact_assigned_dims(name):
+    cfg = cr.get(name)
+    expected = {
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+        "llama4-scout-17b-16e": (48, 5120, 40, 8, 8192, 202048),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "gemma-7b": (28, 3072, 16, 16, 24576, 256000),
+        "qwen2-0.5b": (24, 896, 14, 2, 4864, 151936),
+        "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+        "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+    }[name]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected
+
+
+def test_moe_configs():
+    l4 = cr.get("llama4-scout-17b-16e").moe
+    assert (l4.num_experts, l4.top_k) == (16, 1)
+    ms = cr.get("moonshot-v1-16b-a3b").moe
+    assert (ms.num_experts, ms.top_k) == (64, 6)
+
+
+def test_block_patterns():
+    assert cr.get("recurrentgemma-2b").block_pattern == (C.RGLRU, C.RGLRU, C.LOCAL_ATTN)
+    assert cr.get("xlstm-1.3b").block_pattern.count(C.SLSTM) == 1
+    assert len(cr.get("xlstm-1.3b").block_pattern) == 8
+    vk = cr.get("llama-3.2-vision-11b").layer_kinds
+    assert sum(1 for k in vk if k == C.CROSS_ATTN) == 8
+
+
+@pytest.mark.parametrize("name", cr.ARCH_NAMES)
+def test_reduced_config_valid(name):
+    cfg = cr.reduced(name)
+    assert cfg.n_heads % cfg.n_kv_heads == 0
+    assert cfg.q_per_kv == cr.get(name).q_per_kv  # GQA ratio preserved
+    assert cfg.vocab_size <= 1024
+    assert cfg.param_count() > 0
+
+
+def test_layer_kinds_repeat():
+    cfg = cr.get("recurrentgemma-2b")
+    kinds = cfg.layer_kinds
+    assert len(kinds) == 26
+    assert kinds[:3] == (C.RGLRU, C.RGLRU, C.LOCAL_ATTN)
+    assert kinds[24:] == (C.RGLRU, C.RGLRU)

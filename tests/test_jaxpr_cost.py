@@ -1,0 +1,72 @@
+"""Trip-count-exact cost accounting (core/jaxpr_cost.py)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import jaxpr_cost as jc
+
+
+def test_scan_multiplies_trip_count():
+    a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def loop(x):
+        return jax.lax.scan(lambda c, _: (c @ c, None), x, None, length=7)[0]
+
+    c = jc.cost_of(loop, a)
+    assert c["flops"] == pytest.approx(7 * 2 * 64 ** 3, rel=1e-6)
+
+
+def test_dot_general_flops_batched():
+    a = jax.ShapeDtypeStruct((4, 32, 16), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 16, 8), jnp.float32)
+    c = jc.cost_of(lambda a, b: jnp.einsum("bmk,bkn->bmn", a, b), a, b)
+    assert c["flops"] == pytest.approx(2 * 4 * 32 * 8 * 16, rel=1e-6)
+
+
+def test_nested_scan_composes():
+    a = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+
+    def inner(x):
+        return jax.lax.scan(lambda c, _: (c @ c, None), x, None, length=3)[0]
+
+    def outer(x):
+        return jax.lax.scan(lambda c, _: (inner(c), None), x, None, length=5)[0]
+
+    c = jc.cost_of(outer, a)
+    assert c["flops"] == pytest.approx(15 * 2 * 32 ** 3, rel=1e-6)
+
+
+def test_transcendentals_tracked():
+    a = jax.ShapeDtypeStruct((100,), jnp.float32)
+    c = jc.cost_of(lambda x: jnp.exp(x) + jnp.tanh(x), a)
+    assert c["transcendentals"] == pytest.approx(200)
+
+
+def test_remat_recompute_counted():
+    """jax.checkpoint backward recompute must appear in the VJP cost."""
+    a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def f(x):
+        return jnp.sum(jax.checkpoint(lambda y: jnp.tanh(y @ y))(x))
+
+    c_fwd = jc.cost_of(f, a)
+    c_grad = jc.cost_of(jax.grad(f), a)
+    # grad includes fwd + recomputed fwd + bwd matmuls: > 2.5x fwd flops
+    assert c_grad["flops"] > 2.5 * c_fwd["flops"]
+
+
+def test_train_step_flops_near_6nd():
+    """Full train step: jaxpr flops within 3x of 6ND (remat+attention extra)."""
+    from repro.configs import registry as cr
+    from repro.models import registry as mr
+    from repro.training import optimizer as opt, step as tstep
+    cfg = cr.reduced("yi-6b", n_layers=2)
+    model = mr.build(cfg)
+    params = model.abstract_params()
+    B, S = 8, 128
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    step = tstep.build_train_step(model, opt.AdamWConfig())
+    c = jc.cost_of(step, params, opt.abstract_opt_state(params), batch)
+    nd6 = 6 * model.count_params() * B * S
+    assert nd6 < c["flops"] < 4 * nd6

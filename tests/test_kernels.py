@@ -1,0 +1,103 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + properties.
+All kernels run in interpret mode (CPU) — same code path targets TPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import flash_attention as fk
+from repro.kernels import matmul as mk
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 1e-4), (jnp.bfloat16, 8e-2)])
+@pytest.mark.parametrize("cfg", [mk.MatmulConfig(128, 128, 128),
+                                 mk.MatmulConfig(8, 128, 128),
+                                 mk.MatmulConfig(256, 256, 256)])
+def test_matmul_kernel_sweep(cfg, dtype, atol):
+    for (M, K, N) in [(cfg.bm, cfg.bk, cfg.bn),
+                      (2 * cfg.bm, 2 * cfg.bk, cfg.bn),
+                      (cfg.bm, 3 * cfg.bk, 2 * cfg.bn)]:
+        a = jax.random.normal(jax.random.key(0), (M, K)).astype(dtype)
+        b = jax.random.normal(jax.random.key(1), (K, N)).astype(dtype)
+        o = mk.matmul_kernel(a, b, cfg, interpret=True)
+        expect = ref.matmul_ref(a, b)
+        np.testing.assert_allclose(
+            np.asarray(o, np.float32), np.asarray(expect, np.float32),
+            atol=atol * np.sqrt(K), rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 5), st.integers(1, 6))
+def test_matmul_ops_ragged_shapes(mi, ni, ki):
+    """ops.matmul pads ragged shapes; result must equal the jnp oracle."""
+    M, N, K = 37 * mi, 23 * ni, 19 * ki
+    a = jax.random.normal(jax.random.key(mi), (M, K), jnp.float32)
+    b = jax.random.normal(jax.random.key(ni), (K, N), jnp.float32)
+    o = ops.matmul(a, b, mk.MatmulConfig(128, 128, 128), interpret=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(ref.matmul_ref(a, b)),
+                               atol=1e-3)
+
+
+def test_select_config_feasible_and_deterministic():
+    for (m, n, k) in [(8, 8, 8), (4096, 4096, 4096), (1, 151936, 896),
+                      (1000000, 128, 64)]:
+        c1 = mk.select_config(m, n, k)
+        c2 = mk.select_config(m, n, k)
+        assert c1 == c2
+        assert c1.vmem_bytes() <= mk.VMEM_BUDGET
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("cfg", [fk.FlashConfig(128, 128), fk.FlashConfig(128, 256)])
+def test_flash_kernel_sweep(cfg, causal):
+    BH, S, hd = 3, 256, 64
+    q = jax.random.normal(jax.random.key(0), (BH, S, hd), jnp.float32)
+    k = jax.random.normal(jax.random.key(1), (BH, S, hd), jnp.float32)
+    v = jax.random.normal(jax.random.key(2), (BH, S, hd), jnp.float32)
+    o = fk.flash_attention_kernel(q, k, v, cfg, causal=causal, interpret=True)
+    q4 = q.reshape(1, BH, S, hd).transpose(0, 2, 1, 3)
+    k4 = k.reshape(1, BH, S, hd).transpose(0, 2, 1, 3)
+    v4 = v.reshape(1, BH, S, hd).transpose(0, 2, 1, 3)
+    oref = ref.attention_ref(q4, k4, v4, causal=causal)
+    oref = oref.transpose(0, 2, 1, 3).reshape(BH, S, hd)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(oref), atol=2e-5)
+
+
+def test_flash_kernel_window():
+    cfg = fk.FlashConfig(128, 128)
+    BH, S, hd = 2, 256, 32
+    q = jax.random.normal(jax.random.key(0), (BH, S, hd), jnp.float32)
+    o = fk.flash_attention_kernel(q, q, q, cfg, causal=True, window=64,
+                                  interpret=True)
+    q4 = q.reshape(1, BH, S, hd).transpose(0, 2, 1, 3)
+    oref = ref.attention_ref(q4, q4, q4, causal=True, window=64)
+    oref = oref.transpose(0, 2, 1, 3).reshape(BH, S, hd)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(oref), atol=2e-5)
+
+
+def test_flash_ops_gqa_matches_model_path():
+    """kernels.ops.flash_attention == models.attention.flash_attention."""
+    from repro.models import attention as A
+    B, S, Hkv, G, hd = 1, 256, 2, 2, 32
+    q = jax.random.normal(jax.random.key(0), (B, S, Hkv * G, hd), jnp.float32)
+    k = jax.random.normal(jax.random.key(1), (B, S, Hkv, hd), jnp.float32)
+    v = jax.random.normal(jax.random.key(2), (B, S, Hkv, hd), jnp.float32)
+    o_kernel = ops.flash_attention(q, k, v, fk.FlashConfig(128, 128),
+                                   causal=True, interpret=True)
+    o_model = A.flash_attention(q, k, v, spec=A.AttnSpec(causal=True, kv_block=128))
+    np.testing.assert_allclose(np.asarray(o_kernel), np.asarray(o_model),
+                               atol=3e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from([16, 24, 40, 100]), st.sampled_from([16, 32, 64]))
+def test_matmul_property_linearity(m, k):
+    """Property: kernel(a, 2b) == 2 kernel(a, b) (linearity survives tiling)."""
+    cfg = mk.MatmulConfig(8, 128, 128)
+    a = jax.random.normal(jax.random.key(m), (m, k), jnp.float32)
+    b = jax.random.normal(jax.random.key(k), (k, 48), jnp.float32)
+    o1 = ops.matmul(a, b, cfg, interpret=True)
+    o2 = ops.matmul(a, 2 * b, cfg, interpret=True)
+    np.testing.assert_allclose(np.asarray(o2), 2 * np.asarray(o1), atol=1e-4)

@@ -1,0 +1,100 @@
+"""Per-arch smoke tests (reduced configs) + prefill/decode consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import registry as cr
+from repro.models import registry as mr
+from tests.conftest import small_cfg
+
+
+@pytest.mark.parametrize("name", cr.ARCH_NAMES)
+def test_arch_smoke_forward_and_trainstep(name):
+    """One forward + one train step on CPU: output shapes + no NaNs."""
+    cfg = small_cfg(name)
+    model = mr.build(cfg)
+    params = model.init(jax.random.key(0))
+    B, S = 2, 16
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    ctx = model.make_ctx(jax.random.key(2), B)
+    logits, aux = model.forward(params, tokens, ctx_embed=ctx)
+    assert logits.shape == (B, S, model.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+    from repro.training import objective, optimizer as opt
+    batch = {"tokens": tokens, "labels": tokens}
+    if ctx is not None:
+        batch["ctx"] = ctx
+    (loss, m), grads = jax.value_and_grad(objective.loss_fn, has_aux=True)(
+        params, batch, model)
+    assert bool(jnp.isfinite(loss))
+    gnorm = opt.global_norm(grads)
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
+    new_p, _, _ = opt.apply_updates(params, grads, opt.init_opt_state(params),
+                                    opt.AdamWConfig())
+    assert all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(new_p))
+
+
+@pytest.mark.parametrize("name", ["qwen2-0.5b", "gemma-7b", "moonshot-v1-16b-a3b",
+                                  "recurrentgemma-2b", "xlstm-1.3b",
+                                  "whisper-small", "llama-3.2-vision-11b"])
+def test_prefill_decode_matches_forward(name):
+    cfg = small_cfg(name)
+    model = mr.build(cfg)
+    params = model.init(jax.random.key(0))
+    B, S = 2, 12
+    tokens = jax.random.randint(jax.random.key(1), (B, S + 2), 0, cfg.vocab_size)
+    ctx = model.make_ctx(jax.random.key(2), B)
+    full, _ = model.forward(params, tokens, ctx_embed=ctx)
+    lg, cache = model.prefill(params, tokens[:, :S], ctx_embed=ctx)
+    scale = float(jnp.max(jnp.abs(full)))
+    assert float(jnp.max(jnp.abs(lg - full[:, S - 1]))) / scale < 3e-5
+    for t in range(2):
+        lg, cache = model.decode_step(params, tokens[:, S + t], cache)
+        err = float(jnp.max(jnp.abs(lg - full[:, S + t]))) / scale
+        assert err < 5e-5, (t, err)
+
+
+def test_decode_cache_from_scratch():
+    """init_cache + decode from position 0 matches forward token-by-token."""
+    cfg = small_cfg("qwen2-0.5b", n_layers=2)
+    model = mr.build(cfg)
+    params = model.init(jax.random.key(0))
+    B, S = 1, 6
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    full, _ = model.forward(params, tokens)
+    cache = model.init_cache(B, 16, pos=0, dtype=jnp.float32)
+    scale = float(jnp.max(jnp.abs(full)))
+    for t in range(S):
+        lg, cache = model.decode_step(params, tokens[:, t], cache)
+        err = float(jnp.max(jnp.abs(lg - full[:, t]))) / scale
+        assert err < 3e-5, (t, err)
+
+
+def test_ring_buffer_local_attention_decode():
+    """recurrentgemma decode beyond the window must match forward exactly
+    (ring buffer correctness)."""
+    cfg = small_cfg("recurrentgemma-2b", n_layers=3)
+    cfg = dataclasses.replace(cfg, sliding_window=8)
+    model = mr.build(cfg)
+    params = model.init(jax.random.key(0))
+    B, S = 1, 20  # > 2x window
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    full, _ = model.forward(params, tokens)
+    cache = model.init_cache(B, 32, pos=0, dtype=jnp.float32)
+    scale = float(jnp.max(jnp.abs(full)))
+    for t in range(S):
+        lg, cache = model.decode_step(params, tokens[:, t], cache)
+        err = float(jnp.max(jnp.abs(lg - full[:, t]))) / scale
+        assert err < 5e-5, (t, err)
+
+
+def test_full_config_abstract_params_no_allocation():
+    """Full llama4-scout (107B) abstract init must be instant and count right."""
+    model = mr.build(cr.get("llama4-scout-17b-16e"))
+    n = model.count_params()
+    assert 90e9 < n < 120e9
+    leaves = jax.tree.leaves(model.abstract_params())
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)

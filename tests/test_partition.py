@@ -1,0 +1,45 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partition as P
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(0.01, 10.0), min_size=2, max_size=12))
+def test_two_device_split_is_optimal(lats):
+    plan = P.plan_two_devices(lats, lats)
+    # brute force
+    best = min(max(sum(lats[:s]), sum(lats[s:])) for s in range(len(lats) + 1))
+    assert plan.bottleneck == pytest.approx(best)
+
+
+def test_two_device_heterogeneous():
+    # B is 2x faster -> split point moves later
+    lats = [1.0] * 10
+    plan_eq = P.plan_two_devices(lats, lats)
+    plan_fast_b = P.plan_two_devices(lats, [0.5] * 10)
+    assert plan_fast_b.split_point <= plan_eq.split_point
+    assert plan_fast_b.bottleneck <= plan_eq.bottleneck + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(0.1, 5.0), min_size=4, max_size=10),
+       st.integers(2, 4))
+def test_plan_stages_vs_bruteforce(lats, n):
+    import itertools
+    plan = P.plan_stages(lats, n)
+    L = len(lats)
+    best = float("inf")
+    for cuts in itertools.combinations(range(1, L), min(n - 1, L - 1)):
+        bounds = [0, *cuts, L]
+        best = min(best, max(sum(lats[a:b]) for a, b in zip(bounds, bounds[1:])))
+    assert plan.bottleneck <= best * 1.0001
+
+
+def test_plan_stages_boundaries_monotone():
+    plan = P.plan_stages([1, 2, 3, 4, 5, 6], 3)
+    b = plan.boundaries
+    assert b[0] == 0 and b[-1] == 6
+    assert all(x <= y for x, y in zip(b, b[1:]))
+    assert sum(plan.stage_times) == pytest.approx(21)

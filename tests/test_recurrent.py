@@ -1,0 +1,116 @@
+"""Recurrent blocks: chunkwise/parallel forms vs step recurrences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import recurrent as R
+
+
+def _rand(shape, key, scale=1.0):
+    return jax.random.normal(jax.random.key(key), shape, jnp.float32) * scale
+
+
+def test_conv1d_causal_matches_step():
+    p = R.init_conv1d(jax.random.key(0), 4, 8)
+    x = _rand((2, 10, 8), 1)
+    y = R.conv1d_causal(p, x)
+    state = jnp.zeros((2, 3, 8))
+    outs = []
+    for t in range(10):
+        yt, state = R.conv1d_step(p, x[:, t:t + 1], state)
+        outs.append(yt)
+    y2 = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), atol=1e-6)
+
+
+def test_mlstm_chunkwise_matches_recurrent():
+    B, S, H, hd = 2, 32, 2, 8
+    q = _rand((B, S, H, hd), 0)
+    k = _rand((B, S, H, hd), 1) / np.sqrt(hd)
+    v = _rand((B, S, H, hd), 2)
+    i_raw = _rand((B, S, H), 3)
+    f_raw = _rand((B, S, H), 4) + 2.0
+    f_logsig = -jax.nn.softplus(-f_raw)
+    h_rec, (C1, n1, m1) = R.mlstm_cell_recurrent(q, k, v, i_raw, f_logsig)
+    for chunk in (8, 16, 32):
+        h_chk, (C2, n2, m2) = R.mlstm_cell_chunkwise(q, k, v, i_raw, f_logsig,
+                                                     chunk=chunk)
+        np.testing.assert_allclose(np.asarray(h_rec), np.asarray(h_chk),
+                                   atol=2e-4, rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(n1), np.asarray(n2), atol=1e-4,
+                                   rtol=1e-3)
+
+
+def test_mlstm_block_step_matches_block():
+    from tests.conftest import small_cfg
+    cfg = small_cfg("xlstm-1.3b", n_layers=1)
+    p = R.init_mlstm_block(jax.random.key(0), cfg)
+    B, S = 1, 8
+    x = _rand((B, S, cfg.d_model), 1, 0.5)
+    y_full = R.mlstm_block(p, x, cfg, chunk=4)
+    cache = R.init_mlstm_cache(cfg, B, jnp.float32)
+    outs = []
+    for t in range(S):
+        yt, cache = R.mlstm_block_step(p, x[:, t:t + 1], cache, cfg)
+        outs.append(yt)
+    y_steps = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_steps),
+                               atol=5e-4, rtol=2e-3)
+
+
+def test_rglru_scan_matches_step():
+    from tests.conftest import small_cfg
+    cfg = small_cfg("recurrentgemma-2b", n_layers=1)
+    p = R.init_rglru_block(jax.random.key(0), cfg)
+    B, S = 2, 12
+    dl = cfg.lru_dim or cfg.d_model
+    xb = _rand((B, S, dl), 1)
+    h_par = R.rglru_scan(p, xb)
+    h = jnp.zeros((B, dl))
+    outs = []
+    for t in range(S):
+        yt, h = R.rglru_step(p, xb[:, t:t + 1], h)
+        outs.append(yt)
+    h_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(h_par), np.asarray(h_seq), atol=1e-5)
+
+
+def test_rglru_block_step_matches_block():
+    from tests.conftest import small_cfg
+    cfg = small_cfg("recurrentgemma-2b", n_layers=1)
+    p = R.init_rglru_block(jax.random.key(0), cfg)
+    B, S = 1, 10
+    x = _rand((B, S, cfg.d_model), 2, 0.5)
+    y_full = R.rglru_block(p, x, cfg)
+    cache = R.init_rglru_cache(cfg, B, jnp.float32)
+    outs = []
+    for t in range(S):
+        yt, cache = R.rglru_block_step(p, x[:, t:t + 1], cache, cfg)
+        outs.append(yt)
+    np.testing.assert_allclose(np.asarray(y_full),
+                               np.asarray(jnp.concatenate(outs, 1)), atol=2e-5)
+
+
+def test_slstm_stability_long_sequence():
+    """Exponential gating with stabilizer must not overflow over 200 steps."""
+    from tests.conftest import small_cfg
+    cfg = small_cfg("xlstm-1.3b", n_layers=1)
+    p = R.init_slstm_block(jax.random.key(0), cfg)
+    x = _rand((1, 200, cfg.d_model), 1, 2.0)
+    h, state = R.slstm_cell(p["slstm"], x)
+    assert bool(jnp.isfinite(h).all())
+    assert bool(jnp.isfinite(state[0]).all())
+
+
+def test_rglru_decay_bounds():
+    """RG-LRU a_t in (0,1): state cannot blow up."""
+    from tests.conftest import small_cfg
+    cfg = small_cfg("recurrentgemma-2b", n_layers=1)
+    p = R.init_rglru_block(jax.random.key(0), cfg)
+    dl = cfg.lru_dim or cfg.d_model
+    xb = _rand((1, 64, dl), 5, 3.0)
+    a, b = R._rglru_gates(p, xb)
+    assert float(jnp.max(a)) < 1.0 and float(jnp.min(a)) > 0.0
+    h = R.rglru_scan(p, xb)
+    assert bool(jnp.isfinite(h).all())

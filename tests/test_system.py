@@ -1,0 +1,64 @@
+"""End-to-end behaviour tests: the launcher CLIs + the paper's two
+applications running against the real calibration."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.launch import plan as plan_cli
+from repro.launch import serve as serve_cli
+from repro.launch import train as train_cli
+
+
+def test_train_cli_end_to_end_with_failure(tmp_path):
+    args = train_cli.parse_args([
+        "--arch", "qwen2-0.5b", "--reduced", "--steps", "10", "--batch", "4",
+        "--seq", "32", "--fail-at", "5", "--ckpt-every", "2",
+        "--ckpt-dir", str(tmp_path), "--sync-ckpt"])
+    res = train_cli.run(args)
+    assert res["restarts"] == 1
+    assert res["final_loss"] < res["first_loss"]
+    assert len(res["losses"]) == 10
+
+
+def test_serve_cli(capsys):
+    args = serve_cli.parse_args(["--arch", "qwen2-0.5b", "--reduced",
+                                 "--requests", "3", "--prompt-len", "8",
+                                 "--max-new", "4", "--max-batch", "2"])
+    out = serve_cli.run(args)
+    assert out["tokens_out"] == 12
+    assert out["throughput_tok_s"] > 0
+
+
+def test_plan_cli_two_devices(calibration_store):
+    args = plan_cli.parse_args(["--arch", "yi-6b", "--reduced",
+                                "--batch", "2", "--seq", "16",
+                                "--device-b-scale", "1.0"])
+    plan = plan_cli.run(args)
+    # homogeneous devices -> split near the middle
+    L = plan.boundaries[-1]
+    assert abs(plan.split_point - L / 2) <= 1
+
+
+def test_partition_app_better_predictions_better_split(calibration_store):
+    """The paper's §IV-D1 claim in miniature: an accurate predictor's split
+    has a lower TRUE bottleneck than a 30%-biased predictor's split."""
+    from repro.core import calibrate
+    from repro.core.partition import plan_two_devices
+    from repro.core.predictor import PM2Lat
+    from repro.configs import registry as cr
+
+    pred = PM2Lat(calibration_store, calibrate.device_name())
+    cfg = cr.reduced("yi-6b", n_layers=8)
+    true_lat = pred.predict_blocks(cfg, 2, 32)   # ground truth proxy
+    rng = np.random.default_rng(0)
+    biased = [t * (1 + 0.5 * rng.uniform(-1, 1)) for t in true_lat]
+
+    good = plan_two_devices(true_lat, true_lat)
+    bad = plan_two_devices(biased, biased)
+
+    def true_bottleneck(split):
+        return max(sum(true_lat[:split]), sum(true_lat[split:]))
+
+    assert true_bottleneck(good.split_point) <= true_bottleneck(bad.split_point) + 1e-12

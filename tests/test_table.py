@@ -1,0 +1,98 @@
+"""ThroughputTable: the paper's Eq (1)/(2) + rational fit + serialization."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.table import KernelKey, TableStore, ThroughputTable
+
+
+def _table(anchors=None):
+    anchors = anchors or {32: 1e9, 64: 2e9, 128: 3.5e9, 256: 5e9, 512: 6e9,
+                          1024: 6.5e9, 2048: 6.8e9, 4096: 6.9e9, 8192: 7e9}
+    k_max = max(anchors)
+    dur = 2.0 * 512 * 512 * k_max / anchors[k_max]
+    return ThroughputTable(KernelKey("matmul", "xla_default@512x512",
+                                     "float32", "test"), anchors,
+                           org_dur=dur, k_max=k_max, ref_grid=(512, 512),
+                           ref_tiles=1)
+
+
+def test_eq2_exact_at_anchors():
+    t = _table()
+    for k, thr in t.anchors.items():
+        assert t.interpolate_throughput(k) == pytest.approx(thr)
+
+
+def test_eq2_midpoint():
+    t = _table()
+    # halfway between 512 (6e9) and 1024 (6.5e9): 768 -> 6.25e9
+    assert t.interpolate_throughput(768) == pytest.approx(6.25e9)
+
+
+def test_eq2_clamps_out_of_range():
+    t = _table()
+    assert t.interpolate_throughput(8) == t.anchors[32]
+    assert t.interpolate_throughput(1 << 20) == t.anchors[8192]
+
+
+def test_eq1_consistency_at_kmax():
+    """Eq(1) at K=k_max must reproduce the measured duration exactly."""
+    t = _table()
+    assert t.duration_at_ref(t.k_max) == pytest.approx(t.org_dur)
+
+
+def test_eq1_flops_throughput_identity():
+    """Eq(1)+area scaling == flops/throughput (the SIMT linearity claim)."""
+    t = _table()
+    for k in (100, 768, 3000):
+        d = t.predict(512, 512, k)
+        flops = 2 * 512 * 512 * k
+        assert d == pytest.approx(flops / t.interpolate_throughput(k), rel=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(33, 8191))
+def test_interpolation_bounded_by_anchor_neighbors(k):
+    t = _table()
+    ks = sorted(t.anchors)
+    lo = max(a for a in ks if a <= k)
+    hi = min(a for a in ks if a >= k)
+    thr = t.interpolate_throughput(k)
+    assert min(t.anchors[lo], t.anchors[hi]) - 1e-6 <= thr <= max(
+        t.anchors[lo], t.anchors[hi]) + 1e-6
+
+
+def test_rational_fit_recovers_rational_data():
+    """Data generated from y=(aK+b)/(cK+d) is fit near-exactly (the paper's
+    observed trend, Fig. 4)."""
+    a, b, c, d = 7e9, 1e10, 1.0, 900.0
+    ks = [32, 64, 128, 256, 512, 1024, 2048, 4096, 8192]
+    anchors = {k: (a * k + b) / (c * k + d) for k in ks}
+    t = _table(anchors)
+    for k in (100, 700, 3000, 6000):
+        expect = (a * k + b) / (c * k + d)
+        got = t.rational_throughput(k)
+        assert got == pytest.approx(expect, rel=0.02)
+
+
+def test_store_roundtrip(tmp_path):
+    t = _table()
+    st_ = TableStore()
+    st_.add(t)
+    st_.memory_model = {"coef": [1e-10, 0, 0, 1e-6], "train_rel_err": 0.1}
+    path = str(tmp_path / "cal.json")
+    st_.save(path)
+    st2 = TableStore.load(path)
+    t2 = st2.get(t.key)
+    assert t2 is not None
+    assert t2.anchors == t.anchors
+    assert t2.ref_grid == t.ref_grid
+    assert st2.memory_model["coef"][0] == pytest.approx(1e-10)
+
+
+def test_wave_scaling_partial_tiles():
+    """Partially-filled tiles cost full tiles (paper's partial-block rule)."""
+    t = _table()
+    d_full = t.predict(512, 512, 1024, tile=(128, 128))   # 16 tiles
+    d_partial = t.predict(513, 512, 1024, tile=(128, 128))  # 20 tiles (5x4)
+    assert d_partial == pytest.approx(d_full * 20 / 16)
