@@ -1,6 +1,7 @@
-"""NAS preprocessing speed (paper §IV-D2): µs/prediction, PM2Lat vectorized
-Eq(1)/(2) vs NeuSight MLP, and extrapolated wall time for the paper's
-400M-config MatMul grid."""
+"""NAS preprocessing speed (paper §IV-D2): µs/prediction for the vectorized
+batch engine — the matmul search grid (kernel-selection oracle + Eq(1)/(2))
+and the FULL-MODEL grid path (`predict_model_grid`) — vs the NeuSight MLP,
+with extrapolated wall time for the paper's 400M-config MatMul grid."""
 from __future__ import annotations
 
 import time
@@ -8,35 +9,79 @@ import time
 import numpy as np
 
 from benchmarks import common
+from repro.configs import registry as cr
 from repro.core import calibrate
+from repro.core.batch_predict import BatchPredictor
 from repro.core.nas import NASGrid, precompute_cache
 
+MODEL_GRID_BATCHES = (1, 2, 4, 8, 16, 32, 64, 128)
+MODEL_GRID_SEQS = (64, 128, 256, 512, 1024)
 
-def run(limit=1_000_000, verbose=True):
+
+def run(limit=1_000_000, verbose=True, include_neusight=True,
+        include_model_grid=True):
     store = common.get_calibration()
     dev = calibrate.device_name()
     grid = NASGrid()
+    bp = BatchPredictor(store, dev)
 
+    # --- matmul search grid through the batch engine ---
     cache, total_s, us_per, n = precompute_cache(store, dev, grid=grid,
-                                                 limit=limit)
+                                                 limit=limit, predictor=bp)
     common.emit("nas/pm2lat_us_per_prediction", us_per, f"{us_per:.4f}")
+    common.emit("nas/n_predictions", 0.0, str(n))
     full_grid_hours = grid.n_configs * us_per / 1e6 / 3600
     common.emit("nas/pm2lat_full_grid_hours", 0.0, f"{full_grid_hours:.2f}")
     common.emit("nas/grid_size", 0.0, str(grid.n_configs))
 
-    # NeuSight per-prediction cost (jit'd MLP, per-call as NAS would use it)
-    ns = common.get_neusight(store)
-    reps = 200
-    t0 = time.perf_counter()
-    for i in range(reps):
-        ns.predict_matmul(512 + i, 512, 512)
-    ns_us = (time.perf_counter() - t0) / reps * 1e6
-    common.emit("nas/neusight_us_per_prediction", ns_us, f"{ns_us:.1f}")
-    common.emit("nas/neusight_full_grid_hours", 0.0,
-                f"{grid.n_configs * ns_us / 1e6 / 3600:.1f}")
-    common.emit("nas/speedup", 0.0, f"{ns_us / us_per:.0f}x")
-    return {"pm2lat_us": us_per, "neusight_us": ns_us, "n_sampled": n}
+    out = {"pm2lat_us": us_per, "n_sampled": n}
+
+    # --- full-model grid path: whole-model latency over (batch, seq) ---
+    if include_model_grid:
+        cfg = cr.get_any("qwen3-mini")
+        # first call compiles/caches the memory-op proxy features; the timed
+        # second call is the steady-state sweep cost a NAS loop would see
+        bp.predict_model_grid(cfg, MODEL_GRID_BATCHES, MODEL_GRID_SEQS)
+        t0 = time.perf_counter()
+        mg = bp.predict_model_grid(cfg, MODEL_GRID_BATCHES, MODEL_GRID_SEQS)
+        mg_s = time.perf_counter() - t0
+        n_models = mg.size
+        from repro.core import opgraph as og
+        n_matmul_ops = sum(1 for o in og.enumerate_ops(cfg, 1, 64)
+                           if o.kind in ("matmul", "bmm"))
+        us_model = mg_s / n_models * 1e6
+        common.emit("nas/model_grid_us_per_model", us_model, f"{us_model:.2f}")
+        common.emit("nas/model_grid_models", 0.0, str(n_models))
+        common.emit("nas/model_grid_matmul_configs", 0.0,
+                    str(n_models * n_matmul_ops))
+        out.update({"model_grid_us_per_model": us_model,
+                    "model_grid_models": int(n_models)})
+
+    # --- NeuSight per-prediction cost (jit'd MLP, per-call as NAS uses it) ---
+    if include_neusight:
+        ns = common.get_neusight(store)
+        reps = 200
+        t0 = time.perf_counter()
+        for i in range(reps):
+            ns.predict_matmul(512 + i, 512, 512)
+        ns_us = (time.perf_counter() - t0) / reps * 1e6
+        common.emit("nas/neusight_us_per_prediction", ns_us, f"{ns_us:.1f}")
+        common.emit("nas/neusight_full_grid_hours", 0.0,
+                    f"{grid.n_configs * ns_us / 1e6 / 3600:.1f}")
+        common.emit("nas/speedup", 0.0, f"{ns_us / us_per:.0f}x")
+        out["neusight_us"] = ns_us
+    return out
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--limit", type=int, default=1_000_000,
+                    help="max sampled matmul configs from the NAS grid")
+    ap.add_argument("--skip-neusight", action="store_true",
+                    help="skip training/timing the NeuSight baseline")
+    ap.add_argument("--skip-model-grid", action="store_true",
+                    help="skip the full-model predict_model_grid timing")
+    args = ap.parse_args()
+    run(limit=args.limit, include_neusight=not args.skip_neusight,
+        include_model_grid=not args.skip_model_grid)

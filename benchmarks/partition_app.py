@@ -15,8 +15,8 @@ import numpy as np
 from benchmarks import common
 from repro.configs import registry as cr
 from repro.core import calibrate, opgraph as og, profiler
-from repro.core.partition import plan_two_devices
-from repro.core.predictor import PM2Lat
+from repro.core.batch_predict import BatchPredictor
+from repro.core.partition import plan_two_devices, plan_two_devices_model
 from repro.models import registry as mr, transformer as T
 
 B_SPEED = 0.4  # device B per-block latency multiplier (B is 2.5x faster)
@@ -40,7 +40,7 @@ def _measured_block_latencies(cfg, B, S):
 def run(batch=4, seq=128, n_requests=100, verbose=True):
     store = common.get_calibration()
     dev = calibrate.device_name()
-    pm = PM2Lat(store, dev)
+    pm = BatchPredictor(store, dev)
     ns = common.get_neusight(store)
     cfg = dataclasses.replace(cr.get_any("qwen3-mini"), n_layers=12,
                               compute_dtype="float32")
@@ -58,12 +58,14 @@ def run(batch=4, seq=128, n_requests=100, verbose=True):
             per.append(t)
         return per
 
-    pred_pm = blocks_from(pm)
+    # PM2Lat per-block latencies come from ONE batched engine pass
+    pm_plan, pred_pm = plan_two_devices_model(pm, cfg, batch, seq,
+                                              b_speed=B_SPEED)
     pred_ns = blocks_from(ns)
 
     plans = {
         "oracle": plan_two_devices(true_a, true_b),
-        "pm2lat": plan_two_devices(pred_pm, [t * B_SPEED for t in pred_pm]),
+        "pm2lat": pm_plan,
         "neusight": plan_two_devices(pred_ns, [t * B_SPEED for t in pred_ns]),
     }
     out = {}

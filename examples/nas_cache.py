@@ -1,6 +1,7 @@
-"""Paper application IV-D2: NAS latency-cache preprocessing.  Vectorized
-Eq(1)/(2) prediction over the paper's MatMul search grid (~400M configs),
-reporting microseconds/prediction and total cache-build time.
+"""Paper application IV-D2 on the new batch engine: NAS latency-cache
+preprocessing with ``BatchPredictor``, full-model grid sweeps with
+``predict_model_grid``, and the LRU + JSON-persistent ``PredictionCache``
+behind the serving latency endpoint.
 
   PYTHONPATH=src python examples/nas_cache.py
 """
@@ -9,15 +10,47 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks import nas_speed
+from benchmarks import common
+from repro.configs import registry as cr
+from repro.core import calibrate
+from repro.core.batch_predict import BatchPredictor, PredictionCache
+from repro.core.nas import NASGrid, precompute_cache
+from repro.serving.latency_service import LatencyService
 
 
 def main():
-    out = nas_speed.run(limit=500_000)
-    print(f"\nPM2Lat: {out['pm2lat_us']:.3f} us/prediction "
+    store = common.get_calibration()
+    dev = calibrate.device_name()
+    bp = BatchPredictor(store, dev)
+
+    # 1) matmul search grid: vectorized oracle + Eq(1)/(2) over ~500k configs
+    cache, total_s, us_per, n = precompute_cache(store, dev, grid=NASGrid(),
+                                                 limit=500_000, predictor=bp)
+    print(f"PM2Lat batch engine: {us_per:.3f} us/prediction over {n} configs "
           f"(paper reports 0.045 ms = 45 us for scalar CPU predictions; "
           f"vectorization buys several orders of magnitude)")
-    print(f"NeuSight-style MLP: {out['neusight_us']:.1f} us/prediction")
+
+    # 2) whole-model sweep: the op graph is enumerated symbolically once and
+    #    broadcast over the (batch, seq) grid
+    cfg = cr.get_any("qwen3-mini")
+    batches, seqs = (1, 2, 4, 8), (64, 128, 256)
+    grid = bp.predict_model_grid(cfg, batches, seqs)
+    print(f"\n{cfg.name} forward latency grid (ms), batches={batches} "
+          f"x seqs={seqs}:")
+    for i, b in enumerate(batches):
+        row = "  ".join(f"{grid[i, j]*1e3:8.3f}" for j in range(len(seqs)))
+        print(f"  b={b:<3d} {row}")
+
+    # 3) cached latency queries (what serving admission control calls)
+    svc = LatencyService(store, dev,
+                         cache_path=os.path.join(common.ARTIFACTS,
+                                                 "latency_cache.json"))
+    svc.latency_grid(cfg, batches, seqs)          # bulk-fill from one sweep
+    q = svc.latency_query(cfg, batch=4, seq=128)
+    print(f"\nlatency_query({cfg.name}, b=4, s=128) -> "
+          f"{q.seconds*1e3:.3f} ms (cached={q.cached})")
+    svc.save_cache()
+    print(f"cache stats: {svc.stats} -> persisted to artifacts/latency_cache.json")
 
 
 if __name__ == "__main__":

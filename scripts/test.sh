@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Tier-1 test runner (+ optional perf smoke).
+#
+#   scripts/test.sh                 tier-1 suite (pytest -x -q)
+#   scripts/test.sh --smoke         suite + vectorized NAS benchmark, small limit
+#   scripts/test.sh -k batch        extra args forwarded to pytest
+#
+# TEST_TIMEOUT_S bounds each stage (default 1800s).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+TIMEOUT="${TEST_TIMEOUT_S:-1800}"
+SMOKE=0
+ARGS=()
+for a in "$@"; do
+  case "$a" in
+    --smoke) SMOKE=1 ;;
+    *) ARGS+=("$a") ;;
+  esac
+done
+
+timeout "$TIMEOUT" python -m pytest -x -q ${ARGS[@]+"${ARGS[@]}"}
+
+if [[ "$SMOKE" == 1 ]]; then
+  echo "--- smoke: vectorized NAS batch-prediction benchmark ---"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TIMEOUT" \
+    python -m benchmarks.nas_speed --limit 200000 --skip-neusight
+fi

@@ -9,7 +9,7 @@ launch/plan.py's pipeline-stage balancer.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 
 @dataclasses.dataclass
@@ -77,3 +77,30 @@ def plan_stages(latencies: Sequence[float], n_stages: int) -> PartitionPlan:
     times = [sum(lats[a:b]) for a, b in zip(stages, stages[1:])]
     return PartitionPlan(boundaries=stages, stage_times=times,
                          bottleneck=max(times))
+
+
+# ---------------------------------------------------------------------------
+# Predictor-backed planning (per-block latencies from ONE batched call)
+# ---------------------------------------------------------------------------
+
+def plan_two_devices_model(predictor, cfg, batch: int, seq: int, *,
+                           b_speed: float = 1.0, comm_cost: float = 0.0,
+                           dtype: Optional[str] = None
+                           ) -> Tuple[PartitionPlan, List[float]]:
+    """Two-device split for a model config: per-block latencies come from a
+    single batched predictor pass (``BatchPredictor.predict_blocks`` runs all
+    blocks' ops through one vectorized call per op family), device B modeled
+    as a uniform ``b_speed`` multiple of device A.  Returns (plan, blocks_a)."""
+    blocks = [float(t) for t in predictor.predict_blocks(cfg, batch, seq,
+                                                         dtype=dtype)]
+    plan = plan_two_devices(blocks, [t * b_speed for t in blocks], comm_cost)
+    return plan, blocks
+
+
+def plan_stages_model(predictor, cfg, batch: int, seq: int, n_stages: int, *,
+                      dtype: Optional[str] = None
+                      ) -> Tuple[PartitionPlan, List[float]]:
+    """N-stage contiguous min-max partition from one batched prediction."""
+    blocks = [float(t) for t in predictor.predict_blocks(cfg, batch, seq,
+                                                         dtype=dtype)]
+    return plan_stages(blocks, n_stages), blocks

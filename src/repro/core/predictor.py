@@ -5,9 +5,7 @@ sequentially over the op graph (paper §III-C).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
-
-import numpy as np
+from typing import List, Optional, Tuple
 
 from repro.configs import base as C
 from repro.core import opgraph as og
@@ -118,29 +116,7 @@ class PM2Lat:
             per_layer.append(total)
         return per_layer
 
-
-# ---------------------------------------------------------------------------
-# Fast vectorized matmul predictor (NAS preprocessing, paper §IV-D2)
-# ---------------------------------------------------------------------------
-
-class VectorizedMatmulPredictor:
-    """numpy-vectorized Eq(1)/Eq(2) over anchor tables: microseconds per
-    prediction across millions of (M, N, K) configs."""
-
-    def __init__(self, table: ThroughputTable):
-        self.ks = np.array(sorted(table.anchors), dtype=np.float64)
-        self.thr = np.array([table.anchors[int(k)] for k in self.ks])
-        self.org_dur = table.org_dur
-        self.k_max = table.k_max
-        self.org_thr = table.anchors[table.k_max]
-        m0, n0 = table.ref_grid
-        self.ref_area = float(m0 * n0)
-
-    def predict(self, m, n, k, batch=1):
-        """All args broadcastable numpy arrays. Returns seconds array."""
-        m = np.asarray(m, np.float64)
-        n = np.asarray(n, np.float64)
-        k = np.asarray(k, np.float64)
-        thr = np.interp(k, self.ks, self.thr)          # Eq (2), vectorized
-        dur_ref = self.org_dur * (k / self.k_max) * (self.org_thr / thr)  # Eq (1)
-        return dur_ref * (m * n * np.asarray(batch, np.float64) / self.ref_area)
+# The former VectorizedMatmulPredictor (numpy Eq(1)/(2) over one anchor
+# table) grew into the all-op-family engine in core/batch_predict.py —
+# use BatchPredictor.predict_matmul_batch, which adds the vectorized
+# kernel-selection oracle and matches this module's scalar path exactly.

@@ -1,0 +1,91 @@
+"""Latency-query service: the serving-side endpoint over the batch
+prediction engine.
+
+``LatencyService.latency_query(model, batch, seq, dtype)`` answers "how long
+will one forward pass take on this device?" from the LRU + JSON-persistent
+``PredictionCache``, falling through to the vectorized ``BatchPredictor`` on
+a miss.  ``latency_grid`` bulk-fills the cache with one symbolic grid
+prediction — the admission-control / autoscaling primitive: a router can
+sweep every (batch, seq) bucket it serves in a single call and afterwards
+answer every query from cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.batch_predict import (BatchPredictor, PredictionCache,
+                                      config_key)
+
+
+@dataclasses.dataclass
+class LatencyQueryResult:
+    model: str
+    device: str
+    dtype: str
+    batch: int
+    seq: int
+    seconds: float
+    cached: bool
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class LatencyService:
+    def __init__(self, store=None, device: Optional[str] = None, *,
+                 cache_path: Optional[str] = None, cache_size: int = 65536):
+        if store is None or device is None:
+            from repro.core import calibrate
+            store = store or calibrate.load_or_calibrate(verbose=False)
+            device = device or calibrate.device_name()
+        self.device = device
+        self.cache = PredictionCache(maxsize=cache_size, path=cache_path)
+        self.predictor = BatchPredictor(store, device, cache=self.cache)
+
+    def _resolve(self, model: Union[str, ModelConfig]) -> ModelConfig:
+        if isinstance(model, ModelConfig):
+            return model
+        from repro.configs import registry
+        return registry.get_any(model)
+
+    def latency_query(self, model: Union[str, ModelConfig], batch: int,
+                      seq: int, dtype: Optional[str] = None
+                      ) -> LatencyQueryResult:
+        """One (model, batch, seq, dtype) latency: cache hit or batch-predict."""
+        cfg = self._resolve(model)
+        key = PredictionCache.make_key(config_key(cfg), self.device,
+                                       dtype, batch, seq)
+        hit = self.cache.get(key)
+        if hit is not None:
+            return LatencyQueryResult(cfg.name, self.device,
+                                      dtype or "float32", int(batch),
+                                      int(seq), hit, cached=True)
+        seconds, _ = self.predictor.predict_model(cfg, batch, seq, dtype=dtype)
+        self.cache.put(key, seconds)
+        return LatencyQueryResult(cfg.name, self.device, dtype or "float32",
+                                  int(batch), int(seq), seconds, cached=False)
+
+    def latency_grid(self, model: Union[str, ModelConfig],
+                     batches: Sequence[int], seqs: Sequence[int],
+                     dtype: Optional[str] = None) -> np.ndarray:
+        """Bulk query: one symbolic grid prediction, every point written to
+        the cache so subsequent ``latency_query`` calls are hits."""
+        cfg = self._resolve(model)
+        grid = self.predictor.predict_model_grid(cfg, batches, seqs, dtype)
+        for i, b in enumerate(batches):
+            for j, s in enumerate(seqs):
+                self.cache.put(
+                    PredictionCache.make_key(config_key(cfg), self.device,
+                                             dtype, b, s), float(grid[i, j]))
+        return grid
+
+    def save_cache(self, path: Optional[str] = None):
+        self.cache.save(path)
+
+    @property
+    def stats(self) -> dict:
+        return self.cache.stats

@@ -1,0 +1,135 @@
+"""Minimal ``hypothesis`` stand-in so the property tests collect and run on
+images without hypothesis installed.
+
+``given``/``settings``/``strategies`` expand each property test into a fixed,
+deterministically seeded sample of ``max_examples`` examples (seeded from the
+test's qualified name, so runs are reproducible and independent of test
+order).  No shrinking, no database — just enough of the API surface for this
+repo's suite.  When real hypothesis is importable, the test modules prefer
+it; this shim is the except-branch fallback.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 10
+
+
+class SearchStrategy:
+    """A sampler: ``_sample(rng) -> value``."""
+
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example(self, rng=None):
+        return self._sample(rng or random.Random(0))
+
+    def map(self, fn):
+        return SearchStrategy(lambda r: fn(self._sample(r)))
+
+    def filter(self, pred, max_tries: int = 1000):
+        def sample(r):
+            for _ in range(max_tries):
+                v = self._sample(r)
+                if pred(v):
+                    return v
+            raise ValueError("propshim: filter predicate never satisfied")
+        return SearchStrategy(sample)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> SearchStrategy:
+    return SearchStrategy(lambda r: r.uniform(min_value, max_value))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda r: r.random() < 0.5)
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda r: value)
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(lambda r: r.choice(elements))
+
+
+def lists(elements: SearchStrategy, min_size: int = 0,
+          max_size: int = 10) -> SearchStrategy:
+    def sample(r):
+        size = r.randint(min_size, max_size)
+        return [elements._sample(r) for _ in range(size)]
+    return SearchStrategy(sample)
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda r: tuple(s._sample(r) for s in strategies))
+
+
+class _StrategiesNamespace:
+    """Stands in for the ``hypothesis.strategies`` module (imported as st)."""
+    SearchStrategy = SearchStrategy
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    booleans = staticmethod(booleans)
+    just = staticmethod(just)
+    sampled_from = staticmethod(sampled_from)
+    lists = staticmethod(lists)
+    tuples = staticmethod(tuples)
+
+
+strategies = _StrategiesNamespace()
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Records max_examples on the (possibly already @given-wrapped) test."""
+    def deco(fn):
+        fn._propshim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies: SearchStrategy, **kw_strategies: SearchStrategy):
+    """Runs the test body over a fixed seeded sample of examples.  Strategy
+    args fill the test's trailing parameters (hypothesis semantics), which
+    are stripped from the exposed signature so pytest does not mistake them
+    for fixtures."""
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        # positional strategies fill the TRAILING parameters (hypothesis
+        # semantics); pytest passes fixtures by keyword, so we bind strategy
+        # values to those parameter names and call entirely by keyword
+        strat_names = ([p.name for p in params[len(params)
+                                               - len(arg_strategies):]]
+                       if arg_strategies else [])
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_propshim_max_examples",
+                        getattr(fn, "_propshim_max_examples",
+                                DEFAULT_MAX_EXAMPLES))
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            rng = random.Random(seed)
+            for _ in range(n):
+                drawn = {name: s._sample(rng)
+                         for name, s in zip(strat_names, arg_strategies)}
+                drawn.update({name: s._sample(rng)
+                              for name, s in kw_strategies.items()})
+                fn(*args, **kwargs, **drawn)
+
+        remaining = params
+        if arg_strategies:
+            remaining = remaining[:len(remaining) - len(arg_strategies)]
+        if kw_strategies:
+            remaining = [p for p in remaining if p.name not in kw_strategies]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        return wrapper
+    return deco

@@ -1,0 +1,255 @@
+"""BatchPredictor golden equivalence vs the scalar PM2Lat predictor, grid
+prediction vs looped predict_model, and the LRU/JSON prediction cache.
+Written to run under the tests/_propshim fallback when hypothesis is absent.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI image has no hypothesis: seeded-sample shim
+    from tests._propshim import given, settings, strategies as st
+
+from repro.configs import registry as cr
+from repro.core import calibrate, opgraph as og
+from repro.core.batch_predict import (BatchPredictor, PredictionCache,
+                                      config_key, enumerate_grid_ops)
+from repro.core.predictor import PM2Lat
+
+RTOL = 1e-9
+
+# one arch per op-graph branch of the symbolic grid enumeration
+GRID_ARCHS = ("qwen2-0.5b",            # dense attn
+              "moonshot-v1-16b-a3b",   # MoE capacity dispatch
+              "recurrentgemma-2b",     # RG-LRU + local attn
+              "xlstm-1.3b",            # mLSTM/sLSTM
+              "whisper-small")         # encoder + cross-attn
+
+
+@pytest.fixture(scope="module")
+def engine(calibration_store):
+    dev = calibrate.device_name()
+    return PM2Lat(calibration_store, dev), BatchPredictor(calibration_store, dev)
+
+
+# ---------------------------------------------------------------------------
+# batch vs scalar: single-op families
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(8, 8192), st.integers(8, 8192), st.integers(8, 16384),
+       st.integers(1, 64), st.sampled_from(["matmul", "bmm"]))
+def test_batch_matmul_matches_scalar(engine, m, n, k, batch, kind):
+    """Vectorized oracle + Eq(1)/(2) == scalar predict_matmul, ≤1e-9 rel,
+    over randomized (m, n, k, batch, kind) configs."""
+    scalar, bp = engine
+    op = og.MatmulOp("op", m=m, n=n, k=k, batch=batch, kind=kind)
+    want = scalar.predict_matmul(op)
+    got = float(bp.predict_matmul_batch(m, n, k, batch, kind=kind))
+    assert got == pytest.approx(want, rel=RTOL)
+
+
+def test_batch_matmul_vector_call_matches_scalar_loop(engine):
+    scalar, bp = engine
+    rng = np.random.default_rng(0)
+    m, n, k = (rng.integers(8, 8192, 500) for _ in range(3))
+    got = bp.predict_matmul_batch(m, n, k)
+    for i in range(len(m)):
+        op = og.MatmulOp("op", m=int(m[i]), n=int(n[i]), k=int(k[i]))
+        assert float(got[i]) == pytest.approx(scalar.predict_matmul(op),
+                                              rel=RTOL)
+
+
+def test_batch_bmm_dtype_fallback_matches_scalar(engine):
+    """bfloat16 bmm is not calibrated: both paths fall back to the same
+    profiled table (the scalar _table fallback is shared)."""
+    scalar, bp = engine
+    op = og.MatmulOp("op", m=128, n=256, k=512, batch=8, kind="bmm",
+                     dtype="bfloat16")
+    got = float(bp.predict_matmul_batch(op.m, op.n, op.k, op.batch,
+                                        dtype="bfloat16", kind="bmm"))
+    assert got == pytest.approx(scalar.predict_matmul(op), rel=RTOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(16, 8192))
+def test_batch_attention_matches_scalar(engine, skv):
+    scalar, bp = engine
+    op = og.AttentionOp("a", batch=2, heads=4, kv_heads=4, sq=skv, skv=skv,
+                        hd=64, count=3)
+    want = scalar.predict_attention(op)
+    got = float(bp.predict_attention_batch([op.skv], [op.flops])[0])
+    assert got == pytest.approx(want, rel=RTOL)
+
+
+def test_batch_memory_matches_scalar(engine):
+    scalar, bp = engine
+    ops = [og.MemoryOp("ln", "rmsnorm", (64, 256), count=2),
+           og.MemoryOp("res", "add", (64, 256)),
+           og.MemoryOp("act", "silu_mul", (32, 512), count=3),
+           og.MemoryOp("sm", "softmax", (16, 128))]
+    got = bp.predict_memory_batch(ops)
+    for op, sec in zip(ops, got):
+        assert float(sec) == pytest.approx(scalar.predict_memory(op), rel=RTOL)
+
+
+def test_predict_ops_rows_match_scalar(engine):
+    """Mixed op list through the grouped vectorized path: totals and per-row
+    seconds/kind/kernel all match the scalar predictor."""
+    scalar, bp = engine
+    cfg = cr.reduced("qwen2-0.5b")
+    ops = og.enumerate_ops(cfg, 2, 32)
+    want_total, want_rows = scalar.predict_ops(ops)
+    got_total, got_rows = bp.predict_ops(ops)
+    assert got_total == pytest.approx(want_total, rel=RTOL)
+    for w, g in zip(want_rows, got_rows):
+        assert (g.name, g.kind, g.kernel) == (w.name, w.kind, w.kernel)
+        assert g.seconds == pytest.approx(w.seconds, rel=RTOL)
+
+
+# ---------------------------------------------------------------------------
+# grid vs loop
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", GRID_ARCHS)
+def test_predict_model_grid_matches_loop(engine, name):
+    """Symbolic grid enumeration + broadcast == per-point predict_model."""
+    scalar, bp = engine
+    cfg = cr.reduced(name)
+    batches, seqs = (1, 2), (16, 32)
+    grid = bp.predict_model_grid(cfg, batches, seqs)
+    assert grid.shape == (len(batches), len(seqs))
+    for i, b in enumerate(batches):
+        for j, s in enumerate(seqs):
+            want, _ = bp.predict_model(cfg, b, s)
+            assert float(grid[i, j]) == pytest.approx(want, rel=RTOL), (b, s)
+            want_scalar, _ = scalar.predict_model(cfg, b, s)
+            assert float(grid[i, j]) == pytest.approx(want_scalar, rel=RTOL)
+
+
+def _scalarize(v):
+    return float(v[0]) if isinstance(v, np.ndarray) else float(v)
+
+
+@pytest.mark.parametrize("name", cr.ARCH_NAMES)
+def test_grid_enumeration_mirrors_scalar_opgraph(name):
+    """Drift tripwire for the symbolic mirror: for EVERY registered arch the
+    grid enumeration must reproduce the scalar op list field-for-field
+    (names, dims, batches, counts, attention flops, memory shapes), so any
+    future change to opgraph.enumerate_ops that is not mirrored fails loudly
+    here rather than silently mispredicting."""
+    cfg = cr.reduced(name)
+    b, s = np.array([3]), np.array([48])
+    gops = enumerate_grid_ops(cfg, b, s)
+    sops = og.enumerate_ops(cfg, 3, 48)
+    assert len(gops) == len(sops), name
+    for gop, sop in zip(gops, sops):
+        assert gop.name == sop.name, name
+        if sop.kind in ("matmul", "bmm"):
+            assert gop.kind == sop.kind
+            for attr in ("m", "n", "k", "batch", "count"):
+                assert _scalarize(getattr(gop, attr)) == getattr(sop, attr), \
+                    (name, sop.name, attr)
+        elif sop.kind == "attention":
+            assert _scalarize(gop.flops) == sop.flops, (name, sop.name)
+            assert _scalarize(gop.skv) == sop.skv, (name, sop.name)
+        else:
+            assert gop.snippet == sop.snippet, (name, sop.name)
+            assert tuple(_scalarize(x) for x in gop.shape) == tuple(
+                float(x) for x in sop.shape), (name, sop.name)
+            assert _scalarize(gop.count) == sop.count, (name, sop.name)
+
+
+def test_predict_blocks_matches_scalar(engine):
+    scalar, bp = engine
+    cfg = cr.reduced("qwen2-0.5b", n_layers=4)
+    want = scalar.predict_blocks(cfg, 2, 32)
+    got = bp.predict_blocks(cfg, 2, 32)
+    assert len(got) == len(want) == 4
+    np.testing.assert_allclose(got, want, rtol=RTOL)
+
+
+# ---------------------------------------------------------------------------
+# prediction cache
+# ---------------------------------------------------------------------------
+
+def test_cache_lru_and_persistence_roundtrip(tmp_path):
+    cache = PredictionCache(maxsize=3)
+    keys = [PredictionCache.make_key("m", "dev", None, b, 64) for b in range(5)]
+    for i, key in enumerate(keys):
+        cache.put(key, i * 1e-3)
+    assert len(cache) == 3                       # LRU evicted the oldest two
+    assert cache.get(keys[0]) is None and cache.get(keys[1]) is None
+    assert cache.get(keys[4]) == pytest.approx(4e-3)
+    path = str(tmp_path / "latency_cache.json")
+    cache.save(path)
+    cache2 = PredictionCache(maxsize=8, path=path)
+    assert len(cache2) == 3
+    assert cache2.get(keys[2]) == pytest.approx(2e-3)
+    assert cache2.stats["hits"] == 1
+
+
+def test_cache_survives_corrupt_file(tmp_path):
+    """A truncated/corrupt persisted cache must not break startup: it loads
+    as empty and the next save atomically replaces it."""
+    path = str(tmp_path / "c.json")
+    for garbage in ('{"entries": [["a|b|float32|1|',   # truncated mid-write
+                    "null",                            # external partial write
+                    '{"entries": [["a", 1, 2], "x", ["ok|k", 2e-3]]}'):
+        with open(path, "w") as f:
+            f.write(garbage)
+        cache = PredictionCache(maxsize=4, path=path)
+        assert len(cache) <= 1                      # only well-formed entries
+    assert cache.get("ok|k") == pytest.approx(2e-3)
+    cache.put("k", 1e-3)
+    cache.save()
+    assert PredictionCache(maxsize=4, path=path).get("k") == pytest.approx(1e-3)
+    assert not [p for p in tmp_path.iterdir() if ".tmp." in p.name]
+
+
+def test_cached_predict_hits_after_miss(engine, tmp_path):
+    _, bp = engine
+    cfg = cr.reduced("qwen2-0.5b")
+    cache = PredictionCache(maxsize=16,
+                            path=str(tmp_path / "pred_cache.json"))
+    first = bp.predict_model_cached(cfg, 2, 32, cache=cache)
+    assert cache.stats == {"size": 1, "hits": 0, "misses": 1, "maxsize": 16}
+    second = bp.predict_model_cached(cfg, 2, 32, cache=cache)
+    assert second == first and cache.hits == 1
+    cache.save()
+    reloaded = PredictionCache(path=str(tmp_path / "pred_cache.json"))
+    key = PredictionCache.make_key(config_key(cfg), bp.device, None, 2, 32)
+    assert reloaded.get(key) == pytest.approx(first)
+
+
+def test_cache_distinguishes_replaced_configs(engine):
+    """dataclasses.replace keeps cfg.name; the architecture fingerprint in
+    config_key must keep variants from colliding in the cache."""
+    _, bp = engine
+    cfg = cr.reduced("qwen2-0.5b", n_layers=2)
+    cfg4 = dataclasses.replace(cfg, n_layers=4)
+    assert cfg.name == cfg4.name and config_key(cfg) != config_key(cfg4)
+    cache = PredictionCache(maxsize=8)
+    t2 = bp.predict_model_cached(cfg, 2, 32, cache=cache)
+    t4 = bp.predict_model_cached(cfg4, 2, 32, cache=cache)
+    assert cache.stats["misses"] == 2 and t4 > t2
+
+
+def test_latency_service_query_and_grid(engine, calibration_store, tmp_path):
+    from repro.serving.latency_service import LatencyService
+    svc = LatencyService(calibration_store, calibrate.device_name(),
+                         cache_path=str(tmp_path / "svc_cache.json"))
+    cfg = cr.reduced("qwen2-0.5b")
+    q1 = svc.latency_query(cfg, 2, 32)
+    assert not q1.cached and q1.seconds > 0
+    q2 = svc.latency_query(cfg, 2, 32)
+    assert q2.cached and q2.seconds == q1.seconds
+    grid = svc.latency_grid(cfg, (1, 2), (16, 32))
+    assert svc.latency_query(cfg, 1, 16).cached
+    assert float(grid[1, 1]) == pytest.approx(q1.seconds, rel=RTOL)
+    svc.save_cache()
+    svc2 = LatencyService(calibration_store, calibrate.device_name(),
+                          cache_path=str(tmp_path / "svc_cache.json"))
+    assert svc2.latency_query(cfg, 2, 32).cached

@@ -2,7 +2,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI image has no hypothesis: seeded-sample shim
+    from tests._propshim import given, settings, strategies as st
 
 from repro.configs.base import MoEConfig
 from repro.models import moe as M

@@ -1,6 +1,9 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI image has no hypothesis: seeded-sample shim
+    from tests._propshim import given, settings, strategies as st
 
 from repro.core import partition as P
 

@@ -3,12 +3,16 @@ import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI image has no hypothesis: seeded-sample shim
+    from tests._propshim import given, settings, strategies as st
 
 from repro.configs import registry as cr
 from repro.core import calibrate, opgraph as og
 from repro.core.memory_model import MemoryModel, fit_memory_model
-from repro.core.predictor import PM2Lat, VectorizedMatmulPredictor
+from repro.core.batch_predict import BatchPredictor
+from repro.core.predictor import PM2Lat
 from repro.core.table import KernelKey
 
 
@@ -60,12 +64,13 @@ def test_vectorized_predictor_matches_scalar(calibration_store):
     dev = calibrate.device_name()
     table = calibration_store.get(
         KernelKey("matmul", "xla_default@512x512", "float32", dev))
-    vec = VectorizedMatmulPredictor(table)
+    vec = BatchPredictor(calibration_store, dev)
     rng = np.random.default_rng(0)
     for _ in range(10):
         m, n, k = (int(rng.integers(32, 4096)) for _ in range(3))
         scalar = table.predict(m, n, k)
-        v = float(vec.predict(m, n, k))
+        v = float(vec.predict_matmul_batch(m, n, k,
+                                           kernel="xla_default@512x512"))
         assert v == pytest.approx(scalar, rel=1e-9)
 
 

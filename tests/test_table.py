@@ -1,7 +1,10 @@
 """ThroughputTable: the paper's Eq (1)/(2) + rational fit + serialization."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI image has no hypothesis: seeded-sample shim
+    from tests._propshim import given, settings, strategies as st
 
 from repro.core.table import KernelKey, TableStore, ThroughputTable
 
@@ -88,6 +91,52 @@ def test_store_roundtrip(tmp_path):
     assert t2.anchors == t.anchors
     assert t2.ref_grid == t.ref_grid
     assert st2.memory_model["coef"][0] == pytest.approx(1e-10)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from(["matmul", "bmm", "attention"]),
+       st.sampled_from(["xla_default@512x512", "mm_256x256x256", "fa_128x128"]),
+       st.sampled_from(["float32", "bfloat16"]),
+       st.sampled_from(["cpu_host", "tpu_worker0"]))
+def test_kernel_key_id_parse_roundtrip(op, kernel, dtype, device):
+    key = KernelKey(op, kernel, dtype, device)
+    assert KernelKey.parse(key.id()) == key
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(33, 8191))
+def test_interpolation_piecewise_linear_between_anchors(k):
+    """Interior interpolation is EXACTLY the Eq(2) line through the two
+    neighboring anchors; outside the anchor range it clamps to the ends."""
+    t = _table()
+    ks = sorted(t.anchors)
+    k1 = max(a for a in ks if a <= k)
+    k3 = min(a for a in ks if a >= k)
+    if k1 == k3:
+        expect = t.anchors[k1]
+    else:
+        t1, t3 = t.anchors[k1], t.anchors[k3]
+        expect = (k - k1) / (k3 - k1) * (t3 - t1) + t1
+    assert t.interpolate_throughput(k) == pytest.approx(expect, rel=1e-12)
+    # clamping at both anchor ends
+    assert t.interpolate_throughput(ks[0] - k) == t.anchors[ks[0]]
+    assert t.interpolate_throughput(ks[-1] + k) == t.anchors[ks[-1]]
+
+
+def test_fit_rational_reproduces_anchor_throughputs():
+    """The rational trend fit evaluated AT the anchors stays within a few
+    percent of the measured anchor throughputs (paper Fig. 4 trend)."""
+    a, b, c, d = 7e9, 1e10, 1.0, 900.0
+    ks = [32, 64, 128, 256, 512, 1024, 2048, 4096, 8192]
+    t = _table({k: (a * k + b) / (c * k + d) for k in ks})
+    for k in ks:
+        assert t.rational_throughput(k) == pytest.approx(t.anchors[k],
+                                                         rel=0.01)
+    # and on realistic (non-exactly-rational) saturating anchors
+    t2 = _table()
+    for k in sorted(t2.anchors):
+        assert t2.rational_throughput(k) == pytest.approx(t2.anchors[k],
+                                                          rel=0.35)
 
 
 def test_wave_scaling_partial_tiles():
