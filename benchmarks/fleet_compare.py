@@ -1,0 +1,91 @@
+"""Fleet comparison: every registered architecture x device x dtype, one
+per-device latency matrix (the cross-device generalization sweep the paper
+runs over its five GPUs, here over the analytical fleet registry).
+
+Host tables are re-anchored onto each target via the roofline-ratio transfer
+(``core/transfer.py``); each cell is whole-model forward latency from one
+symbolic grid prediction per (arch, device, dtype).
+
+  PYTHONPATH=src python -m benchmarks.fleet_compare [--batch 8] [--seq 256]
+      [--devices a100_80g,l4] [--archs qwen3-mini] [--dtypes float32]
+      [--json artifacts/fleet_compare.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks import common
+from repro.configs import registry as cr
+from repro.core import calibrate, devices as D
+from repro.core.batch_predict import BatchPredictor
+
+
+def sweep_archs():
+    """Registered architectures, CPU-feasible reduced stand-ins + the paper
+    miniatures (full configs would enumerate fine too — the predictor never
+    allocates them — but reduced keeps proxy-feature compile time small)."""
+    names = list(cr.PAPER_MODELS) + [f"{n}-reduced" for n in cr.ARCH_NAMES]
+    return {n: cr.get_any(n) for n in names}
+
+
+def run(batch=8, seq=256, devices=None, archs=None, dtypes=None, verbose=True):
+    store = common.get_calibration()
+    bp = BatchPredictor(store, calibrate.device_name())
+    bp.host_profile()                       # register the host in the fleet
+    devices = devices or D.list_devices()
+    table_dtypes = sorted({t.key.dtype for t in store.tables.values()})
+    dtypes = dtypes or table_dtypes         # only calibrated dtypes transfer
+    cfgs = {n: cr.get_any(n) for n in archs} if archs else sweep_archs()
+
+    matrix = {}                             # arch -> dtype -> device -> sec
+    for name, cfg in cfgs.items():
+        matrix[name] = {}
+        for dt in dtypes:
+            row = {}
+            for dev in devices:
+                grid = bp.predict_model_grid(cfg, [batch], [seq], dt,
+                                             device=dev)
+                row[dev] = float(grid[0, 0])
+            matrix[name][dt] = row
+
+    if verbose:
+        for dt in dtypes:
+            hdr = f"{'arch (b=%d s=%d %s)' % (batch, seq, dt):34s}"
+            print(hdr + "".join(f"{d:>12s}" for d in devices))
+            for name in matrix:
+                row = matrix[name][dt]
+                print(f"{name:34s}"
+                      + "".join(f"{row[d]*1e3:11.3f}m" for d in devices))
+    for name in matrix:
+        for dt in dtypes:
+            for dev, sec in matrix[name][dt].items():
+                common.emit(f"fleet/{name}/{dt}/{dev}_ms", sec * 1e3,
+                            f"{sec*1e3:.4f}")
+    return matrix
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--devices", default=None,
+                    help="comma-separated registry names (default: all)")
+    ap.add_argument("--archs", default=None,
+                    help="comma-separated arch names (default: full sweep)")
+    ap.add_argument("--dtypes", default=None,
+                    help="comma-separated dtypes (default: calibrated ones)")
+    ap.add_argument("--json", default=None, help="write the matrix here")
+    args = ap.parse_args()
+    split = lambda s: s.split(",") if s else None
+    matrix = run(batch=args.batch, seq=args.seq, devices=split(args.devices),
+                 archs=split(args.archs), dtypes=split(args.dtypes))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"batch": args.batch, "seq": args.seq,
+                       "latency_s": matrix}, f, indent=1)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

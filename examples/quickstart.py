@@ -49,6 +49,14 @@ def main():
     for r in sorted(rows, key=lambda r: -r.seconds)[:5]:
         print(f"  {r.name:24s} {r.kind:9s} {r.seconds*1e3:8.3f} ms  [{r.kernel}]")
 
+    # 4. the fleet: the same tables re-anchored onto datasheet rooflines
+    from repro.serving.latency_service import LatencyService
+    svc = LatencyService(store, calibrate.device_name())
+    print("fleet predictions (roofline transfer, core/transfer.py):")
+    for devname in ("a100_80g", "h100_sxm", "l4"):
+        r = svc.latency_query(cfg, args.batch, args.seq, device=devname)
+        print(f"  {r.device:10s} {r.seconds*1e3:8.3f} ms")
+
 
 if __name__ == "__main__":
     main()

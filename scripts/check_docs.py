@@ -1,0 +1,52 @@
+#!/usr/bin/env python
+"""Doc link checker (scripts/test.sh --docs): every relative markdown link in
+the given files must resolve to an existing file/directory, so README/docs
+can't rot silently as the tree moves.
+
+  python scripts/check_docs.py README.md docs/*.md
+"""
+import re
+import sys
+from pathlib import Path
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check(md: Path) -> list:
+    errors = []
+    text = md.read_text()
+    # strip fenced code blocks: snippets may contain link-shaped text
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for m in LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        path = target.split("#", 1)[0].split("?", 1)[0]
+        if not path:
+            continue
+        if not (md.parent / path).exists():
+            errors.append(f"{md}: broken link -> {target}")
+    return errors
+
+
+def main(argv):
+    files = [Path(a) for a in argv] or list(Path("docs").glob("*.md"))
+    errors = []
+    n_links = 0
+    for md in files:
+        if not md.exists():
+            errors.append(f"{md}: file missing")
+            continue
+        errs = check(md)
+        errors += errs
+        n_links += len(LINK.findall(md.read_text()))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_docs: {len(files)} files, {n_links} links, "
+          f"{len(errors)} broken")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -3,6 +3,7 @@
 #
 #   scripts/test.sh                 tier-1 suite (pytest -x -q)
 #   scripts/test.sh --smoke         suite + vectorized NAS benchmark, small limit
+#   scripts/test.sh --docs          suite + quickstart smoke-run + doc link check
 #   scripts/test.sh -k batch        extra args forwarded to pytest
 #
 # TEST_TIMEOUT_S bounds each stage (default 1800s).
@@ -11,10 +12,12 @@ cd "$(dirname "$0")/.."
 
 TIMEOUT="${TEST_TIMEOUT_S:-1800}"
 SMOKE=0
+DOCS=0
 ARGS=()
 for a in "$@"; do
   case "$a" in
     --smoke) SMOKE=1 ;;
+    --docs) DOCS=1 ;;
     *) ARGS+=("$a") ;;
   esac
 done
@@ -25,4 +28,12 @@ if [[ "$SMOKE" == 1 ]]; then
   echo "--- smoke: vectorized NAS batch-prediction benchmark ---"
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TIMEOUT" \
     python -m benchmarks.nas_speed --limit 200000 --skip-neusight
+fi
+
+if [[ "$DOCS" == 1 ]]; then
+  echo "--- docs: relative-link check (README.md, docs/*.md) ---"
+  python scripts/check_docs.py README.md docs/*.md
+  echo "--- docs: quickstart smoke-run ---"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TIMEOUT" \
+    python examples/quickstart.py --batch 1 --seq 32
 fi

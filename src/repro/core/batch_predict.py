@@ -306,6 +306,42 @@ class BatchPredictor:
         # grid sweeps so steady-state cost never depends on (and cannot
         # thrash) opgraph._snippet_features' bounded lru_cache
         self._feat_cache: Dict[tuple, np.ndarray] = {}
+        # fleet: derived predictors over roofline-transferred stores,
+        # one per target device (core/transfer.py), built lazily
+        self._fleet: Dict[str, "BatchPredictor"] = {}
+        self._host_prof = None
+
+    # ----- device fleet -----
+    def host_profile(self):
+        """This store's empirical DeviceProfile (transfer source), registered
+        fleet-wide so the host is addressable by name like any target."""
+        if self._host_prof is None:
+            from repro.core import devices as D
+            self._host_prof = D.register(
+                D.host_profile_from_store(self.store, self.device),
+                overwrite=True)
+        return self._host_prof
+
+    def for_device(self, device: Optional[str]) -> "BatchPredictor":
+        """The predictor answering for ``device``: ``self`` for the host
+        (None or this store's own device — the golden, bit-identical path),
+        else a derived predictor over the roofline-transferred store.  The
+        shared ``PredictionCache`` keeps per-device entries apart because
+        every key is fingerprinted with the answering predictor's device."""
+        if device is None or device == self.device:
+            return self
+        derived = self._fleet.get(device)
+        if derived is None:
+            from repro.core import devices as D
+            from repro.core.transfer import transfer_store
+            dst = D.get_profile(device)
+            store = transfer_store(self.store, self.host_profile(), dst)
+            derived = BatchPredictor(store, dst.name, cache=self.cache)
+            # share the proxy-feature rows: cost_analysis features are
+            # device-independent inputs to the (rescaled) memory model
+            derived._feat_cache = self._feat_cache
+            self._fleet[device] = derived
+        return derived
 
     # ----- table plumbing -----
     def _table_interp(self, t: ThroughputTable) -> _TableInterp:
@@ -433,14 +469,22 @@ class BatchPredictor:
         return sum(r.seconds for r in rows), rows
 
     def predict_model(self, cfg: C.ModelConfig, batch: int, seq: int,
-                      dtype: Optional[str] = None):
+                      dtype: Optional[str] = None,
+                      device: Optional[str] = None):
+        if device is not None and device != self.device:
+            return self.for_device(device).predict_model(cfg, batch, seq,
+                                                         dtype=dtype)
         ops = og.enumerate_ops(cfg, batch, seq, dtype=dtype)
         return self.predict_ops(ops)
 
     def predict_blocks(self, cfg: C.ModelConfig, batch: int, seq: int,
-                       dtype: Optional[str] = None) -> List[float]:
+                       dtype: Optional[str] = None,
+                       device: Optional[str] = None) -> List[float]:
         """Per-transformer-block latencies from ONE vectorized pass over the
         concatenated per-block op lists (the partition planner's input)."""
+        if device is not None and device != self.device:
+            return self.for_device(device).predict_blocks(cfg, batch, seq,
+                                                          dtype=dtype)
         all_ops, seg = [], []
         for li, kind in enumerate(cfg.layer_kinds):
             one = dataclasses.replace(cfg, n_layers=1, block_pattern=(kind,))
@@ -495,11 +539,15 @@ class BatchPredictor:
 
     def predict_model_grid(self, cfg: C.ModelConfig,
                            batches: Sequence[int], seqs: Sequence[int],
-                           dtypes: Union[None, str, Sequence[str]] = None):
+                           dtypes: Union[None, str, Sequence[str]] = None,
+                           device: Optional[str] = None):
         """Whole-model latency over the (batch, seq) grid, the op graph
         enumerated symbolically once per dtype.  Returns a
         ``(len(batches), len(seqs))`` float array of total seconds, or a
         ``{dtype: array}`` dict when ``dtypes`` is a sequence."""
+        if device is not None and device != self.device:
+            return self.for_device(device).predict_model_grid(
+                cfg, batches, seqs, dtypes)
         batches = np.asarray(list(batches), np.int64)
         seqs = np.asarray(list(seqs), np.int64)
         bg, sg = np.meshgrid(batches, seqs, indexing="ij")
@@ -517,7 +565,11 @@ class BatchPredictor:
     # ----- cached interface -----
     def predict_model_cached(self, cfg: C.ModelConfig, batch: int, seq: int,
                              dtype: Optional[str] = None,
-                             cache: Optional["PredictionCache"] = None) -> float:
+                             cache: Optional["PredictionCache"] = None,
+                             device: Optional[str] = None) -> float:
+        if device is not None and device != self.device:
+            return self.for_device(device).predict_model_cached(
+                cfg, batch, seq, dtype=dtype, cache=cache)
         cache = cache if cache is not None else self.cache
         if cache is None:
             total, _ = self.predict_model(cfg, batch, seq, dtype=dtype)

@@ -10,6 +10,29 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
+import warnings
+
+STRICT_DTYPE_ENV = "REPRO_STRICT_DTYPE"
+
+
+def peak_lookup(peak_flops: dict, dtype: str, owner: str,
+                strict: bool | None = None) -> float:
+    """Per-dtype peak lookup with a LOUD fallback: an unknown dtype falls back
+    to the best peak (usually the low-precision one), which silently inflates
+    compute-bound predictions — so warn, and raise when strict (arg or
+    REPRO_STRICT_DTYPE=1)."""
+    dt = str(dtype)
+    if dt in peak_flops:
+        return peak_flops[dt]
+    if strict is None:
+        strict = os.environ.get(STRICT_DTYPE_ENV, "") not in ("", "0")
+    msg = (f"{owner}: no peak-FLOPs entry for dtype {dt!r} "
+           f"(known: {sorted(peak_flops)})")
+    if strict:
+        raise KeyError(msg)
+    warnings.warn(f"{msg}; falling back to max(peak_flops) — predictions for "
+                  f"this dtype may be inflated", stacklevel=3)
+    return max(peak_flops.values())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -23,8 +46,9 @@ class DeviceModel:
     vmem_bytes: int
     chips_per_pod: int = 256
 
-    def peak(self, dtype: str) -> float:
-        return self.peak_flops.get(str(dtype), max(self.peak_flops.values()))
+    def peak(self, dtype: str, *, strict: bool | None = None) -> float:
+        return peak_lookup(self.peak_flops, dtype, f"DeviceModel({self.name})",
+                           strict)
 
 
 TPU_V5E = DeviceModel(

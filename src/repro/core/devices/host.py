@@ -1,0 +1,46 @@
+"""Empirical DeviceProfile for the calibrated host.
+
+Cross-device transfer needs a SOURCE roofline to divide out of the measured
+throughputs (``core/transfer.py``).  For the host that roofline is derived
+from the calibration itself — the same stance as ``baselines/roofline.py``:
+peak := best observed matmul throughput per dtype, bandwidth := the inverse
+bytes-coefficient of the memory model.  Deriving both from the store keeps
+the host profile consistent with the tables it anchors, so host->host
+transfer is the identity by construction.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional
+
+from repro.core.devices.profiles import GiB, KiB, MiB, DeviceProfile
+from repro.core.table import TableStore
+
+_FALLBACK_BW = 2e10          # bytes/s, matches core/device.host_device_model
+_FALLBACK_PEAK = 5e10
+
+
+def host_profile_from_store(store: TableStore,
+                            name: Optional[str] = None) -> DeviceProfile:
+    """Derive the calibrated device's analytical profile from its tables."""
+    name = name or (store.meta or {}).get("device") or "cpu_host"
+    peaks: Dict[str, float] = {}
+    for t in store.tables.values():
+        if t.key.op != "matmul" or t.key.device != name:
+            continue
+        peaks[t.key.dtype] = max(peaks.get(t.key.dtype, 0.0),
+                                 max(t.anchors.values()))
+    if not peaks:
+        peaks = {"float32": _FALLBACK_PEAK}
+    mm = store.memory_model
+    coef = (mm["coef"] if isinstance(mm, dict)
+            else (mm.coef if mm is not None else None))
+    bw = 1.0 / coef[0] if coef is not None and coef[0] > 0 else _FALLBACK_BW
+    return DeviceProfile(
+        name=name, kind="cpu",
+        peak_flops=peaks, hbm_bw=bw,
+        hbm_bytes=32 * GiB, l2_bytes=32 * MiB, smem_bytes=64 * KiB,
+        sm_count=os.cpu_count() or 1,
+        link_bw=1e9,
+        notes="empirical: peaks from matmul anchors, bw from memory-model "
+              "bytes coefficient")

@@ -1,0 +1,112 @@
+"""Device-fleet profiles: the analytical spec sheet for every target PM2Lat
+can re-anchor its tables onto (paper §III-C "rerun or re-anchor", re-anchor
+path; cf. Braun et al.'s portable roofline model).
+
+A ``DeviceProfile`` is deliberately coarser than a calibration: per-dtype
+peak FLOP/s, HBM bandwidth, cache/scratchpad sizes and SM (core) counts —
+exactly the quantities the roofline-ratio transfer in ``core/transfer.py``
+needs.  Real per-device tables still come from running ``core/calibrate.py``
+ON the device; profiles are the analytical fallback that makes the whole
+fleet addressable *today*.
+
+Numbers are vendor datasheet values (dense, no sparsity) for the SXM/top
+variants unless noted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core import device as _device
+from repro.core.device import peak_lookup
+
+_DTYPE_BYTES = {"float32": 4, "tf32": 4, "bfloat16": 2, "float16": 2,
+                "int8": 1, "fp8": 1, "float64": 8}
+
+
+def dtype_bytes(dtype: str) -> int:
+    return _DTYPE_BYTES.get(str(dtype), 4)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    name: str
+    kind: str                     # 'gpu' | 'tpu' | 'cpu'
+    peak_flops: Dict[str, float]  # dtype -> FLOP/s (dense)
+    hbm_bw: float                 # bytes/s, main-memory bandwidth
+    hbm_bytes: int                # main-memory capacity
+    l2_bytes: int                 # L2 cache (0 where N/A)
+    smem_bytes: int               # shared memory / VMEM per SM (core)
+    sm_count: int                 # SMs (GPU) / TensorCores (TPU) / cores (CPU)
+    link_bw: float = 0.0          # NVLink / ICI / PCIe per direction, bytes/s
+    notes: str = ""
+
+    def peak(self, dtype: str, *, strict: bool | None = None) -> float:
+        return peak_lookup(self.peak_flops, dtype,
+                           f"DeviceProfile({self.name})", strict)
+
+    def ridge(self, dtype: str) -> float:
+        """Arithmetic-intensity knee (FLOP/byte) of this device's roofline:
+        ops below it are memory-bound, above it compute-bound."""
+        return self.peak(dtype) / self.hbm_bw
+
+    def roofline_throughput(self, ai: float, dtype: str) -> float:
+        """Attainable FLOP/s at arithmetic intensity ``ai`` (FLOP/byte)."""
+        return min(self.peak(dtype), ai * self.hbm_bw)
+
+
+GiB = 1024 ** 3
+MiB = 1024 ** 2
+KiB = 1024
+
+A100_80G = DeviceProfile(
+    name="a100_80g", kind="gpu",
+    peak_flops={"float32": 19.5e12, "tf32": 156e12, "bfloat16": 312e12,
+                "float16": 312e12, "int8": 624e12},
+    hbm_bw=2039e9, hbm_bytes=80 * GiB,
+    l2_bytes=40 * MiB, smem_bytes=164 * KiB, sm_count=108,
+    link_bw=600e9 / 2, notes="A100-SXM4-80GB (GA100)")
+
+H100_SXM = DeviceProfile(
+    name="h100_sxm", kind="gpu",
+    peak_flops={"float32": 67e12, "tf32": 494.5e12, "bfloat16": 989e12,
+                "float16": 989e12, "fp8": 1979e12, "int8": 1979e12},
+    hbm_bw=3350e9, hbm_bytes=80 * GiB,
+    l2_bytes=50 * MiB, smem_bytes=228 * KiB, sm_count=132,
+    link_bw=900e9 / 2, notes="H100-SXM5-80GB (GH100)")
+
+V100 = DeviceProfile(
+    name="v100", kind="gpu",
+    peak_flops={"float32": 15.7e12, "float16": 125e12, "bfloat16": 15.7e12},
+    hbm_bw=900e9, hbm_bytes=32 * GiB,
+    l2_bytes=6 * MiB, smem_bytes=96 * KiB, sm_count=80,
+    link_bw=300e9 / 2,
+    notes="V100-SXM2-32GB (GV100); no bf16 tensor cores — bf16 ~ fp32 rate")
+
+RTX_4090 = DeviceProfile(
+    name="rtx_4090", kind="gpu",
+    peak_flops={"float32": 82.6e12, "tf32": 82.6e12, "bfloat16": 165.2e12,
+                "float16": 165.2e12, "int8": 660.6e12},
+    hbm_bw=1008e9, hbm_bytes=24 * GiB,
+    l2_bytes=72 * MiB, smem_bytes=100 * KiB, sm_count=128,
+    link_bw=32e9, notes="GeForce RTX 4090 (AD102), GDDR6X, PCIe 4.0 x16")
+
+L4 = DeviceProfile(
+    name="l4", kind="gpu",
+    peak_flops={"float32": 30.3e12, "tf32": 60e12, "bfloat16": 121e12,
+                "float16": 121e12, "int8": 242e12, "fp8": 242e12},
+    hbm_bw=300e9, hbm_bytes=24 * GiB,
+    l2_bytes=48 * MiB, smem_bytes=100 * KiB, sm_count=58,
+    link_bw=32e9, notes="NVIDIA L4 (AD104), GDDR6, PCIe 4.0 x16")
+
+# single source of truth for v5e numbers is core/device.TPU_V5E (the
+# DeviceModel the dry-run rooflines use); mirror it, never restate it
+TPU_V5E = DeviceProfile(
+    name=_device.TPU_V5E.name, kind="tpu",
+    peak_flops=dict(_device.TPU_V5E.peak_flops),
+    hbm_bw=_device.TPU_V5E.hbm_bw, hbm_bytes=_device.TPU_V5E.hbm_bytes,
+    l2_bytes=0, smem_bytes=_device.TPU_V5E.vmem_bytes, sm_count=1,
+    link_bw=_device.TPU_V5E.ici_bw,
+    notes="TPU v5e chip; smem is the 128 MiB VMEM (core/device.TPU_V5E)")
+
+FLEET = (A100_80G, H100_SXM, V100, RTX_4090, L4, TPU_V5E)

@@ -83,24 +83,42 @@ def plan_stages(latencies: Sequence[float], n_stages: int) -> PartitionPlan:
 # Predictor-backed planning (per-block latencies from ONE batched call)
 # ---------------------------------------------------------------------------
 
+def _blocks_on(predictor, cfg, batch, seq, dtype, device):
+    """Per-block latencies on ``device`` (None = the predictor's own).  Fleet
+    devices need a fleet-capable predictor (``BatchPredictor.for_device``);
+    the scalar PM2Lat still works for single-device plans."""
+    if device is not None:
+        predictor = predictor.for_device(device)
+    return [float(t) for t in predictor.predict_blocks(cfg, batch, seq,
+                                                       dtype=dtype)]
+
+
 def plan_two_devices_model(predictor, cfg, batch: int, seq: int, *,
                            b_speed: float = 1.0, comm_cost: float = 0.0,
-                           dtype: Optional[str] = None
+                           dtype: Optional[str] = None,
+                           device_a: Optional[str] = None,
+                           device_b: Optional[str] = None
                            ) -> Tuple[PartitionPlan, List[float]]:
     """Two-device split for a model config: per-block latencies come from a
-    single batched predictor pass (``BatchPredictor.predict_blocks`` runs all
-    blocks' ops through one vectorized call per op family), device B modeled
-    as a uniform ``b_speed`` multiple of device A.  Returns (plan, blocks_a)."""
-    blocks = [float(t) for t in predictor.predict_blocks(cfg, batch, seq,
-                                                         dtype=dtype)]
-    plan = plan_two_devices(blocks, [t * b_speed for t in blocks], comm_cost)
+    single batched predictor pass per device (``BatchPredictor.predict_blocks``
+    runs all blocks' ops through one vectorized call per op family).  Name
+    fleet devices via ``device_a``/``device_b`` (e.g. split a model across an
+    A100 and an L4); without ``device_b``, device B falls back to a uniform
+    ``b_speed`` multiple of device A.  Returns (plan, blocks_a)."""
+    blocks = _blocks_on(predictor, cfg, batch, seq, dtype, device_a)
+    if device_b is not None:
+        blocks_b = _blocks_on(predictor, cfg, batch, seq, dtype, device_b)
+    else:
+        blocks_b = [t * b_speed for t in blocks]
+    plan = plan_two_devices(blocks, blocks_b, comm_cost)
     return plan, blocks
 
 
 def plan_stages_model(predictor, cfg, batch: int, seq: int, n_stages: int, *,
-                      dtype: Optional[str] = None
+                      dtype: Optional[str] = None,
+                      device: Optional[str] = None
                       ) -> Tuple[PartitionPlan, List[float]]:
-    """N-stage contiguous min-max partition from one batched prediction."""
-    blocks = [float(t) for t in predictor.predict_blocks(cfg, batch, seq,
-                                                         dtype=dtype)]
+    """N-stage contiguous min-max partition from one batched prediction,
+    optionally planned for a named fleet device."""
+    blocks = _blocks_on(predictor, cfg, batch, seq, dtype, device)
     return plan_stages(blocks, n_stages), blocks

@@ -53,35 +53,50 @@ class LatencyService:
         return registry.get_any(model)
 
     def latency_query(self, model: Union[str, ModelConfig], batch: int,
-                      seq: int, dtype: Optional[str] = None
-                      ) -> LatencyQueryResult:
-        """One (model, batch, seq, dtype) latency: cache hit or batch-predict."""
+                      seq: int, dtype: Optional[str] = None,
+                      device: Optional[str] = None) -> LatencyQueryResult:
+        """One (model, batch, seq, dtype[, device]) latency: cache hit or
+        batch-predict.  ``device`` names any registry profile
+        (``core/devices``); None answers for the calibrated host.  One
+        service instance serves the whole fleet — per-device predictors are
+        derived lazily over roofline-transferred tables and share this
+        service's cache under device-fingerprinted keys."""
         cfg = self._resolve(model)
-        key = PredictionCache.make_key(config_key(cfg), self.device,
+        pred = self.predictor.for_device(device)
+        key = PredictionCache.make_key(config_key(cfg), pred.device,
                                        dtype, batch, seq)
         hit = self.cache.get(key)
         if hit is not None:
-            return LatencyQueryResult(cfg.name, self.device,
+            return LatencyQueryResult(cfg.name, pred.device,
                                       dtype or "float32", int(batch),
                                       int(seq), hit, cached=True)
-        seconds, _ = self.predictor.predict_model(cfg, batch, seq, dtype=dtype)
+        seconds, _ = pred.predict_model(cfg, batch, seq, dtype=dtype)
         self.cache.put(key, seconds)
-        return LatencyQueryResult(cfg.name, self.device, dtype or "float32",
+        return LatencyQueryResult(cfg.name, pred.device, dtype or "float32",
                                   int(batch), int(seq), seconds, cached=False)
 
     def latency_grid(self, model: Union[str, ModelConfig],
                      batches: Sequence[int], seqs: Sequence[int],
-                     dtype: Optional[str] = None) -> np.ndarray:
+                     dtype: Optional[str] = None,
+                     device: Optional[str] = None) -> np.ndarray:
         """Bulk query: one symbolic grid prediction, every point written to
         the cache so subsequent ``latency_query`` calls are hits."""
         cfg = self._resolve(model)
-        grid = self.predictor.predict_model_grid(cfg, batches, seqs, dtype)
+        pred = self.predictor.for_device(device)
+        grid = pred.predict_model_grid(cfg, batches, seqs, dtype)
         for i, b in enumerate(batches):
             for j, s in enumerate(seqs):
                 self.cache.put(
-                    PredictionCache.make_key(config_key(cfg), self.device,
+                    PredictionCache.make_key(config_key(cfg), pred.device,
                                              dtype, b, s), float(grid[i, j]))
         return grid
+
+    def fleet(self) -> list:
+        """Devices this service can answer for: the calibrated host plus
+        every registered profile."""
+        from repro.core import devices as D
+        self.predictor.host_profile()       # ensure the host is registered
+        return D.list_devices()
 
     def save_cache(self, path: Optional[str] = None):
         self.cache.save(path)

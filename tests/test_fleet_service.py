@@ -1,0 +1,162 @@
+"""Fleet-level integration over the real calibration: device-fingerprinted
+cache keys, the multi-device LatencyService round-trip, the golden
+(bit-identical) host path, and device-aware partition planning."""
+import numpy as np
+import pytest
+
+from repro.configs import registry as cr
+from repro.core import calibrate
+from repro.core.batch_predict import (BatchPredictor, PredictionCache,
+                                      config_key)
+from repro.core.partition import plan_stages_model, plan_two_devices_model
+
+FLEET = ("a100_80g", "h100_sxm", "v100", "rtx_4090", "l4", "tpu_v5e")
+
+
+@pytest.fixture(scope="module")
+def bp(calibration_store):
+    return BatchPredictor(calibration_store, calibrate.device_name())
+
+
+# ---------------------------------------------------------------------------
+# derived predictors + golden host path
+# ---------------------------------------------------------------------------
+
+def test_for_device_host_is_self(bp):
+    assert bp.for_device(None) is bp
+    assert bp.for_device(bp.device) is bp
+
+
+def test_for_device_is_cached_and_rekeyed(bp):
+    a = bp.for_device("a100_80g")
+    assert a is bp.for_device("a100_80g")
+    assert a.device == "a100_80g"
+    assert all(t.key.device == "a100_80g" for t in a.store.tables.values())
+    assert a.store.meta["transferred_from"] == bp.device
+
+
+def test_unknown_device_raises_with_fleet_list(bp):
+    with pytest.raises(KeyError, match="registered"):
+        bp.for_device("a100-80gb")
+
+
+def test_host_golden_predictions_unchanged_by_fleet_use(bp, calibration_store):
+    """Bit-identical host predictions whether or not the fleet machinery is
+    exercised: device=None, device=host, and a fresh PR-1-style predictor
+    all agree exactly."""
+    cfg = cr.reduced("qwen2-0.5b")
+    want, _ = BatchPredictor(calibration_store,
+                             calibrate.device_name()).predict_model(cfg, 2, 32)
+    bp.for_device("a100_80g")               # warm the fleet first
+    got_none, _ = bp.predict_model(cfg, 2, 32)
+    got_host, _ = bp.predict_model(cfg, 2, 32, device=bp.device)
+    assert got_none == want and got_host == want
+
+
+def test_fleet_latencies_distinct_and_roofline_ordered(bp):
+    """Every fleet device answers with a distinct positive latency; a device
+    that dominates another in BOTH peak and bandwidth is never slower."""
+    cfg = cr.get_any("qwen3-mini")
+    host, _ = bp.predict_model(cfg, 8, 256)
+    lat = {d: bp.predict_model(cfg, 8, 256, device=d)[0] for d in FLEET}
+    assert all(s > 0 for s in lat.values())
+    assert len({round(s, 15) for s in lat.values()}) == len(FLEET)
+    assert all(s < host for s in lat.values())      # every GPU beats the CPU
+    # dominance pairs: (faster, slower) in both roofline dimensions
+    assert lat["h100_sxm"] < lat["a100_80g"] < lat["v100"]
+    assert lat["h100_sxm"] < lat["l4"]
+
+
+def test_grid_matches_pointwise_on_transferred_device(bp):
+    """The symbolic grid path and the per-point path agree on a derived
+    predictor exactly as they do on the host."""
+    cfg = cr.reduced("qwen2-0.5b")
+    grid = bp.predict_model_grid(cfg, (1, 2), (16, 32), device="l4")
+    for i, b in enumerate((1, 2)):
+        for j, s in enumerate((16, 32)):
+            want, _ = bp.predict_model(cfg, b, s, device="l4")
+            assert float(grid[i, j]) == pytest.approx(want, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# device-fingerprinted cache keys
+# ---------------------------------------------------------------------------
+
+def test_cache_keys_distinct_per_device():
+    keys = {PredictionCache.make_key("m@00000000", d, None, 8, 256)
+            for d in FLEET + ("cpu_host",)}
+    assert len(keys) == len(FLEET) + 1
+
+
+def test_cached_predictions_do_not_collide_across_devices(bp):
+    cfg = cr.reduced("qwen2-0.5b")
+    cache = PredictionCache(maxsize=32)
+    t_host = bp.predict_model_cached(cfg, 2, 32, cache=cache)
+    t_a100 = bp.predict_model_cached(cfg, 2, 32, cache=cache, device="a100_80g")
+    assert cache.stats["misses"] == 2 and cache.stats["size"] == 2
+    assert t_host != t_a100
+    # both hit on re-query, each under its own device fingerprint
+    assert bp.predict_model_cached(cfg, 2, 32, cache=cache) == t_host
+    assert bp.predict_model_cached(cfg, 2, 32, cache=cache,
+                                   device="a100_80g") == t_a100
+    assert cache.stats["hits"] == 2
+    for d in ("cpu_host", "a100_80g"):
+        assert PredictionCache.make_key(config_key(cfg), d, None, 2, 32) in cache
+
+
+# ---------------------------------------------------------------------------
+# fleet service round-trip
+# ---------------------------------------------------------------------------
+
+def test_latency_service_fleet_round_trip(calibration_store, tmp_path):
+    from repro.serving.latency_service import LatencyService
+    path = str(tmp_path / "fleet_cache.json")
+    svc = LatencyService(calibration_store, calibrate.device_name(),
+                         cache_path=path)
+    assert set(FLEET) <= set(svc.fleet()) and svc.device in svc.fleet()
+    results = {d: svc.latency_query("qwen3-mini", 8, 256, device=d)
+               for d in FLEET}
+    assert all(not r.cached and r.device == d for d, r in results.items())
+    assert len({r.seconds for r in results.values()}) == len(FLEET)
+    # second pass: all served from the shared cache
+    for d, first in results.items():
+        again = svc.latency_query("qwen3-mini", 8, 256, device=d)
+        assert again.cached and again.seconds == first.seconds
+    # grid fill for one device makes its queries cache hits
+    grid = svc.latency_grid("qwen3-mini", (1, 8), (128, 256), device="l4")
+    q = svc.latency_query("qwen3-mini", 8, 256, device="l4")
+    assert q.cached and float(grid[1, 1]) == pytest.approx(q.seconds, rel=1e-9)
+    # persistence: a fresh service answers the whole fleet from disk
+    svc.save_cache()
+    svc2 = LatencyService(calibration_store, calibrate.device_name(),
+                          cache_path=path)
+    for d, first in results.items():
+        r = svc2.latency_query("qwen3-mini", 8, 256, device=d)
+        assert r.cached and r.seconds == pytest.approx(first.seconds)
+
+
+# ---------------------------------------------------------------------------
+# device-aware partition planning
+# ---------------------------------------------------------------------------
+
+def test_plan_two_devices_model_named_devices(bp):
+    cfg = cr.reduced("qwen2-0.5b", n_layers=4)
+    plan, blocks_a = plan_two_devices_model(bp, cfg, 2, 32,
+                                            device_a="a100_80g",
+                                            device_b="l4")
+    assert len(blocks_a) == 4 and plan.bottleneck > 0
+    np.testing.assert_allclose(
+        blocks_a, bp.predict_blocks(cfg, 2, 32, device="a100_80g"), rtol=1e-12)
+    # the asymmetric fleet plan shifts work onto the faster device vs a
+    # homogeneous split
+    sym, _ = plan_two_devices_model(bp, cfg, 2, 32, device_a="a100_80g",
+                                    device_b="a100_80g")
+    assert plan.split_point >= sym.split_point
+
+
+def test_plan_stages_model_device_kwarg(bp):
+    cfg = cr.reduced("qwen2-0.5b", n_layers=4)
+    plan_host, _ = plan_stages_model(bp, cfg, 2, 32, 2)
+    plan_h100, blocks = plan_stages_model(bp, cfg, 2, 32, 2, device="h100_sxm")
+    assert plan_h100.bottleneck < plan_host.bottleneck
+    assert plan_h100.bottleneck == pytest.approx(max(plan_h100.stage_times))
