@@ -1,0 +1,74 @@
+#!/usr/bin/env python
+"""CI smoke: a tiny kernel-selection-oracle round-trip over the real
+calibration store (scripts/test.sh --smoke).
+
+Exercises the full dispatch path the predictors ride: candidate enumeration,
+matmul/bmm nearest-grid selection, attention selection, dtype fallback, and
+scalar==vectorized agreement on both the selected kernel and the predicted
+seconds.  Exits non-zero on any disagreement.
+"""
+import sys
+
+import numpy as np
+
+from repro.core import calibrate, opgraph as og
+from repro.core.batch_predict import BatchPredictor
+from repro.core.oracle import PROVIDER_PALLAS
+from repro.core.predictor import PM2Lat
+
+
+def main() -> int:
+    store = calibrate.load_or_calibrate(verbose=False)
+    dev = calibrate.device_name()
+    pm = PM2Lat(store, dev)
+    bp = BatchPredictor(store, dev)
+    rng = np.random.default_rng(0)
+
+    checks = 0
+    for _ in range(50):
+        m, n, k = (int(rng.integers(16, 4096)) for _ in range(3))
+        b = int(rng.integers(1, 32))
+        kind = "bmm" if rng.integers(2) else "matmul"
+        op = og.MatmulOp("op", m=m, n=n, k=k, batch=b, kind=kind)
+        want = pm.predict_matmul(op)
+        t = pm._matmul_table(op, None)
+        got, kernels = bp.predict_matmul_batch(m, n, k, b, kind=kind,
+                                               return_kernels=True)
+        assert kernels.item() == t.key.kernel, (op, kernels.item(), t.key.id())
+        assert abs(float(got) - want) <= 1e-9 * want, (op, float(got), want)
+        checks += 1
+
+    for _ in range(20):
+        skv = int(rng.integers(16, 8192))
+        op = og.AttentionOp("a", batch=2, heads=4, kv_heads=4, sq=skv,
+                            skv=skv, hd=64)
+        want = pm.predict_attention(op)
+        got, kernels = bp.predict_attention_batch([op.skv], [op.flops],
+                                                  [op.hd],
+                                                  return_kernels=True)
+        assert kernels[0] == pm._attention_table(op, None).key.kernel
+        assert abs(float(got[0]) - want) <= 1e-9 * want
+        checks += 1
+
+    # deterministic: same store, fresh oracle, same answers
+    pm2 = PM2Lat(store, dev)
+    for fam, shape in (("matmul", (384, 1536)), ("bmm", (128, 128, 16)),
+                       ("attention", (512, 64))):
+        a = pm.oracle.select(fam, "float32", shape).key.id()
+        b_ = pm2.oracle.select(fam, "float32", shape).key.id()
+        assert a == b_, (fam, a, b_)
+        checks += 1
+
+    # the Table VI provider pool answers too
+    sel = pm.oracle.select_matmul("matmul", "float32", 256, 256,
+                                  provider=PROVIDER_PALLAS)
+    assert sel.key.kernel.startswith("mm_"), sel.key.id()
+    checks += 1
+
+    print(f"oracle smoke: {checks} selections OK "
+          f"(device={dev}, tables={len(store.tables)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

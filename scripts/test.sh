@@ -25,6 +25,9 @@ done
 timeout "$TIMEOUT" python -m pytest -x -q ${ARGS[@]+"${ARGS[@]}"}
 
 if [[ "$SMOKE" == 1 ]]; then
+  echo "--- smoke: kernel-selection-oracle round-trip ---"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TIMEOUT" \
+    python scripts/oracle_smoke.py
   echo "--- smoke: vectorized NAS batch-prediction benchmark ---"
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TIMEOUT" \
     python -m benchmarks.nas_speed --limit 200000 --skip-neusight

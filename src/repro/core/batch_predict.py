@@ -10,13 +10,13 @@ grid at ~0.045 ms/prediction — and for the search loops behind the partition
 planner and serving admission control.  ``BatchPredictor`` vectorizes every
 op family over numpy arrays:
 
-* **matmul / bmm** — a vectorized nearest-grid kernel-selection oracle (the
-  ``(log-area, log-aspect)`` rule of ``PM2Lat._nearest_grid_table``) scored
-  for all configs at once against the stacked metadata of every profiled
-  reference grid, then Eq(2)/Eq(1) interpolation evaluated per selected
-  table with masked numpy ops.
-* **attention** — Eq(2) piecewise-linear interpolation over ``skv``
-  evaluated for all configs at once, then ``flops / throughput``.
+* **matmul / bmm** — the kernel-selection oracle (``core/oracle.py``,
+  shared with the scalar predictor) scored for all configs at once against
+  the stacked metadata of every profiled reference grid, then Eq(2)/Eq(1)
+  interpolation evaluated per selected table with masked numpy ops.
+* **attention** — the same oracle selects among the profiled attention
+  kernels per (skv, head_dim); Eq(2) piecewise-linear interpolation over
+  ``skv`` is evaluated for all configs at once, then ``flops / throughput``.
 * **memory-bound ops** — one matrix product of the stacked proxy-feature
   rows through the per-class ``MemoryModel`` linear coefficients.
 
@@ -51,6 +51,7 @@ import numpy as np
 
 from repro.configs import base as C
 from repro.core import opgraph as og
+from repro.core import oracle as O
 from repro.core.memory_model import class_of, feature_vector
 from repro.core.predictor import PM2Lat, PredictionRow
 from repro.core.table import TableStore, ThroughputTable
@@ -71,7 +72,7 @@ class _TableInterp:
         self.thr = np.array([t.anchors[int(k)] for k in self.ks])
         self.org_thr = t.anchors[t.k_max]
         m0, n0 = t.ref_grid
-        self.ref_area = float(m0 * n0)
+        self.ref_area = float(m0 * n0 * t.ref_batch)
 
     def throughput(self, k) -> np.ndarray:
         """``ThroughputTable.interpolate_throughput``, vectorized."""
@@ -84,12 +85,15 @@ class _TableInterp:
         return np.where(k >= self.ks[-1], self.thr[-1], out)
 
     def predict(self, m, n, k, batch=1) -> np.ndarray:
-        """``ThroughputTable.predict`` (XLA-chosen-tile path), vectorized."""
+        """``ThroughputTable.predict`` (XLA-chosen-tile path), vectorized.
+        The one-full-tile floor mirrors the scalar path in lockstep (the
+        paper's partial-block rule: sub-reference shapes never cost a
+        fraction of the reference wave)."""
         m, n, k = _f64(m), _f64(n), _f64(k)
         dur_ref = (self.t.org_dur * (k / self.t.k_max)
                    * (self.org_thr / self.throughput(k)))
         tiles_new = m * n * _f64(batch) / self.ref_area
-        return dur_ref * np.maximum(tiles_new, 1e-9)
+        return dur_ref * np.maximum(tiles_new, 1.0)
 
 
 # ---------------------------------------------------------------------------
@@ -114,6 +118,7 @@ class _GAttn:
     flops: object                # already includes count (as AttentionOp.flops)
     skv: object
     dtype: str = "float32"
+    hd: object = None            # head dim (kernel-selection oracle input)
 
 
 @dataclasses.dataclass
@@ -156,7 +161,7 @@ def enumerate_grid_ops(cfg: C.ModelConfig, batch: np.ndarray, seq: np.ndarray,
             _GMat(f"{prefix}.wv", "matmul", T, hkv * hd, d, 1, n_layers, dt),
             _GMem(f"{prefix}.rope", "rope", (T, hq, hd), n_layers, dt),
             _GAttn(f"{prefix}.attn", attn_flops(b, hq, s, skv, hd, n_layers),
-                   skv, dt),
+                   skv, dt, hd=hd),
             _GMat(f"{prefix}.wo", "matmul", T, d, hq * hd, 1, n_layers, dt),
             _GMem(f"{prefix}.residual", "add", (T, d), n_layers, dt),
         ]
@@ -218,7 +223,8 @@ def enumerate_grid_ops(cfg: C.ModelConfig, batch: np.ndarray, seq: np.ndarray,
                 _GMat("cross.wq", "matmul", T, hq * hd, d, 1, n, dt),
                 _GMat("cross.wk", "matmul", Tx, hkv * hd, d, 1, n, dt),
                 _GMat("cross.wv", "matmul", Tx, hkv * hd, d, 1, n, dt),
-                _GAttn("cross.attn", attn_flops(b, hq, s, Lx, hd, n), Lx, dt),
+                _GAttn("cross.attn", attn_flops(b, hq, s, Lx, hd, n), Lx, dt,
+                       hd=hd),
                 _GMat("cross.wo", "matmul", T, d, hq * hd, 1, n, dt),
             ]
             ops += ffn_ops(n, "decoder")
@@ -245,7 +251,8 @@ def enumerate_grid_ops(cfg: C.ModelConfig, batch: np.ndarray, seq: np.ndarray,
                 _GMem("mlstm.conv", "conv1d4", (b, s, di), n, dt),
                 _GMat("mlstm.qkv", "matmul", T, di, di, 1, 3 * n, dt),
                 _GAttn("mlstm.intra",
-                       attn_flops(b * nC, hq, chunk, chunk, hdm, n), chunk, dt),
+                       attn_flops(b * nC, hq, chunk, chunk, hdm, n), chunk, dt,
+                       hd=hdm),
                 _GMat("mlstm.state", "bmm", hdm, hdm, chunk, b * nC * hq,
                       2 * n, dt),
                 _GMem("mlstm.gate", "silu_mul", (T, di), n, dt),
@@ -273,7 +280,7 @@ def enumerate_grid_ops(cfg: C.ModelConfig, batch: np.ndarray, seq: np.ndarray,
             _GAttn("enc.attn",
                    attn_flops(b, hq, cfg.encoder.n_frames,
                               cfg.encoder.n_frames, hd, n),
-                   cfg.encoder.n_frames, dt),
+                   cfg.encoder.n_frames, dt, hd=hd),
         ]
         ops += _mlp_ops("enc.ff", n, ff)
 
@@ -298,7 +305,11 @@ class BatchPredictor:
                  cache: Optional["PredictionCache"] = None):
         self.store = store
         self.device = device
-        self.scalar = PM2Lat(store, device)     # shared table lookup/fallback
+        self.scalar = PM2Lat(store, device)
+        # THE oracle: the same instance the scalar path dispatches through,
+        # so candidate order, scoring, dtype fallback, and warn-once state
+        # are shared — batch==scalar equivalence includes kernel selection.
+        self.oracle = self.scalar.oracle
         self.memory_model = self.scalar.memory_model
         self.cache = cache
         self._interp: Dict[str, _TableInterp] = {}
@@ -350,54 +361,86 @@ class BatchPredictor:
             self._interp[key] = _TableInterp(t)
         return self._interp[key]
 
-    def _oracle_candidates(self, dtype: str) -> List[ThroughputTable]:
-        """Same candidate set and ORDER as PM2Lat._nearest_grid_table."""
-        return [t for t in self.store.tables.values()
-                if t.key.op == "matmul"
-                and t.key.kernel.startswith("xla_default")
-                and t.key.dtype == dtype and t.key.device == self.device]
-
     # ----- vectorized op families -----
+    def _matmul_select(self, m, n, batch, *, dtype: str, kind: str
+                       ) -> Tuple[List[ThroughputTable], np.ndarray]:
+        """Vectorized oracle selection: the shared candidate enumeration and
+        scoring from ``core/oracle.py`` applied to flat config arrays.
+        Returns ``(candidates, selected_index_per_config)``."""
+        cands, _ = self.oracle.candidates_with_fallback(kind, dtype)
+        scores = O.score_matmul(cands, m, n, batch)
+        return cands, np.argmin(scores, axis=0)   # first-wins, as the scalar
+
     def predict_matmul_batch(self, m, n, k, batch=1, count=1, *,
                              dtype: str = "float32", kind: str = "matmul",
-                             kernel: Optional[str] = None) -> np.ndarray:
+                             kernel: Optional[str] = None,
+                             return_kernels: bool = False) -> np.ndarray:
         """Seconds for a batch of matmul/bmm configs (broadcastable args).
-        ``kind='matmul'`` without an explicit kernel runs the vectorized
-        nearest-grid kernel-selection oracle."""
+        Without an explicit ``kernel``, the shared kernel-selection oracle
+        picks the profiled reference grid per config (matmul AND bmm).
+        ``return_kernels=True`` additionally returns the selected kernel id
+        per config (object array, same shape)."""
         m, n, k, batch, count = np.broadcast_arrays(
             _f64(m), _f64(n), _f64(k), _f64(batch), _f64(count))
         shape = m.shape
         m, n, k, batch, count = (a.ravel() for a in (m, n, k, batch, count))
-        if kernel is not None or kind != "matmul":
-            t = self.scalar._table(kind, kernel or "xla_default", dtype)
-            out = self._table_interp(t).predict(m, n, k, batch) * count
-            return out.reshape(shape)
-        cands = self._oracle_candidates(dtype)
-        if not cands:
-            t = self.scalar._table("matmul", "xla_default", dtype)
-            out = self._table_interp(t).predict(m, n, k, batch) * count
-            return out.reshape(shape)
-        area, aspect = m * n, m / n
-        scores = np.empty((len(cands), m.size))
-        for i, t in enumerate(cands):
-            m0, n0 = t.ref_grid
-            scores[i] = (np.abs(np.log(area / (m0 * n0)))
-                         + 0.5 * np.abs(np.log(aspect / (m0 / n0))))
-        sel = np.argmin(scores, axis=0)         # first-wins, as the scalar oracle
+        if kernel is not None:
+            t = self.oracle.lookup(kind, kernel, dtype)
+            out = (self._table_interp(t).predict(m, n, k, batch)
+                   * count).reshape(shape)
+            if return_kernels:
+                return out, np.full(shape, t.key.kernel, object)
+            return out
+        cands, sel = self._matmul_select(m, n, batch, dtype=dtype, kind=kind)
         out = np.empty(m.size)
+        kernels = np.empty(m.size, object) if return_kernels else None
         for i, t in enumerate(cands):
             mask = sel == i
             if mask.any():
                 out[mask] = self._table_interp(t).predict(
                     m[mask], n[mask], k[mask], batch[mask])
-        return (out * count).reshape(shape)
+                if kernels is not None:
+                    kernels[mask] = t.key.kernel
+        out = (out * count).reshape(shape)
+        if return_kernels:
+            return out, kernels.reshape(shape)
+        return out
 
-    def predict_attention_batch(self, skv, flops, *, dtype: str = "float32",
-                                kernel: str = "fa_jnp") -> np.ndarray:
+    def predict_attention_batch(self, skv, flops, hd=None, *,
+                                dtype: str = "float32",
+                                kernel: Optional[str] = None,
+                                return_kernels: bool = False) -> np.ndarray:
         """Seconds for a batch of attention configs.  ``flops`` must already
-        include the per-op repetition count (as ``AttentionOp.flops`` does)."""
-        t = self.scalar._table("attention", kernel, dtype)
-        return _f64(flops) / self._table_interp(t).throughput(skv)
+        include the per-op repetition count (as ``AttentionOp.flops`` does).
+        Without an explicit ``kernel``, the shared oracle selects the
+        profiled attention kernel per (skv, head_dim)."""
+        skv, flops = np.broadcast_arrays(_f64(skv), _f64(flops))
+        shape = skv.shape
+        skv, flops = skv.ravel(), flops.ravel()
+        if hd is not None:
+            hd = np.broadcast_to(_f64(hd), shape).ravel()
+        if kernel is not None:
+            t = self.oracle.lookup("attention", kernel, dtype)
+            out = (flops / self._table_interp(t).throughput(skv)
+                   ).reshape(shape)
+            if return_kernels:
+                return out, np.full(shape, t.key.kernel, object)
+            return out
+        cands, _ = self.oracle.candidates_with_fallback("attention", dtype)
+        sel = np.argmin(O.score_attention(cands, skv, hd), axis=0)
+        out = np.empty(skv.size)
+        kernels = np.empty(skv.size, object) if return_kernels else None
+        for i, t in enumerate(cands):
+            mask = sel == i
+            if mask.any():
+                out[mask] = (flops[mask]
+                             / self._table_interp(t).throughput(skv[mask]))
+                if kernels is not None:
+                    kernels[mask] = t.key.kernel
+        out = out.reshape(shape)
+        if return_kernels:
+            return out, kernels.reshape(shape)
+        return out
 
     def _memory_coef(self, snippet: str) -> np.ndarray:
         mmod = self.memory_model
@@ -427,9 +470,13 @@ class BatchPredictor:
         return (X * Cm).sum(axis=1) * counts
 
     # ----- op-list interface (drop-in for PM2Lat) -----
-    def predict_ops_seconds(self, ops: Sequence) -> np.ndarray:
-        """Vectorized per-op seconds, aligned with ``ops``."""
+    def _predict_ops_arrays(self, ops: Sequence
+                            ) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized per-op ``(seconds, selected kernel id)``, aligned with
+        ``ops`` — kernel ids come from the shared oracle, matching the
+        scalar predictor's ``PredictionRow.kernel`` attribution."""
         secs = np.zeros(len(ops))
+        kernels = np.full(len(ops), "linreg", object)
         groups: Dict[tuple, List[int]] = {}
         for i, op in enumerate(ops):
             if op.kind in ("matmul", "bmm"):
@@ -442,30 +489,29 @@ class BatchPredictor:
             sub = [ops[i] for i in idx]
             if gkey[0] == "mm":
                 _, kind, dtype = gkey
-                secs[idx] = self.predict_matmul_batch(
+                secs[idx], kernels[idx] = self.predict_matmul_batch(
                     [o.m for o in sub], [o.n for o in sub], [o.k for o in sub],
                     [o.batch for o in sub], [o.count for o in sub],
-                    dtype=dtype, kind=kind)
+                    dtype=dtype, kind=kind, return_kernels=True)
             elif gkey[0] == "attn":
-                secs[idx] = self.predict_attention_batch(
-                    [o.skv for o in sub], [o.flops for o in sub], dtype=gkey[1])
+                secs[idx], kernels[idx] = self.predict_attention_batch(
+                    [o.skv for o in sub], [o.flops for o in sub],
+                    [o.hd for o in sub], dtype=gkey[1], return_kernels=True)
             else:
                 secs[idx] = self.predict_memory_batch(sub)
-        return secs
+        return secs, kernels
+
+    def predict_ops_seconds(self, ops: Sequence) -> np.ndarray:
+        """Vectorized per-op seconds, aligned with ``ops``."""
+        return self._predict_ops_arrays(ops)[0]
 
     def predict_ops(self, ops: Sequence) -> Tuple[float, List[PredictionRow]]:
-        secs = self.predict_ops_seconds(ops)
+        secs, kernels = self._predict_ops_arrays(ops)
         rows = []
-        for op, sec in zip(ops, secs):
-            if op.kind in ("matmul", "bmm"):
-                rows.append(PredictionRow(op.name, op.kind, float(sec),
-                                          "xla_default"))
-            elif op.kind == "attention":
-                rows.append(PredictionRow(op.name, "attention", float(sec),
-                                          "fa_jnp"))
-            else:
-                rows.append(PredictionRow(op.name, "memory", float(sec),
-                                          "linreg"))
+        for op, sec, kern in zip(ops, secs, kernels):
+            kind = op.kind if op.kind in ("matmul", "bmm", "attention") \
+                else "memory"
+            rows.append(PredictionRow(op.name, kind, float(sec), str(kern)))
         return sum(r.seconds for r in rows), rows
 
     def predict_model(self, cfg: C.ModelConfig, batch: int, seq: int,
@@ -522,7 +568,9 @@ class BatchPredictor:
         for dtype, sub in agroups.items():
             skv = np.stack([np.broadcast_to(_f64(o.skv), (G,)) for o in sub])
             fl = np.stack([np.broadcast_to(_f64(o.flops), (G,)) for o in sub])
-            total += self.predict_attention_batch(skv, fl, dtype=dtype).sum(axis=0)
+            hd = np.stack([np.broadcast_to(_f64(o.hd), (G,)) for o in sub])
+            total += self.predict_attention_batch(skv, fl, hd,
+                                                  dtype=dtype).sum(axis=0)
         mem = [op for op in gops if isinstance(op, _GMem)]
         if mem:
             X = np.empty((len(mem), G, 4))
@@ -598,7 +646,17 @@ def config_key(cfg: C.ModelConfig) -> str:
 class PredictionCache:
     """LRU cache of model-level predictions keyed on
     ``(model, device, dtype, batch, seq)``, JSON-persistable so NAS sweeps
-    and the serving latency endpoint survive process restarts."""
+    and the serving latency endpoint survive process restarts.
+
+    ``SCHEMA`` stamps the persisted file with the prediction SEMANTICS
+    version: bump it whenever the predictor's math changes (e.g. the
+    partial-block tile floor), so caches persisted under the old semantics
+    self-invalidate on load instead of silently serving stale latencies.
+    """
+
+    # 2: one-full-tile floor on the tile=None path + oracle-driven
+    #    bmm/attention kernel selection (entries differ from schema-1 values)
+    SCHEMA = 2
 
     def __init__(self, maxsize: int = 65536, path: Optional[str] = None):
         self.maxsize = int(maxsize)
@@ -649,20 +707,25 @@ class PredictionCache:
         os.makedirs(os.path.dirname(path), exist_ok=True)
         tmp = f"{path}.tmp.{os.getpid()}"
         with open(tmp, "w") as f:
-            json.dump({"entries": list(self._od.items())}, f)
+            json.dump({"schema": self.SCHEMA,
+                       "entries": list(self._od.items())}, f)
         os.replace(tmp, path)
 
     def load(self, path: Optional[str] = None):
         """A corrupt/truncated file is treated as an empty cache (predictions
-        are recomputable); explicit loads of well-formed files still raise on
-        missing paths via open()."""
+        are recomputable), and so is a file persisted under a different
+        ``SCHEMA`` — entries computed with old predictor semantics must not
+        be served as current; explicit loads of well-formed files still
+        raise on missing paths via open()."""
         path = path or self.path
         try:
             with open(path) as f:
                 d = json.load(f)
         except (json.JSONDecodeError, ValueError):
             return
-        entries = d.get("entries", []) if isinstance(d, dict) else []
+        if not isinstance(d, dict) or d.get("schema") != self.SCHEMA:
+            return
+        entries = d.get("entries", [])
         for e in entries:
             if (isinstance(e, (list, tuple)) and len(e) == 2
                     and isinstance(e[0], str)

@@ -5,13 +5,14 @@ The paper's stance is per-device profiling ("for newer devices we rerun the
 full data-collection on the target hardware").  Here the measurable device is
 the CPU host; the same driver would run unchanged on a TPU worker.
 
-Collected kernel families:
-  - matmul|xla_default        (the framework's jnp/einsum path), fp32 + bf16
-  - bmm|xla_default           (batched)
-  - attention|fa_jnp          (the model stack's flash-attention path)
-  - matmul|mm_<cfg>           (Pallas interpret kernels - Table VI targets)
-  - attention|fa_<cfg>        (Pallas flash attention)
-  - memory model              (utility ops, linear regression)
+Collected kernel families (each a selection-oracle candidate, core/oracle.py):
+  - matmul|xla_default@<m0>x<n0>      (the framework's jnp/einsum path, one
+                                       table per reference grid), fp32 + bf16
+  - bmm|xla_default@<b0>x<m0>x<n0>    (batched, one table per reference grid)
+  - attention|fa_jnp                  (the model stack's flash-attention path)
+  - matmul|mm_<cfg>                   (Pallas interpret kernels - Table VI)
+  - attention|fa_<cfg>                (Pallas flash attention, per dtype)
+  - memory model                      (utility ops, linear regression)
 """
 from __future__ import annotations
 
@@ -43,10 +44,18 @@ def _table_from_measurements(key, anchors_dur, m0, n0, batch=1,
     k_max = max(anchors_dur)
     return ThroughputTable(key=key, anchors=anchors,
                            org_dur=anchors_dur[k_max], k_max=k_max,
-                           ref_grid=(m0, n0), ref_tiles=ref_tiles)
+                           ref_grid=(m0, n0), ref_tiles=ref_tiles,
+                           ref_batch=batch)
 
 
 REF_GRIDS = ((64, 256), (256, 256), (512, 512), (1024, 1024))
+
+# bmm reference grids (B0, M0, N0): like the matmul grids, each regime the
+# batched-GEMM lowering treats differently (many small mats, few large mats,
+# skinny per-batch planes) is its own kernel with its own table — the
+# selection oracle picks the nearest by (log-area, log-aspect) with the
+# batch folded into the area.
+BMM_REF_GRIDS = ((8, 256, 256), (32, 64, 64), (2, 512, 512))
 
 
 def calibrate_matmul(store: TableStore, *, dtype=jnp.float32,
@@ -70,20 +79,27 @@ def calibrate_matmul(store: TableStore, *, dtype=jnp.float32,
         store.add(_table_from_measurements(key, durs, m0, n0))
 
 
-def calibrate_bmm(store: TableStore, *, dtype=jnp.float32, b0=8, m0=256,
-                  n0=256, k_anchors=(32, 64, 128, 256, 512, 1024, 2048, 4096),
+def calibrate_bmm(store: TableStore, *, dtype=jnp.float32,
+                  grids=BMM_REF_GRIDS,
+                  k_anchors=(32, 64, 128, 256, 512, 1024, 2048, 4096),
                   verbose=False):
+    """One table per (B0, M0, N0) reference grid; the profiled batch is
+    recorded as ``ref_batch`` (oracle metadata) instead of being folded into
+    the grid, so aspect scoring sees the true per-batch plane."""
     dt = jnp.dtype(dtype)
     f = jax.jit(lambda a, b: jnp.einsum("bmk,bkn->bmn", a, b))
-    durs = {}
-    for k in k_anchors:
-        a = jnp.ones((b0, m0, k), dt)
-        b = jnp.ones((b0, k, n0), dt)
-        durs[k] = profiler.measure(f, a, b)
-    key = KernelKey("bmm", "xla_default", dt.name, device_name())
-    t = _table_from_measurements(key, durs, m0, n0, batch=b0)
-    t.ref_grid = (m0 * b0, n0)  # area scaling includes the profiled batch
-    store.add(t)
+    for b0, m0, n0 in grids:
+        durs = {}
+        for k in k_anchors:
+            a = jnp.ones((b0, m0, k), dt)
+            b = jnp.ones((b0, k, n0), dt)
+            durs[k] = profiler.measure(f, a, b)
+            if verbose:
+                print(f"  bmm {dt.name} {b0}x{m0}x{n0} K={k}: "
+                      f"{durs[k]*1e3:.3f} ms")
+        key = KernelKey("bmm", f"xla_default@{b0}x{m0}x{n0}", dt.name,
+                        device_name())
+        store.add(_table_from_measurements(key, durs, m0, n0, batch=b0))
 
 
 def calibrate_attention(store: TableStore, *, dtype=jnp.float32, b0=2, h0=4,
@@ -105,7 +121,7 @@ def calibrate_attention(store: TableStore, *, dtype=jnp.float32, b0=2, h0=4,
     key = KernelKey("attention", "fa_jnp", dt.name, device_name())
     store.add(ThroughputTable(key=key, anchors=anchors, org_dur=durs[s_max],
                               k_max=s_max, ref_grid=(b0 * h0 * s_max, s_max),
-                              ref_tiles=1))
+                              ref_tiles=1, ref_head_dim=hd0))
 
 
 def calibrate_pallas_matmul(store: TableStore, configs=None, *,
@@ -113,13 +129,16 @@ def calibrate_pallas_matmul(store: TableStore, configs=None, *,
                             k_anchors=(128, 256, 512, 1024, 2048),
                             verbose=False):
     """Interpret-mode Pallas kernels: each BlockSpec config is its own
-    kernel with its own table (kernel differentiation, Table VI)."""
+    kernel with its own table (kernel differentiation, Table VI).  The
+    reference grid is PROPORTIONAL to the block config (2x2 tiles), so the
+    selection oracle's nearest-grid rule can tell the configs apart — a
+    shared fixed grid would make every ``mm_<cfg>`` score identically."""
     dt = jnp.dtype(dtype)
     configs = configs or (mkern.MatmulConfig(128, 128, 128),
                           mkern.MatmulConfig(256, 256, 256))
     for cfg in configs:
-        m0 = max(cfg.bm, 256)
-        n0 = max(cfg.bn, 256)
+        m0 = 2 * cfg.bm
+        n0 = 2 * cfg.bn
         f = jax.jit(lambda a, b: mkern.matmul_kernel(a, b, cfg, interpret=True))
         durs = {}
         for k in k_anchors:
@@ -137,25 +156,34 @@ def calibrate_pallas_matmul(store: TableStore, configs=None, *,
 
 
 def calibrate_pallas_attention(store: TableStore, configs=None, *,
-                               dtype=jnp.float32,
+                               dtypes=(jnp.float32,),
                                s_anchors=(128, 256, 512, 1024), verbose=False):
-    dt = jnp.dtype(dtype)
+    """Each (bq, bk) BlockSpec config is its own PM2Lat kernel (Table VI),
+    swept per dtype: the selection oracle differentiates ``fa_<cfg>`` tables
+    by dtype exactly as it does the framework paths."""
     configs = configs or (fkern.FlashConfig(128, 128),)
-    for cfg in configs:
-        f = jax.jit(lambda q, k, v: fkern.flash_attention_kernel(
-            q, k, v, cfg, causal=True, interpret=True))
-        durs, anchors = {}, {}
-        bh, hd = 4, 64
-        for s in s_anchors:
-            ss = max(s, cfg.bq, cfg.bk)
-            q = jnp.ones((bh, ss, hd), dt)
-            durs[ss] = profiler.measure(f, q, q, q, min_reps=3, min_total_s=0.01)
-            anchors[ss] = 4.0 * bh * ss * ss * hd / durs[ss]
-        s_max = max(durs)
-        key = KernelKey("attention", cfg.name, dt.name, device_name())
-        store.add(ThroughputTable(key=key, anchors=anchors,
-                                  org_dur=durs[s_max], k_max=s_max,
-                                  ref_grid=(bh * s_max, s_max), ref_tiles=1))
+    for dtype in dtypes:
+        dt = jnp.dtype(dtype)
+        for cfg in configs:
+            f = jax.jit(lambda q, k, v: fkern.flash_attention_kernel(
+                q, k, v, cfg, causal=True, interpret=True))
+            durs, anchors = {}, {}
+            bh, hd = 4, 64
+            for s in s_anchors:
+                ss = max(s, cfg.bq, cfg.bk)
+                q = jnp.ones((bh, ss, hd), dt)
+                durs[ss] = profiler.measure(f, q, q, q, min_reps=3,
+                                            min_total_s=0.01)
+                anchors[ss] = 4.0 * bh * ss * ss * hd / durs[ss]
+                if verbose:
+                    print(f"  {cfg.name} {dt.name} S={ss}: "
+                          f"{durs[ss]*1e3:.3f} ms")
+            s_max = max(durs)
+            key = KernelKey("attention", cfg.name, dt.name, device_name())
+            store.add(ThroughputTable(key=key, anchors=anchors,
+                                      org_dur=durs[s_max], k_max=s_max,
+                                      ref_grid=(bh * s_max, s_max),
+                                      ref_tiles=1, ref_head_dim=hd))
 
 
 def calibrate_memory_model(store: TableStore, verbose=False):
@@ -183,7 +211,7 @@ def calibrate_host(path: Optional[str] = None, *, dtypes=("float32",),
         if verbose:
             print("[calibrate] pallas interpret kernels")
         calibrate_pallas_matmul(store, verbose=verbose)
-        calibrate_pallas_attention(store, verbose=verbose)
+        calibrate_pallas_attention(store, dtypes=dtypes, verbose=verbose)
     if verbose:
         print("[calibrate] memory model")
     calibrate_memory_model(store, verbose=verbose)

@@ -1,6 +1,13 @@
 """PM2Lat predictor: kernel-differentiated throughput interpolation for
 compute ops + linear proxy-metric regression for memory-bound ops, aggregated
 sequentially over the op graph (paper §III-C).
+
+Kernel selection — which profiled table answers for an op — lives in
+``core/oracle.py`` (``KernelOracle``), shared with the vectorized
+``BatchPredictor`` so the two paths can never disagree on which kernel the
+library would run.  ``PredictionRow.kernel`` reports the kernel id the
+oracle actually selected (e.g. ``xla_default@1024x1024``), not the family
+default.
 """
 from __future__ import annotations
 
@@ -10,7 +17,8 @@ from typing import List, Optional, Tuple
 from repro.configs import base as C
 from repro.core import opgraph as og
 from repro.core.memory_model import MemoryModel
-from repro.core.table import KernelKey, TableStore, ThroughputTable
+from repro.core.oracle import KernelOracle
+from repro.core.table import TableStore, ThroughputTable
 
 
 @dataclasses.dataclass
@@ -25,54 +33,32 @@ class PM2Lat:
     def __init__(self, store: TableStore, device: str):
         self.store = store
         self.device = device
+        self.oracle = KernelOracle(store, device)
         mm = store.memory_model
         self.memory_model = MemoryModel.from_json(mm) if isinstance(mm, dict) else mm
 
     # ----- per-op -----
-    def _table(self, op_family: str, kernel: str, dtype: str) -> ThroughputTable:
-        t = self.store.get(KernelKey(op_family, kernel, dtype, self.device))
-        if t is None:
-            # dtype fallback (e.g. bf16 profiled only for matmul)
-            for cand in self.store.tables.values():
-                if cand.key.op == op_family and cand.key.kernel == kernel:
-                    return cand
-            raise KeyError((op_family, kernel, dtype, self.device))
-        return t
+    def _matmul_table(self, op: og.MatmulOp,
+                      kernel: Optional[str]) -> ThroughputTable:
+        if kernel is not None:
+            return self.oracle.lookup(op.kind, kernel, op.dtype)
+        return self.oracle.select_matmul(op.kind, op.dtype, op.m, op.n,
+                                         batch=op.batch)
 
-    def _nearest_grid_table(self, op_family: str, dtype: str, m: int,
-                            n: int) -> ThroughputTable:
-        """Kernel selection across profiled reference grids: nearest in
-        (log-area, log-aspect) — the predictor-side half of the config
-        oracle (select the kernel the library would run, then use ITS
-        table)."""
-        import math
-        best, score = None, None
-        for t in self.store.tables.values():
-            if t.key.op != op_family or not t.key.kernel.startswith("xla_default"):
-                continue
-            if t.key.dtype != dtype or t.key.device != self.device:
-                continue
-            m0, n0 = t.ref_grid
-            sc = (abs(math.log(m * n / (m0 * n0))) +
-                  0.5 * abs(math.log((m / n) / (m0 / n0))))
-            if score is None or sc < score:
-                best, score = t, sc
-        if best is None:
-            return self._table(op_family, "xla_default", dtype)
-        return best
+    def _attention_table(self, op: og.AttentionOp,
+                         kernel: Optional[str]) -> ThroughputTable:
+        if kernel is not None:
+            return self.oracle.lookup("attention", kernel, op.dtype)
+        return self.oracle.select_attention(op.dtype, op.skv,
+                                            head_dim=op.hd)
 
     def predict_matmul(self, op: og.MatmulOp, kernel: str = None) -> float:
-        if kernel is not None:
-            t = self._table(op.kind, kernel, op.dtype)
-        elif op.kind == "matmul":
-            t = self._nearest_grid_table("matmul", op.dtype, op.m, op.n)
-        else:
-            t = self._table(op.kind, "xla_default", op.dtype)
+        t = self._matmul_table(op, kernel)
         return t.predict(op.m, op.n, op.k, batch=op.batch) * op.count
 
     def predict_attention(self, op: og.AttentionOp,
-                          kernel: str = "fa_jnp") -> float:
-        t = self._table("attention", kernel, op.dtype)
+                          kernel: Optional[str] = None) -> float:
+        t = self._attention_table(op, kernel)
         thr = t.interpolate_throughput(op.skv)
         return op.flops / thr
 
@@ -83,11 +69,13 @@ class PM2Lat:
 
     def predict_op(self, op) -> PredictionRow:
         if op.kind in ("matmul", "bmm"):
-            return PredictionRow(op.name, op.kind, self.predict_matmul(op),
-                                 "xla_default")
+            t = self._matmul_table(op, None)
+            sec = t.predict(op.m, op.n, op.k, batch=op.batch) * op.count
+            return PredictionRow(op.name, op.kind, sec, t.key.kernel)
         if op.kind == "attention":
-            return PredictionRow(op.name, op.kind, self.predict_attention(op),
-                                 "fa_jnp")
+            t = self._attention_table(op, None)
+            sec = op.flops / t.interpolate_throughput(op.skv)
+            return PredictionRow(op.name, "attention", sec, t.key.kernel)
         return PredictionRow(op.name, "memory", self.predict_memory(op), "linreg")
 
     # ----- model level -----

@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import math
+import os
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -49,6 +50,12 @@ class ThroughputTable:
     k_max: int
     ref_grid: Tuple[int, int]            # (M0, N0) profiled reference
     ref_tiles: int                       # grid tiles at reference (MxN plane)
+    # selection-oracle metadata (core/oracle.py): the profiled batch for bmm
+    # reference grids and the profiled head dim for attention kernels.
+    # Survives cross-device re-anchoring (core/transfer.py) and (de)serializes
+    # with defaults so pre-oracle calibration artifacts keep loading.
+    ref_batch: int = 1
+    ref_head_dim: Optional[int] = None
 
     # ----- Eq (2): piecewise-linear interpolation between pow2 anchors -----
     def interpolate_throughput(self, k: int) -> float:
@@ -77,10 +84,14 @@ class ThroughputTable:
             tm, tn = tile
             tiles_new = math.ceil(m / tm) * math.ceil(n / tn) * batch
         else:
-            # kernel tile unknown (e.g. XLA-chosen): scale by area ratio
+            # kernel tile unknown (e.g. XLA-chosen): scale by area ratio,
+            # floored at ONE full reference tile — a sub-reference shape
+            # still launches the reference kernel's wave (the paper's
+            # partial-block rule), it never costs a fraction of it.  Kept in
+            # lockstep with _TableInterp.predict (core/batch_predict.py).
             m0, n0 = self.ref_grid
-            tiles_new = (m * n * batch) / (m0 * n0)
-            return self.duration_at_ref(k) * max(tiles_new, 1e-9)
+            tiles_new = (m * n * batch) / (m0 * n0 * self.ref_batch)
+            return self.duration_at_ref(k) * max(tiles_new, 1.0)
         return self.duration_at_ref(k) * tiles_new / self.ref_tiles
 
     # ----- rational trend fit (paper §III-C observation) -----
@@ -97,23 +108,47 @@ class ThroughputTable:
         return a * scale, b * scale, c, 1.0
 
     def rational_throughput(self, k: int) -> float:
+        """Rational-fit throughput, clamped to the nearest anchor when the
+        fitted denominator ``cK + d`` has a pole on positive K — past the
+        pole the raw fit returns negative/infinite throughput (a negative
+        Eq(1) duration), and just BELOW it a finite positive blowup orders
+        of magnitude above anything measured.  Any value outside twice the
+        measured anchor envelope is treated as degenerate."""
         a, b, c, d = self.fit_rational()
-        return (a * k + b) / (c * k + d)
+        nearest = self.anchors[min(self.anchors, key=lambda a_: abs(a_ - k))]
+        den = c * k + d
+        if den <= 0.0:
+            return nearest
+        val = (a * k + b) / den
+        if not math.isfinite(val) or val <= 0.0:
+            return nearest
+        lo, hi = min(self.anchors.values()), max(self.anchors.values())
+        if val < 0.5 * lo or val > 2.0 * hi:
+            return nearest
+        return val
 
     # ----- (de)serialization -----
     def to_json(self) -> dict:
-        return {"key": self.key.id(),
-                "anchors": {str(k): v for k, v in self.anchors.items()},
-                "org_dur": self.org_dur, "k_max": self.k_max,
-                "ref_grid": list(self.ref_grid), "ref_tiles": self.ref_tiles}
+        d = {"key": self.key.id(),
+             "anchors": {str(k): v for k, v in self.anchors.items()},
+             "org_dur": self.org_dur, "k_max": self.k_max,
+             "ref_grid": list(self.ref_grid), "ref_tiles": self.ref_tiles}
+        if self.ref_batch != 1:
+            d["ref_batch"] = self.ref_batch
+        if self.ref_head_dim is not None:
+            d["ref_head_dim"] = self.ref_head_dim
+        return d
 
     @staticmethod
     def from_json(d: dict) -> "ThroughputTable":
+        hd = d.get("ref_head_dim")
         return ThroughputTable(
             key=KernelKey.parse(d["key"]),
             anchors={int(k): float(v) for k, v in d["anchors"].items()},
             org_dur=float(d["org_dur"]), k_max=int(d["k_max"]),
-            ref_grid=tuple(d["ref_grid"]), ref_tiles=int(d["ref_tiles"]))
+            ref_grid=tuple(d["ref_grid"]), ref_tiles=int(d["ref_tiles"]),
+            ref_batch=int(d.get("ref_batch", 1)),
+            ref_head_dim=None if hd is None else int(hd))
 
 
 class TableStore:
@@ -131,18 +166,38 @@ class TableStore:
         return self.tables.get(key.id())
 
     def save(self, path: str):
-        with open(path, "w") as f:
-            json.dump({"tables": [t.to_json() for t in self.tables.values()],
-                       "memory_model": self.memory_model,
-                       "meta": self.meta}, f, indent=1)
+        """Atomic write (temp file + ``os.replace``, matching
+        ``PredictionCache.save``): a crash mid-save must leave the previous
+        calibration artifact intact, never a truncated one."""
+        path = os.path.abspath(path)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        try:
+            with open(tmp, "w") as f:
+                json.dump(
+                    {"tables": [t.to_json() for t in self.tables.values()],
+                     "memory_model": self.memory_model,
+                     "meta": self.meta}, f, indent=1)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.remove(tmp)
 
     @staticmethod
     def load(path: str) -> "TableStore":
         with open(path) as f:
-            d = json.load(f)
+            try:
+                d = json.load(f)
+            except (json.JSONDecodeError, ValueError) as e:
+                raise ValueError(
+                    f"corrupt calibration store {path!r}: {e}") from e
         st = TableStore()
-        for td in d["tables"]:
-            st.add(ThroughputTable.from_json(td))
+        try:
+            for td in d["tables"]:
+                st.add(ThroughputTable.from_json(td))
+        except (KeyError, TypeError, AttributeError) as e:
+            raise ValueError(
+                f"malformed calibration store {path!r}: {e!r}") from e
         st.memory_model = d.get("memory_model")
         st.meta = d.get("meta", {})
         return st

@@ -39,16 +39,18 @@ from repro.core.table import TableStore, ThroughputTable
 def arithmetic_intensity(t: ThroughputTable, k: int) -> float:
     """FLOP/byte of table ``t``'s reference op at sweep position ``k``.
 
-    matmul/bmm: the profiled (M0, N0) x K GEMM (bmm folds its profiled batch
-    into M0, as calibration does).  attention: flash attention streams K/V
-    once, so intensity grows linearly with the swept sequence length —
-    ``O(s)`` FLOPs per byte moved.
+    matmul/bmm: the profiled batch of (M0, N0) x K GEMMs (``ref_batch``
+    repeats every operand, so intensity is the single-GEMM value; legacy
+    tables that folded the batch into M0 keep their folded intensity).
+    attention: flash attention streams K/V once, so intensity grows linearly
+    with the swept sequence length — ``O(s)`` FLOPs per byte moved.
     """
     isz = dtype_bytes(t.key.dtype)
     if t.key.op in ("matmul", "bmm"):
         m0, n0 = t.ref_grid
-        flops = 2.0 * m0 * n0 * k
-        byts = isz * (m0 * k + k * n0 + m0 * n0)
+        b0 = t.ref_batch
+        flops = 2.0 * b0 * m0 * n0 * k
+        byts = isz * b0 * (m0 * k + k * n0 + m0 * n0)
         return flops / byts
     # attention (and any future swept family): seq-linear intensity
     return float(k) / isz

@@ -8,6 +8,11 @@ a miss.  ``latency_grid`` bulk-fills the cache with one symbolic grid
 prediction — the admission-control / autoscaling primitive: a router can
 sweep every (batch, seq) bucket it serves in a single call and afterwards
 answer every query from cache.
+
+``latency_breakdown`` is the explainability endpoint: per-op rows with the
+kernel id the selection oracle (``core/oracle.py``) actually picked, and
+``explain_kernels`` exposes the oracle's scored candidate list for one op
+shape — "which profiled kernel would the library run here, and why".
 """
 from __future__ import annotations
 
@@ -90,6 +95,34 @@ class LatencyService:
                     PredictionCache.make_key(config_key(cfg), pred.device,
                                              dtype, b, s), float(grid[i, j]))
         return grid
+
+    def latency_breakdown(self, model: Union[str, ModelConfig], batch: int,
+                          seq: int, dtype: Optional[str] = None,
+                          device: Optional[str] = None) -> dict:
+        """Per-op latency rows with oracle-selected kernel attribution (not
+        family defaults): the debugging/reporting view behind
+        ``latency_query``.  Uncached — the row set is recomputed."""
+        cfg = self._resolve(model)
+        pred = self.predictor.for_device(device)
+        seconds, rows = pred.predict_model(cfg, batch, seq, dtype=dtype)
+        return {"model": cfg.name, "device": pred.device,
+                "dtype": dtype or "float32", "batch": int(batch),
+                "seq": int(seq), "seconds": seconds,
+                "rows": [dataclasses.asdict(r) for r in rows]}
+
+    def explain_kernels(self, op_family: str, shape,
+                        dtype: Optional[str] = None,
+                        device: Optional[str] = None,
+                        provider: Optional[str] = "framework") -> list:
+        """The oracle's scored candidate list (best first) for one op shape:
+        ``shape`` is ``(m, n[, batch])`` for matmul/bmm, ``(skv[, hd])`` for
+        attention.  Defaults to the framework provider — the pool
+        ``latency_query``/``latency_breakdown`` actually select from — so
+        the explanation names the kernel the service runs; pass
+        ``provider=None`` to score the full pool (Pallas included)."""
+        pred = self.predictor.for_device(device)
+        return pred.oracle.explain(op_family, dtype or "float32", shape,
+                                   provider=provider)
 
     def fleet(self) -> list:
         """Devices this service can answer for: the calibrated host plus

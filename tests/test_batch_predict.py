@@ -195,9 +195,11 @@ def test_cache_survives_corrupt_file(tmp_path):
     """A truncated/corrupt persisted cache must not break startup: it loads
     as empty and the next save atomically replaces it."""
     path = str(tmp_path / "c.json")
+    schema = PredictionCache.SCHEMA
     for garbage in ('{"entries": [["a|b|float32|1|',   # truncated mid-write
                     "null",                            # external partial write
-                    '{"entries": [["a", 1, 2], "x", ["ok|k", 2e-3]]}'):
+                    '{"schema": %d, "entries": '
+                    '[["a", 1, 2], "x", ["ok|k", 2e-3]]}' % schema):
         with open(path, "w") as f:
             f.write(garbage)
         cache = PredictionCache(maxsize=4, path=path)
@@ -207,6 +209,23 @@ def test_cache_survives_corrupt_file(tmp_path):
     cache.save()
     assert PredictionCache(maxsize=4, path=path).get("k") == pytest.approx(1e-3)
     assert not [p for p in tmp_path.iterdir() if ".tmp." in p.name]
+
+
+def test_cache_discards_other_schema_versions(tmp_path):
+    """Entries persisted under different predictor SEMANTICS (another
+    SCHEMA, or the pre-schema format) self-invalidate on load — a stale
+    cache must never answer for the current math."""
+    path = str(tmp_path / "c.json")
+    for stale in ('{"entries": [["legacy|k", 1e-3]]}',          # pre-schema
+                  '{"schema": 1, "entries": [["old|k", 1e-3]]}'):
+        with open(path, "w") as f:
+            f.write(stale)
+        assert len(PredictionCache(maxsize=4, path=path)) == 0
+    cache = PredictionCache(maxsize=4, path=path)
+    cache.put("new|k", 2e-3)
+    cache.save()
+    assert PredictionCache(maxsize=4,
+                           path=path).get("new|k") == pytest.approx(2e-3)
 
 
 def test_cached_predict_hits_after_miss(engine, tmp_path):

@@ -1,0 +1,300 @@
+"""KernelOracle (core/oracle.py): deterministic candidate order, nearest-grid
+matmul/bmm selection, attention selection, device/dtype-safe fallback, and
+the strict-mode raise.  All synthetic — no jax, no calibration artifact."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.oracle import (KernelOracle, PROVIDER_FRAMEWORK,
+                               PROVIDER_PALLAS, dtype_preference,
+                               kernel_provider, score_attention, score_matmul)
+from repro.core.table import KernelKey, TableStore, ThroughputTable
+
+DEV = "test_dev"
+
+
+def table(op, kernel, dtype="float32", device=DEV, ref=(256, 256),
+          ref_batch=1, ref_head_dim=None, anchors=None):
+    anchors = anchors or {64: 1e9, 256: 2e9, 1024: 3e9}
+    kmax = max(anchors)
+    return ThroughputTable(
+        key=KernelKey(op, kernel, dtype, device), anchors=dict(anchors),
+        org_dur=2.0 * ref_batch * ref[0] * ref[1] * kmax / anchors[kmax],
+        k_max=kmax, ref_grid=ref, ref_tiles=1, ref_batch=ref_batch,
+        ref_head_dim=ref_head_dim)
+
+
+def build_store(tables):
+    st = TableStore()
+    for t in tables:
+        st.add(t)
+    return st
+
+
+MM_TABLES = [table("matmul", "xla_default@64x256", ref=(64, 256)),
+             table("matmul", "xla_default@256x256", ref=(256, 256)),
+             table("matmul", "xla_default@1024x1024", ref=(1024, 1024)),
+             table("matmul", "mm_128x128x128", ref=(256, 256))]
+
+
+# ---------------------------------------------------------------------------
+# provider + preference helpers
+# ---------------------------------------------------------------------------
+
+def test_kernel_provider_partition():
+    assert kernel_provider("xla_default@512x512") == PROVIDER_FRAMEWORK
+    assert kernel_provider("xla_default") == PROVIDER_FRAMEWORK
+    assert kernel_provider("fa_jnp") == PROVIDER_FRAMEWORK
+    assert kernel_provider("mm_128x128x128") == PROVIDER_PALLAS
+    assert kernel_provider("fa_128x128") == PROVIDER_PALLAS
+
+
+def test_dtype_preference_is_deterministic_and_complete():
+    avail = ["float16", "bfloat16", "int8", "float32"]
+    order = dtype_preference("bfloat16", avail)
+    assert order[0] == "bfloat16"
+    assert order.index("float16") < order.index("float32")
+    assert "int8" in order
+    assert order == dtype_preference("bfloat16", list(reversed(avail)))
+
+
+# ---------------------------------------------------------------------------
+# deterministic candidate enumeration
+# ---------------------------------------------------------------------------
+
+def test_candidates_independent_of_insertion_order():
+    a = KernelOracle(build_store(MM_TABLES), DEV)
+    b = KernelOracle(build_store(list(reversed(MM_TABLES))), DEV)
+    ka = [t.key.id() for t in a.candidates("matmul", "float32")]
+    kb = [t.key.id() for t in b.candidates("matmul", "float32")]
+    assert ka == kb == sorted(ka)
+    assert all(t.key.kernel.startswith("xla_default") for t in
+               a.candidates("matmul", "float32"))
+
+
+def test_candidates_filter_provider_and_kernel():
+    o = KernelOracle(build_store(MM_TABLES), DEV)
+    pal = o.candidates("matmul", "float32", provider=PROVIDER_PALLAS)
+    assert [t.key.kernel for t in pal] == ["mm_128x128x128"]
+    exact = o.candidates("matmul", "float32", kernel="xla_default@256x256",
+                         provider=None)
+    assert len(exact) == 1
+    assert len(o.candidates("matmul", "float32", provider=None)) == 4
+
+
+def test_candidates_never_cross_device():
+    decoy = table("matmul", "xla_default@256x256", device="other_dev")
+    o = KernelOracle(build_store(MM_TABLES + [decoy]), DEV)
+    assert all(t.key.device == DEV
+               for t in o.candidates("matmul", "float32", provider=None))
+    # ... even under dtype fallback: the other-device bf16 decoy is invisible
+    decoy_bf = table("bmm", "xla_default", "bfloat16", device="other_dev")
+    o2 = KernelOracle(build_store([decoy_bf,
+                                   table("bmm", "xla_default")]), DEV)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        cands, used = o2.candidates_with_fallback("bmm", "bfloat16")
+    assert used == "float32"
+    assert [t.key.device for t in cands] == [DEV]
+
+
+# ---------------------------------------------------------------------------
+# matmul / bmm nearest-grid selection
+# ---------------------------------------------------------------------------
+
+def test_matmul_selects_nearest_grid():
+    o = KernelOracle(build_store(MM_TABLES), DEV)
+    assert o.select_matmul("matmul", "float32", 64, 256).key.kernel == \
+        "xla_default@64x256"
+    assert o.select_matmul("matmul", "float32", 1000, 1100).key.kernel == \
+        "xla_default@1024x1024"
+    assert o.select_matmul("matmul", "float32", 300, 240).key.kernel == \
+        "xla_default@256x256"
+
+
+def test_bmm_selection_includes_batch_in_area():
+    tables = [table("bmm", "xla_default@8x256x256", ref=(256, 256),
+                    ref_batch=8),
+              table("bmm", "xla_default@32x64x64", ref=(64, 64),
+                    ref_batch=32)]
+    o = KernelOracle(build_store(tables), DEV)
+    assert o.select_matmul("bmm", "float32", 256, 256, batch=8).key.kernel \
+        == "xla_default@8x256x256"
+    assert o.select_matmul("bmm", "float32", 64, 64, batch=32).key.kernel \
+        == "xla_default@32x64x64"
+    # batch dominates area: many tiny mats match the small-plane grid
+    assert o.select_matmul("bmm", "float32", 64, 64, batch=64).key.kernel \
+        == "xla_default@32x64x64"
+
+
+def test_tie_breaks_by_sorted_kernel_id():
+    tables = [table("matmul", "mm_256x256x256", ref=(256, 256)),
+              table("matmul", "mm_128x128x128", ref=(256, 256))]
+    for order in (tables, list(reversed(tables))):
+        o = KernelOracle(build_store(order), DEV)
+        sel = o.select_matmul("matmul", "float32", 512, 512,
+                              provider=PROVIDER_PALLAS)
+        assert sel.key.kernel == "mm_128x128x128"   # identical scores
+
+
+def test_scoring_matches_scalar_and_vector():
+    o = KernelOracle(build_store(MM_TABLES), DEV)
+    cands = o.candidates("matmul", "float32")
+    m = np.array([64.0, 300.0, 1000.0])
+    n = np.array([256.0, 240.0, 1100.0])
+    vec_sel = np.argmin(score_matmul(cands, m, n, 1.0), axis=0)
+    for i in range(3):
+        scalar = o.select_matmul("matmul", "float32", m[i], n[i])
+        assert scalar is cands[int(vec_sel[i])]
+
+
+# ---------------------------------------------------------------------------
+# attention selection
+# ---------------------------------------------------------------------------
+
+ATTN_TABLES = [
+    table("attention", "fa_jnp", anchors={128: 1e9, 4096: 2e9},
+          ref_head_dim=64),
+    table("attention", "fa_128x128", anchors={128: 1e8, 1024: 2e8},
+          ref_head_dim=64),
+]
+
+
+def test_attention_framework_provider_picks_fa_jnp():
+    o = KernelOracle(build_store(ATTN_TABLES), DEV)
+    for skv in (64, 512, 8192):
+        sel = o.select_attention("float32", skv, head_dim=64)
+        assert sel.key.kernel == "fa_jnp"
+
+
+def test_attention_pallas_provider_picks_fa_cfg():
+    o = KernelOracle(build_store(ATTN_TABLES), DEV)
+    sel = o.select_attention("float32", 512, head_dim=64,
+                             provider=PROVIDER_PALLAS)
+    assert sel.key.kernel == "fa_128x128"
+
+
+def test_attention_full_pool_selects_by_seq_distance():
+    o = KernelOracle(build_store(ATTN_TABLES), DEV)
+    near_pallas = o.select_attention("float32", 512, head_dim=64,
+                                     provider=None)
+    assert near_pallas.key.kernel == "fa_128x128"   # |log(512/1024)| smaller
+    near_jnp = o.select_attention("float32", 4096, head_dim=64,
+                                  provider=None)
+    assert near_jnp.key.kernel == "fa_jnp"
+
+
+def test_attention_head_dim_term_breaks_seq_ties():
+    tables = [table("attention", "fa_hd64", anchors={1024: 1e9},
+                    ref_head_dim=64),
+              table("attention", "fa_hd128", anchors={1024: 1e9},
+                    ref_head_dim=128)]
+    o = KernelOracle(build_store(tables), DEV)
+    assert o.select_attention("float32", 1024, head_dim=128,
+                              provider=None).key.kernel == "fa_hd128"
+    assert o.select_attention("float32", 1024, head_dim=64,
+                              provider=None).key.kernel == "fa_hd64"
+    sc = score_attention(tables, 1024.0, 128.0)
+    assert sc[1] < sc[0]
+
+
+# ---------------------------------------------------------------------------
+# dtype fallback policy
+# ---------------------------------------------------------------------------
+
+def test_dtype_fallback_warns_once_and_is_deterministic():
+    o = KernelOracle(build_store(MM_TABLES), DEV)
+    with pytest.warns(UserWarning, match="falling back to 'float32'"):
+        sel = o.select_matmul("matmul", "bfloat16", 256, 256)
+    assert sel.key.dtype == "float32"
+    assert sel.key.kernel == "xla_default@256x256"
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        again = o.select_matmul("matmul", "bfloat16", 256, 256)
+    assert not w                                   # warned once only
+    assert again is sel
+
+
+def test_dtype_fallback_prefers_exact_then_preference_order():
+    tables = [table("matmul", "xla_default@256x256", "float32"),
+              table("matmul", "xla_default@256x256", "float16")]
+    o = KernelOracle(build_store(tables), DEV, strict=False)
+    # bfloat16 request: preference order says float16 before float32
+    with pytest.warns(UserWarning, match="falling back to 'float16'"):
+        cands, used = o.candidates_with_fallback("matmul", "bfloat16")
+    assert used == "float16"
+    # exact dtype never falls back, never warns
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        cands, used = o.candidates_with_fallback("matmul", "float32")
+    assert used == "float32" and not w
+
+
+def test_missing_family_raises_keyerror_with_context():
+    o = KernelOracle(build_store(MM_TABLES), DEV)
+    with pytest.raises(KeyError, match="attention"):
+        o.select_attention("float32", 512)
+    with pytest.raises(KeyError, match=DEV):
+        o.lookup("matmul", "no_such_kernel", "float32")
+
+
+def test_strict_mode_raises_on_fallback():
+    o = KernelOracle(build_store(MM_TABLES), DEV, strict=True)
+    with pytest.raises(KeyError, match="bfloat16"):
+        o.select_matmul("matmul", "bfloat16", 256, 256)
+    # exact dtype still answers under strict
+    assert o.select_matmul("matmul", "float32", 256, 256) is not None
+
+
+def test_strict_mode_via_environment(monkeypatch):
+    monkeypatch.setenv("REPRO_STRICT_DTYPE", "1")
+    o = KernelOracle(build_store(MM_TABLES), DEV)
+    with pytest.raises(KeyError, match="falling back|no matmul"):
+        o.select_matmul("matmul", "bfloat16", 256, 256)
+    monkeypatch.setenv("REPRO_STRICT_DTYPE", "0")
+    o2 = KernelOracle(build_store(MM_TABLES), DEV)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        assert o2.select_matmul("matmul", "bfloat16", 256, 256) is not None
+
+
+# ---------------------------------------------------------------------------
+# lookup + select + explain round-trips
+# ---------------------------------------------------------------------------
+
+def test_lookup_exact_and_fallback():
+    o = KernelOracle(build_store(MM_TABLES), DEV)
+    t = o.lookup("matmul", "xla_default@64x256", "float32")
+    assert t.key.kernel == "xla_default@64x256"
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        tb = o.lookup("matmul", "xla_default@64x256", "bfloat16")
+    assert tb.key.kernel == "xla_default@64x256"    # same kernel, dtype fell back
+    assert tb.key.dtype == "float32"
+
+
+def test_select_uniform_entry_point():
+    o = KernelOracle(build_store(MM_TABLES + ATTN_TABLES), DEV)
+    assert o.select("matmul", "float32", (64, 256)).key.kernel == \
+        "xla_default@64x256"
+    assert o.select("attention", "float32", (512, 64)).key.kernel == "fa_jnp"
+    with pytest.raises(KeyError, match="unknown op family"):
+        o.select("conv", "float32", (1, 1))
+
+
+def test_explain_is_sorted_and_scored():
+    o = KernelOracle(build_store(MM_TABLES), DEV)
+    rows = o.explain("matmul", "float32", (64, 256), provider=PROVIDER_FRAMEWORK)
+    assert rows[0]["kernel"] == "xla_default@64x256"
+    assert rows[0]["score"] == pytest.approx(0.0)
+    assert [r["score"] for r in rows] == sorted(r["score"] for r in rows)
+
+
+def test_invalidate_after_store_mutation():
+    st = build_store(MM_TABLES)
+    o = KernelOracle(st, DEV)
+    assert len(o.candidates("matmul", "float32")) == 3
+    st.add(table("matmul", "xla_default@512x512", ref=(512, 512)))
+    o.invalidate()
+    assert len(o.candidates("matmul", "float32")) == 4

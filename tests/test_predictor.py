@@ -60,6 +60,45 @@ def test_predict_blocks_sums_close_to_model(calibration_store):
     assert sum(blocks) < total  # embed/unembed excluded from blocks
 
 
+def test_prediction_rows_report_selected_kernel(calibration_store):
+    """PredictionRow.kernel is the oracle-SELECTED kernel id (e.g.
+    ``xla_default@1024x1024``), not a hardcoded family default — in both the
+    scalar and the vectorized predictors."""
+    dev = calibrate.device_name()
+    scalar = PM2Lat(calibration_store, dev)
+    vec = BatchPredictor(calibration_store, dev)
+    cfg = cr.reduced("qwen2-0.5b")
+    ops = og.enumerate_ops(cfg, 2, 32)
+    for pred in (scalar, vec):
+        _, rows = pred.predict_ops(ops)
+        by_kind = {}
+        for op, row in zip(ops, rows):
+            by_kind.setdefault(row.kind, set()).add(row.kernel)
+            if op.kind in ("matmul", "bmm"):
+                # the exact table the shared oracle picks for this op
+                want = scalar.oracle.select_matmul(
+                    op.kind, op.dtype, op.m, op.n, batch=op.batch)
+                assert row.kernel == want.key.kernel, (op.name, row)
+        assert all(k.startswith("xla_default@")
+                   for k in by_kind["matmul"])       # grid id, not family
+        assert "xla_default" not in by_kind["matmul"]
+        assert by_kind["attention"] == {"fa_jnp"}
+        assert by_kind["memory"] == {"linreg"}
+    # a multi-grid model selects more than one reference grid end-to-end
+    _, rows = scalar.predict_ops(og.enumerate_ops(cr.reduced("yi-6b"), 2, 64))
+    assert len({r.kernel for r in rows if r.kind == "matmul"}) > 1
+
+
+def test_explicit_kernel_overrides_oracle(calibration_store):
+    dev = calibrate.device_name()
+    scalar = PM2Lat(calibration_store, dev)
+    op = og.MatmulOp("op", m=64, n=64, k=128)
+    t_sel = scalar.oracle.select_matmul("matmul", "float32", 64, 64)
+    forced = scalar.predict_matmul(op, kernel="xla_default@1024x1024")
+    assert t_sel.key.kernel != "xla_default@1024x1024"
+    assert forced != scalar.predict_matmul(op)
+
+
 def test_vectorized_predictor_matches_scalar(calibration_store):
     dev = calibrate.device_name()
     table = calibration_store.get(

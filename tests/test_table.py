@@ -145,3 +145,118 @@ def test_wave_scaling_partial_tiles():
     d_full = t.predict(512, 512, 1024, tile=(128, 128))   # 16 tiles
     d_partial = t.predict(513, 512, 1024, tile=(128, 128))  # 20 tiles (5x4)
     assert d_partial == pytest.approx(d_full * 20 / 16)
+
+
+def test_tile_none_floors_at_one_full_tile():
+    """The XLA-chosen-tile (area-ratio) path floors at ONE reference tile: a
+    sub-reference shape still costs the reference wave (partial-block rule),
+    never a fraction of it — in lockstep with the vectorized mirror."""
+    from repro.core.batch_predict import _TableInterp
+    t = _table()
+    ref = t.duration_at_ref(1024)
+    assert t.predict(64, 64, 1024) == pytest.approx(ref)        # floored
+    assert t.predict(512, 512, 1024) == pytest.approx(ref)      # exactly 1
+    assert t.predict(1024, 512, 1024) == pytest.approx(2 * ref)  # above: ratio
+    vec = _TableInterp(t)
+    for m, n in ((64, 64), (512, 512), (1024, 512), (17, 3000)):
+        assert float(vec.predict(m, n, 1024)) == pytest.approx(
+            t.predict(m, n, 1024), rel=1e-12)
+
+
+def test_tile_none_respects_ref_batch():
+    """bmm metadata: the profiled batch divides the area ratio (a per-batch
+    plane equal to the reference costs one reference wave)."""
+    anchors = {32: 1e9, 256: 5e9, 1024: 6.5e9}
+    t = ThroughputTable(KernelKey("bmm", "xla_default@8x256x256",
+                                  "float32", "test"), anchors,
+                        org_dur=2.0 * 8 * 256 * 256 * 1024 / 6.5e9,
+                        k_max=1024, ref_grid=(256, 256), ref_tiles=1,
+                        ref_batch=8)
+    ref = t.duration_at_ref(256)
+    assert t.predict(256, 256, 256, batch=8) == pytest.approx(ref)
+    assert t.predict(256, 256, 256, batch=16) == pytest.approx(2 * ref)
+    assert t.predict(64, 64, 256, batch=2) == pytest.approx(ref)  # floored
+
+
+def test_rational_throughput_clamps_denominator_pole():
+    """Adversarial anchors drive the fitted denominator cK+d through zero on
+    extrapolated K: the raw fit returns negative/absurd throughput past the
+    pole, the clamped estimator returns the nearest anchor instead."""
+    # non-monotone anchors -> c < 0, pole at K ~ 218
+    t = _table({32: 1e9, 64: 5e9, 128: 2e9, 256: 8e9})
+    a, b, c, d = t.fit_rational()
+    assert c < 0 and -d / c > 0                   # pole exists at positive K
+    for k in (1, 100, 217, 218, 300, 1000, 100000):
+        thr = t.rational_throughput(k)
+        assert np.isfinite(thr) and thr > 0
+    assert t.rational_throughput(100000) == pytest.approx(t.anchors[256])
+    # decreasing anchors -> raw value goes negative while den stays positive
+    t2 = _table({32: 8e9, 64: 6e9, 128: 3e9, 256: 1e9})
+    for k in (1000, 5000):
+        thr = t2.rational_throughput(k)
+        assert thr == pytest.approx(t2.anchors[256])
+    # just BELOW a pole the raw value blows up while still positive and
+    # finite: the envelope clamp must catch it too
+    t4 = _table({32: 8e9, 64: 5e8, 128: 5e9, 256: 2e9})
+    a4, b4, c4, d4 = t4.fit_rational()
+    pole = -d4 / c4
+    assert c4 < 0 and 32 < pole < 256
+    k_pre = int(pole) - 1
+    raw = (a4 * k_pre + b4) / (c4 * k_pre + d4)
+    assert raw > 2 * max(t4.anchors.values())       # the blowup is real
+    assert t4.rational_throughput(k_pre) <= 2 * max(t4.anchors.values())
+    assert t4.rational_throughput(k_pre) > 0
+    # well-behaved saturating anchors are untouched by the clamp
+    t3 = _table()
+    for k in (100, 768, 3000, 8192):
+        a, b, c, d = t3.fit_rational()
+        assert t3.rational_throughput(k) == pytest.approx(
+            (a * k + b) / (c * k + d))
+
+
+def test_table_json_roundtrip_oracle_metadata():
+    t = _table()
+    t.ref_batch = 8
+    t.ref_head_dim = 64
+    t2 = ThroughputTable.from_json(t.to_json())
+    assert (t2.ref_batch, t2.ref_head_dim) == (8, 64)
+    # legacy dicts (no oracle metadata) load with defaults
+    d = t.to_json()
+    del d["ref_batch"], d["ref_head_dim"]
+    t3 = ThroughputTable.from_json(d)
+    assert (t3.ref_batch, t3.ref_head_dim) == (1, None)
+
+
+def test_store_save_is_atomic_under_crash(tmp_path, monkeypatch):
+    """A crash mid-save must leave the previous calibration artifact intact
+    and no temp litter behind."""
+    import json as _json
+    path = str(tmp_path / "cal.json")
+    st_ = TableStore()
+    st_.add(_table())
+    st_.memory_model = {"coef": [1e-10, 0, 0, 1e-6], "train_rel_err": 0.1}
+    st_.save(path)
+    good = open(path).read()
+
+    def boom(*a, **k):
+        raise RuntimeError("simulated crash mid-serialization")
+
+    monkeypatch.setattr(_json, "dump", boom)
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        st_.save(path)
+    monkeypatch.undo()
+    assert open(path).read() == good                 # old artifact intact
+    assert not [p for p in tmp_path.iterdir() if ".tmp." in p.name]
+    assert TableStore.load(path).get(_table().key) is not None
+
+
+def test_store_load_corrupt_reports_path(tmp_path):
+    path = str(tmp_path / "broken.json")
+    with open(path, "w") as f:
+        f.write('{"tables": [{"key": "matmul|x|float32|d"')   # truncated
+    with pytest.raises(ValueError, match="broken.json"):
+        TableStore.load(path)
+    with open(path, "w") as f:
+        f.write('{"no_tables_key": 1}')
+    with pytest.raises(ValueError, match="broken.json"):
+        TableStore.load(path)

@@ -97,6 +97,40 @@ def test_transferred_anchor_never_exceeds_target_roofline():
                 arithmetic_intensity(out, k), "float32") * (1 + 1e-12)
 
 
+def test_transfer_preserves_oracle_metadata():
+    """Re-anchoring must carry the selection-oracle candidate metadata
+    (ref_grid/ref_batch/ref_head_dim) so a transferred store still selects
+    kernels exactly like the source calibration."""
+    src = profile("src", 1e12, 1e11)
+    dst = profile("dst", 3e12, 2e11)
+    t = ThroughputTable(
+        key=KernelKey("bmm", "xla_default@8x256x256", "float32", "src"),
+        anchors={64: 4e11, 1024: 6e11}, org_dur=1e-3, k_max=1024,
+        ref_grid=(256, 256), ref_tiles=1, ref_batch=8)
+    out = transfer_table(t, src, dst)
+    assert (out.ref_grid, out.ref_batch) == ((256, 256), 8)
+    fa = ThroughputTable(
+        key=KernelKey("attention", "fa_128x128", "float32", "src"),
+        anchors={128: 1e10, 512: 2e10}, org_dur=1e-3, k_max=512,
+        ref_grid=(2048, 512), ref_tiles=1, ref_head_dim=64)
+    assert transfer_table(fa, src, dst).ref_head_dim == 64
+
+
+def test_bmm_intensity_is_per_batch_plane():
+    """ref_batch repeats every operand: arithmetic intensity equals the
+    single-GEMM value of the unfolded (M0, N0) plane."""
+    single = ThroughputTable(
+        key=KernelKey("bmm", "a", "float32", "src"),
+        anchors={64: 1e10}, org_dur=1e-3, k_max=64,
+        ref_grid=(256, 256), ref_tiles=1)
+    batched = ThroughputTable(
+        key=KernelKey("bmm", "b", "float32", "src"),
+        anchors={64: 1e10}, org_dur=1e-3, k_max=64,
+        ref_grid=(256, 256), ref_tiles=1, ref_batch=16)
+    assert arithmetic_intensity(batched, 64) == pytest.approx(
+        arithmetic_intensity(single, 64))
+
+
 def test_attention_intensity_is_seq_linear():
     t = ThroughputTable(
         key=KernelKey("attention", "fa_jnp", "float32", "src"),
