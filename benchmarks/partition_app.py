@@ -58,9 +58,13 @@ def run(batch=4, seq=128, n_requests=100, verbose=True):
             per.append(t)
         return per
 
-    # PM2Lat per-block latencies come from ONE batched engine pass
+    # PM2Lat per-block latencies come from ONE batched engine pass.
+    # comm_cost=0.0: the oracle/neusight plans and the measured-bottleneck
+    # evaluation below are zero-comm, so every planner must optimize the
+    # same objective for the pick comparison to be meaningful.
     pm_plan, pred_pm = plan_two_devices_model(pm, cfg, batch, seq,
-                                              b_speed=B_SPEED)
+                                              b_speed=B_SPEED,
+                                              comm_cost=0.0)
     pred_ns = blocks_from(ns)
 
     plans = {

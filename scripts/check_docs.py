@@ -1,10 +1,23 @@
 #!/usr/bin/env python
-"""Doc link checker (scripts/test.sh --docs): every relative markdown link in
-the given files must resolve to an existing file/directory, so README/docs
-can't rot silently as the tree moves.
+"""Doc checker (scripts/test.sh --docs): README/docs must not rot.
+
+Two passes over each markdown file (fenced code blocks stripped first —
+snippets may contain link- or anchor-shaped text):
+
+1. **Relative links** — every ``[text](target)`` markdown link must resolve
+   to an existing file/directory.
+2. **Code anchors** — every backticked repo path (``core/table.py``,
+   ``src/repro/...``, ``scripts/test.sh``, ...) must exist on disk, and
+   every backticked dotted reference whose first component is a repo class
+   or module (``ThroughputTable.predict``, ``calibrate.load_or_calibrate``)
+   must name a real member.  The symbol index is built statically with
+   ``ast`` — no imports, so the check is fast and needs no PYTHONPATH.
+   Unknown first components (``np.float64``, ``cfg.name``) are skipped:
+   the checker verifies OUR paper→code tables, it does not lint prose.
 
   python scripts/check_docs.py README.md docs/*.md
 """
+import ast
 import re
 import sys
 from pathlib import Path
@@ -12,12 +25,28 @@ from pathlib import Path
 LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
 
+ROOT = Path(__file__).resolve().parent.parent
 
-def check(md: Path) -> list:
+BACKTICK = re.compile(r"`([^`\n]+)`")
+# backticked tokens that look like repo paths: a known top-level (or
+# src/repro-relative) root, at least one '/', and only path characters.
+# artifacts/ is deliberately excluded: its contents are derived data whose
+# presence is not guaranteed (docs/artifacts.md documents regeneration).
+PATH_ROOTS = ("src/", "core/", "docs/", "scripts/", "benchmarks/", "tests/",
+              "examples/", "configs/", "serving/", "distributed/", "launch/",
+              "models/", "kernels/", "checkpoint/", "training/", "data/",
+              "ft/", "baselines/", "devices/")
+PATHLIKE = re.compile(r"^[\w./-]+$")
+SYMBOL = re.compile(r"^([A-Za-z_]\w*)\.([A-Za-z_]\w*)(\(\))?$")
+FILENAME = re.compile(r"^[\w.-]+\.(py|sh|md|json|ini|txt|yaml|yml)$")
+
+
+def _strip_fences(text: str) -> str:
+    return re.sub(r"```.*?```", "", text, flags=re.S)
+
+
+def check_links(md: Path, text: str) -> list:
     errors = []
-    text = md.read_text()
-    # strip fenced code blocks: snippets may contain link-shaped text
-    text = re.sub(r"```.*?```", "", text, flags=re.S)
     for m in LINK.finditer(text):
         target = m.group(1)
         if target.startswith(SKIP_PREFIXES):
@@ -30,21 +59,117 @@ def check(md: Path) -> list:
     return errors
 
 
+# ---------------------------------------------------------------------------
+# code anchors
+# ---------------------------------------------------------------------------
+
+def _class_members(node: ast.ClassDef) -> set:
+    members = set()
+    for n in node.body:
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            members.add(n.name)
+        elif isinstance(n, ast.Assign):
+            for t in n.targets:
+                if isinstance(t, ast.Name):
+                    members.add(t.id)
+        elif isinstance(n, ast.AnnAssign) and isinstance(n.target, ast.Name):
+            members.add(n.target.id)
+    # dataclass-style attributes double as properties; also expose the
+    # universal dunders docs never reference — keep the index minimal.
+    return members
+
+
+def build_symbol_index(root: Path = ROOT) -> dict:
+    """name -> set of member names, for every top-level class and every
+    module file under src/, scripts/, benchmarks/, tests/ (union-merged on
+    name collisions — this is a doc checker, not a resolver)."""
+    index = {}
+    search = [root / "src", root / "scripts", root / "benchmarks",
+              root / "tests", root / "examples"]
+    index["__filenames__"] = {p.name for base in search if base.is_dir()
+                              for p in base.rglob("*") if p.is_file()}
+    index["__filenames__"] |= {p.name for p in ROOT.glob("*")}
+    index["__filenames__"] |= {p.name for p in (ROOT / "docs").glob("*")}
+    index["__filenames__"] |= {p.name for p in (ROOT / "artifacts").glob("*")}
+    for base in search:
+        if not base.is_dir():
+            continue
+        for py in sorted(base.rglob("*.py")):
+            try:
+                tree = ast.parse(py.read_text())
+            except SyntaxError:
+                continue
+            members = index.setdefault(py.stem, set())
+            for node in tree.body:
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    members.add(node.name)
+                elif isinstance(node, ast.ClassDef):
+                    members.add(node.name)
+                    index.setdefault(node.name, set()).update(
+                        _class_members(node))
+                elif isinstance(node, ast.Assign):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            members.add(t.id)
+                elif isinstance(node, (ast.AnnAssign,)) and isinstance(
+                        node.target, ast.Name):
+                    members.add(node.target.id)
+    return index
+
+
+def _path_exists(token: str) -> bool:
+    token = token.rstrip("/")
+    return (ROOT / token).exists() or (ROOT / "src" / "repro" / token).exists()
+
+
+def check_code_anchors(md: Path, text: str, index: dict):
+    """(errors, n_anchors) for one file — one classification pass serves
+    both the check and the summary count."""
+    errors = []
+    n_anchors = 0
+    for m in BACKTICK.finditer(text):
+        token = m.group(1).strip()
+        if PATHLIKE.match(token) and "/" in token \
+                and token.lstrip("/").startswith(PATH_ROOTS):
+            n_anchors += 1
+            if not _path_exists(token):
+                errors.append(f"{md}: dangling code path -> `{token}`")
+            continue
+        if FILENAME.match(token):
+            n_anchors += 1
+            if token not in index.get("__filenames__", set()):
+                errors.append(f"{md}: dangling filename -> `{token}`")
+            continue
+        sm = SYMBOL.match(token)
+        if sm:
+            owner, member = sm.group(1), sm.group(2)
+            if owner in index:
+                n_anchors += 1
+                if member not in index[owner]:
+                    errors.append(f"{md}: dangling symbol -> `{token}` "
+                                  f"({owner!r} has no {member!r})")
+    return errors, n_anchors
+
+
 def main(argv):
     files = [Path(a) for a in argv] or list(Path("docs").glob("*.md"))
+    index = build_symbol_index()
     errors = []
-    n_links = 0
+    n_links = n_anchors = 0
     for md in files:
         if not md.exists():
             errors.append(f"{md}: file missing")
             continue
-        errs = check(md)
+        text = _strip_fences(md.read_text())    # read + strip once per file
+        errors += check_links(md, text)
+        errs, n = check_code_anchors(md, text, index)
         errors += errs
-        n_links += len(LINK.findall(md.read_text()))
+        n_anchors += n
+        n_links += len(LINK.findall(text))      # count what was checked
     for e in errors:
         print(e, file=sys.stderr)
     print(f"check_docs: {len(files)} files, {n_links} links, "
-          f"{len(errors)} broken")
+          f"{n_anchors} code anchors, {len(errors)} broken")
     return 1 if errors else 0
 
 

@@ -31,10 +31,26 @@ if [[ "$SMOKE" == 1 ]]; then
   echo "--- smoke: vectorized NAS batch-prediction benchmark ---"
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TIMEOUT" \
     python -m benchmarks.nas_speed --limit 200000 --skip-neusight
+  echo "--- smoke: latency_parallel round-trip (host calibration) ---"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TIMEOUT" \
+    python - <<'PY'
+from repro.serving.latency_service import LatencyService
+svc = LatencyService()
+q = svc.latency_query("qwen3-mini", 8, 256)
+r1 = svc.latency_parallel("qwen3-mini", 8, 256)
+r4 = svc.latency_parallel("qwen3-mini", 8, 256, tp=4, device="a100_80g")
+assert r1.seconds == q.seconds, (r1.seconds, q.seconds)
+assert r4.comm_seconds > 0 and r4.comm_share > 0
+print(f"latency_parallel ok: single={r1.seconds*1e3:.3f}ms "
+      f"tp4@a100={r4.seconds*1e3:.3f}ms comm_share={r4.comm_share:.3f}")
+PY
+  echo "--- smoke: parallel-scaling benchmark (--dry-run) ---"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TIMEOUT" \
+    python -m benchmarks.parallel_scaling --dry-run
 fi
 
 if [[ "$DOCS" == 1 ]]; then
-  echo "--- docs: relative-link check (README.md, docs/*.md) ---"
+  echo "--- docs: link + code-anchor check (README.md, docs/*.md) ---"
   python scripts/check_docs.py README.md docs/*.md
   echo "--- docs: quickstart smoke-run ---"
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TIMEOUT" \

@@ -50,6 +50,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.configs import base as C
+from repro.core import collectives as CC
 from repro.core import opgraph as og
 from repro.core import oracle as O
 from repro.core.memory_model import class_of, feature_vector
@@ -469,6 +470,31 @@ class BatchPredictor:
         counts = np.array([op.count for op in ops], np.float64)
         return (X * Cm).sum(axis=1) * counts
 
+    @property
+    def interconnect(self):
+        """This device's α–β interconnect (``core/collectives.py``), shared
+        with the scalar path so both price collectives identically."""
+        return self.scalar.interconnect
+
+    def predict_collective_batch(self, ops: Sequence,
+                                 return_algos: bool = False) -> np.ndarray:
+        """Seconds for a batch of ``CollectiveOp``s of the SAME collective
+        type: one vectorized α–β evaluation per group, ring/tree selected
+        per entry.  ``return_algos=True`` additionally returns the selected
+        algorithm per op (the collective rows' kernel attribution)."""
+        if not ops:
+            out = np.zeros(0)
+            return (out, np.zeros(0, object)) if return_algos else out
+        coll = ops[0].coll
+        assert all(o.coll == coll for o in ops), [o.coll for o in ops]
+        nbytes = np.array([o.nbytes for o in ops], np.float64)
+        world = np.array([o.world for o in ops], np.float64)
+        counts = np.array([o.count for o in ops], np.float64)
+        secs, algos = CC.collective_time(coll, nbytes, world,
+                                         self.interconnect)
+        secs = secs * counts
+        return (secs, algos) if return_algos else secs
+
     # ----- op-list interface (drop-in for PM2Lat) -----
     def _predict_ops_arrays(self, ops: Sequence
                             ) -> Tuple[np.ndarray, np.ndarray]:
@@ -483,6 +509,8 @@ class BatchPredictor:
                 groups.setdefault(("mm", op.kind, op.dtype), []).append(i)
             elif op.kind == "attention":
                 groups.setdefault(("attn", op.dtype), []).append(i)
+            elif op.kind == "collective":
+                groups.setdefault(("coll", op.coll), []).append(i)
             else:
                 groups.setdefault(("mem",), []).append(i)
         for gkey, idx in groups.items():
@@ -497,6 +525,9 @@ class BatchPredictor:
                 secs[idx], kernels[idx] = self.predict_attention_batch(
                     [o.skv for o in sub], [o.flops for o in sub],
                     [o.hd for o in sub], dtype=gkey[1], return_kernels=True)
+            elif gkey[0] == "coll":
+                secs[idx], kernels[idx] = self.predict_collective_batch(
+                    sub, return_algos=True)
             else:
                 secs[idx] = self.predict_memory_batch(sub)
         return secs, kernels
@@ -509,8 +540,8 @@ class BatchPredictor:
         secs, kernels = self._predict_ops_arrays(ops)
         rows = []
         for op, sec, kern in zip(ops, secs, kernels):
-            kind = op.kind if op.kind in ("matmul", "bmm", "attention") \
-                else "memory"
+            kind = op.kind if op.kind in ("matmul", "bmm", "attention",
+                                          "collective") else "memory"
             rows.append(PredictionRow(op.name, kind, float(sec), str(kern)))
         return sum(r.seconds for r in rows), rows
 
@@ -521,6 +552,21 @@ class BatchPredictor:
             return self.for_device(device).predict_model(cfg, batch, seq,
                                                          dtype=dtype)
         ops = og.enumerate_ops(cfg, batch, seq, dtype=dtype)
+        return self.predict_ops(ops)
+
+    def predict_parallel(self, cfg: C.ModelConfig, batch: int, seq: int,
+                         spec: og.ParallelismSpec,
+                         dtype: Optional[str] = None,
+                         device: Optional[str] = None):
+        """One-rank end-to-end prediction under a ``ParallelismSpec``: the
+        sharded compute ops plus the induced collectives, every family
+        vectorized (collectives via one α–β evaluation per collective type).
+        A trivial spec runs the exact ``predict_model`` op list, so the
+        single-device answer is bit-identical."""
+        if device is not None and device != self.device:
+            return self.for_device(device).predict_parallel(
+                cfg, batch, seq, spec, dtype=dtype)
+        ops = og.enumerate_parallel_ops(cfg, batch, seq, spec, dtype=dtype)
         return self.predict_ops(ops)
 
     def predict_blocks(self, cfg: C.ModelConfig, batch: int, seq: int,

@@ -1,0 +1,238 @@
+"""Analytical collective-communication latency model (α–β / Hockney).
+
+PM2Lat's headline application (paper §IV-D) is planning multi-device
+execution from per-block latency predictions — which is only honest if the
+communication induced by the plan is priced too.  This module is the
+counter-free, roofline-style answer the paper favors over learned
+predictors (cf. Braun et al.'s portable GPU model): every collective is
+costed from two interconnect constants,
+
+    α  — per-message link latency (seconds/hop), ``Interconnect.link_latency``
+    β  — inverse bus bandwidth (seconds/byte), 1 / ``Interconnect.bus_bw(p)``
+
+with the standard ring and binomial-tree algorithm costs and a per-world
+bus-bandwidth correction (protocol efficiency decays with world size, per
+topology).  The model selects ring vs tree by message size exactly the way
+NCCL does qualitatively: small messages are latency-bound (tree wins, fewer
+rounds), large messages are bandwidth-bound (ring wins, optimal volume).
+
+Cost formulas (n = FULL tensor bytes, p = world size, B = bus bandwidth):
+
+    ring  all-reduce       2(p-1)·α + 2·n·(p-1)/p / B
+    ring  all-gather       (p-1)·α  +   n·(p-1)/p / B      (reduce-scatter =)
+    ring  broadcast        (p-1)·α  +   n / B              (pipelined)
+    tree  all-reduce       2·⌈log2 p⌉·(α + n/B)
+    tree  all-gather       ⌈log2 p⌉·α + n·(p-1)/p / B      (recursive doubling)
+    tree  broadcast        ⌈log2 p⌉·(α + n/B)
+    p2p                    α + n/B
+
+Invariants pinned by tests/test_collectives.py: monotone in bytes and world
+size, ring all-reduce == reduce-scatter + all-gather, ring all-gather at
+world 2 == a p2p of half the payload.
+
+Everything here is pure dataclasses + math — no jax, no repo imports — so
+``core/devices/profiles.py`` can embed an ``Interconnect`` in every
+``DeviceProfile`` without an import cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+COLLECTIVES = ("all_reduce", "all_gather", "reduce_scatter", "broadcast",
+               "p2p")
+TOPOLOGIES = ("nvlink-mesh", "pcie-tree", "ethernet")
+
+_DTYPE_BYTES = {"float32": 4, "tf32": 4, "bfloat16": 2, "float16": 2,
+                "int8": 1, "fp8": 1, "float64": 8}
+
+# Bus-bandwidth correction per world size: effective bandwidth decays as
+# eff(p) = 1 / (1 + γ·log2(p)) — switch contention, protocol overhead and
+# synchronization skew grow with the world, more steeply on shared trees
+# than on dedicated meshes (NCCL busbw sweeps show the same shape).
+_EFF_GAMMA: Dict[str, float] = {
+    "nvlink-mesh": 0.03,
+    "pcie-tree": 0.12,
+    "ethernet": 0.25,
+}
+
+
+def dtype_bytes(dtype: str) -> int:
+    """Element size in bytes; unknown dtypes cost like float32."""
+    return _DTYPE_BYTES.get(str(dtype), 4)
+
+
+@dataclasses.dataclass(frozen=True)
+class Interconnect:
+    """The α–β spec of one device's links (per direction).
+
+    ``topology`` selects how per-link bandwidth aggregates into bus
+    bandwidth: an NVLink/ICI mesh drives all ``links_per_gpu`` at once
+    during a ring step, a PCIe tree or an ethernet NIC funnels everything
+    through one shared upstream link.
+    """
+    topology: str            # 'nvlink-mesh' | 'pcie-tree' | 'ethernet'
+    link_bw: float           # bytes/s per link, per direction (1/β per link)
+    link_latency: float      # α: seconds per message hop
+    links_per_gpu: int = 1
+
+    def __post_init__(self):
+        if self.topology not in TOPOLOGIES:
+            raise ValueError(f"unknown topology {self.topology!r}; "
+                             f"expected one of {TOPOLOGIES}")
+        if self.link_bw <= 0 or self.link_latency < 0 or self.links_per_gpu < 1:
+            raise ValueError(f"invalid Interconnect: {self}")
+
+    def raw_bus_bw(self) -> float:
+        """Aggregate per-GPU injection bandwidth, before the world-size
+        efficiency correction."""
+        if self.topology == "nvlink-mesh":
+            return self.link_bw * self.links_per_gpu
+        return self.link_bw   # tree/NIC: one shared upstream path
+
+    def efficiency(self, world) -> np.ndarray:
+        """Achieved fraction of ``raw_bus_bw`` at world size ``world``
+        (continuous in ``world`` so collective time is strictly monotone
+        even between power-of-two worlds)."""
+        g = _EFF_GAMMA[self.topology]
+        p = np.maximum(np.asarray(world, np.float64), 1.0)
+        return 1.0 / (1.0 + g * np.log2(p))
+
+    def bus_bw(self, world) -> np.ndarray:
+        """Effective bytes/s per GPU at world size ``world`` (the B in the
+        module formulas)."""
+        return self.raw_bus_bw() * self.efficiency(world)
+
+
+# A conservative default for devices with no registered interconnect:
+# ~10 GbE with typical RDMA-less round-trip latency.
+DEFAULT_INTERCONNECT = Interconnect("ethernet", link_bw=1.25e9,
+                                    link_latency=25e-6, links_per_gpu=1)
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    """One communication step in the op graph (``core/opgraph.py`` emits
+    these next to MatmulOp/AttentionOp/MemoryOp).  ``nbytes`` is the FULL
+    (unsharded) tensor payload — the per-rank wire volume is what the
+    algorithm formulas derive from it."""
+    name: str
+    coll: str                 # one of COLLECTIVES
+    nbytes: float             # full tensor payload in bytes
+    world: int
+    count: int = 1
+    dtype: str = "float32"
+    kind: str = "collective"
+
+    def __post_init__(self):
+        if self.coll not in COLLECTIVES:
+            raise ValueError(f"unknown collective {self.coll!r}; "
+                             f"expected one of {COLLECTIVES}")
+
+
+# ---------------------------------------------------------------------------
+# algorithm costs (vectorized over nbytes/world)
+# ---------------------------------------------------------------------------
+
+def _ring_time(coll: str, n, p, alpha: float, B) -> np.ndarray:
+    n, p = np.asarray(n, np.float64), np.asarray(p, np.float64)
+    steps = p - 1.0
+    frac = np.divide(steps, p, out=np.zeros_like(p), where=p > 0)
+    if coll == "all_reduce":
+        return 2.0 * steps * alpha + 2.0 * n * frac / B
+    if coll in ("all_gather", "reduce_scatter"):
+        return steps * alpha + n * frac / B
+    if coll == "broadcast":
+        return steps * alpha + n / B
+    if coll == "p2p":
+        return np.full_like(n, alpha) + n / B
+    raise ValueError(f"unknown collective {coll!r}")
+
+
+def _tree_time(coll: str, n, p, alpha: float, B) -> np.ndarray:
+    n, p = np.asarray(n, np.float64), np.asarray(p, np.float64)
+    rounds = np.ceil(np.log2(np.maximum(p, 1.0)))
+    frac = np.divide(p - 1.0, p, out=np.zeros_like(p), where=p > 0)
+    if coll == "all_reduce":
+        return 2.0 * rounds * (alpha + n / B)
+    if coll in ("all_gather", "reduce_scatter"):
+        return rounds * alpha + n * frac / B
+    if coll == "broadcast":
+        return rounds * (alpha + n / B)
+    if coll == "p2p":
+        return np.full_like(n, alpha) + n / B
+    raise ValueError(f"unknown collective {coll!r}")
+
+
+def collective_time(coll: str, nbytes, world, ic: Interconnect,
+                    algorithm: Optional[str] = None
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Seconds (and the selected algorithm) for one collective of ``nbytes``
+    full-tensor bytes over ``world`` ranks on ``ic``.  Vectorized: ``nbytes``
+    and ``world`` broadcast; a world of 1 costs exactly 0.  Without an
+    explicit ``algorithm`` the cheaper of ring/tree is selected per entry —
+    the message-size switchover the docstring formulas imply."""
+    nbytes, world = np.broadcast_arrays(np.asarray(nbytes, np.float64),
+                                        np.asarray(world, np.float64))
+    B = ic.bus_bw(world)
+    alpha = ic.link_latency
+    if algorithm == "ring":
+        t, algo = _ring_time(coll, nbytes, world, alpha, B), "ring"
+        algos = np.full(nbytes.shape, algo, object)
+    elif algorithm == "tree":
+        t, algo = _tree_time(coll, nbytes, world, alpha, B), "tree"
+        algos = np.full(nbytes.shape, algo, object)
+    elif algorithm is None:
+        ring = _ring_time(coll, nbytes, world, alpha, B)
+        tree = _tree_time(coll, nbytes, world, alpha, B)
+        t = np.minimum(ring, tree)
+        algos = np.where(ring <= tree, "ring", "tree").astype(object)
+    else:
+        raise ValueError(f"unknown algorithm {algorithm!r}")
+    trivial = world <= 1.0
+    t = np.where(trivial, 0.0, t)
+    algos = np.where(trivial, "none", algos)
+    return t, algos
+
+
+def predict_collective(op: CollectiveOp, ic: Interconnect,
+                       algorithm: Optional[str] = None
+                       ) -> Tuple[float, str]:
+    """(seconds, algorithm) for one ``CollectiveOp`` — seconds include the
+    op's repetition ``count``."""
+    t, algo = collective_time(op.coll, op.nbytes, op.world, ic, algorithm)
+    return float(t) * op.count, str(algo)
+
+
+def p2p_time(nbytes: float, ic: Interconnect) -> float:
+    """One point-to-point activation hand-off: α + n/B (the partition
+    planners' derived ``comm_cost``)."""
+    t, _ = collective_time("p2p", nbytes, 2, ic)
+    return float(t)
+
+
+# ---------------------------------------------------------------------------
+# registry plumbing
+# ---------------------------------------------------------------------------
+
+def interconnect_for(device: Optional[str]) -> Interconnect:
+    """The interconnect of a registered device, ``DEFAULT_INTERCONNECT`` for
+    unknown/unregistered names (or profiles that predate the field)."""
+    if device is None:
+        return DEFAULT_INTERCONNECT
+    from repro.core import devices as D
+    try:
+        prof = D.get_profile(device)
+    except KeyError:
+        return DEFAULT_INTERCONNECT
+    return getattr(prof, "interconnect", None) or DEFAULT_INTERCONNECT
+
+
+def slowest_interconnect(*devices: Optional[str]) -> Interconnect:
+    """The bottleneck interconnect among ``devices`` (lowest raw bus
+    bandwidth) — a cross-device transfer moves at the slower endpoint."""
+    ics = [interconnect_for(d) for d in devices] or [DEFAULT_INTERCONNECT]
+    return min(ics, key=lambda ic: ic.raw_bus_bw())

@@ -13,6 +13,7 @@ from __future__ import annotations
 import os
 from typing import Dict, Optional
 
+from repro.core.collectives import DEFAULT_INTERCONNECT
 from repro.core.devices.profiles import GiB, KiB, MiB, DeviceProfile
 from repro.core.table import TableStore
 
@@ -42,5 +43,9 @@ def host_profile_from_store(store: TableStore,
         hbm_bytes=32 * GiB, l2_bytes=32 * MiB, smem_bytes=64 * KiB,
         sm_count=os.cpu_count() or 1,
         link_bw=1e9,
+        # exactly the unregistered-device default, so collective predictions
+        # for the host are identical whether or not the lazy registration in
+        # BatchPredictor.host_profile() has run yet
+        interconnect=DEFAULT_INTERCONNECT,
         notes="empirical: peaks from matmul anchors, bw from memory-model "
               "bytes coefficient")

@@ -15,17 +15,11 @@ variants unless noted.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional
 
 from repro.core import device as _device
+from repro.core.collectives import Interconnect, dtype_bytes  # noqa: F401
 from repro.core.device import peak_lookup
-
-_DTYPE_BYTES = {"float32": 4, "tf32": 4, "bfloat16": 2, "float16": 2,
-                "int8": 1, "fp8": 1, "float64": 8}
-
-
-def dtype_bytes(dtype: str) -> int:
-    return _DTYPE_BYTES.get(str(dtype), 4)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,6 +33,7 @@ class DeviceProfile:
     smem_bytes: int               # shared memory / VMEM per SM (core)
     sm_count: int                 # SMs (GPU) / TensorCores (TPU) / cores (CPU)
     link_bw: float = 0.0          # NVLink / ICI / PCIe per direction, bytes/s
+    interconnect: Optional[Interconnect] = None  # α–β spec (core/collectives)
     notes: str = ""
 
     def peak(self, dtype: str, *, strict: bool | None = None) -> float:
@@ -65,7 +60,10 @@ A100_80G = DeviceProfile(
                 "float16": 312e12, "int8": 624e12},
     hbm_bw=2039e9, hbm_bytes=80 * GiB,
     l2_bytes=40 * MiB, smem_bytes=164 * KiB, sm_count=108,
-    link_bw=600e9 / 2, notes="A100-SXM4-80GB (GA100)")
+    link_bw=600e9 / 2,
+    interconnect=Interconnect("nvlink-mesh", link_bw=25e9,
+                              link_latency=2.0e-6, links_per_gpu=12),
+    notes="A100-SXM4-80GB (GA100); NVLink3: 12 links x 25 GB/s/dir")
 
 H100_SXM = DeviceProfile(
     name="h100_sxm", kind="gpu",
@@ -73,7 +71,10 @@ H100_SXM = DeviceProfile(
                 "float16": 989e12, "fp8": 1979e12, "int8": 1979e12},
     hbm_bw=3350e9, hbm_bytes=80 * GiB,
     l2_bytes=50 * MiB, smem_bytes=228 * KiB, sm_count=132,
-    link_bw=900e9 / 2, notes="H100-SXM5-80GB (GH100)")
+    link_bw=900e9 / 2,
+    interconnect=Interconnect("nvlink-mesh", link_bw=25e9,
+                              link_latency=1.5e-6, links_per_gpu=18),
+    notes="H100-SXM5-80GB (GH100); NVLink4: 18 links x 25 GB/s/dir")
 
 V100 = DeviceProfile(
     name="v100", kind="gpu",
@@ -81,7 +82,10 @@ V100 = DeviceProfile(
     hbm_bw=900e9, hbm_bytes=32 * GiB,
     l2_bytes=6 * MiB, smem_bytes=96 * KiB, sm_count=80,
     link_bw=300e9 / 2,
-    notes="V100-SXM2-32GB (GV100); no bf16 tensor cores — bf16 ~ fp32 rate")
+    interconnect=Interconnect("nvlink-mesh", link_bw=25e9,
+                              link_latency=2.5e-6, links_per_gpu=6),
+    notes="V100-SXM2-32GB (GV100); no bf16 tensor cores — bf16 ~ fp32 rate; "
+          "NVLink2: 6 links x 25 GB/s/dir")
 
 RTX_4090 = DeviceProfile(
     name="rtx_4090", kind="gpu",
@@ -89,7 +93,10 @@ RTX_4090 = DeviceProfile(
                 "float16": 165.2e12, "int8": 660.6e12},
     hbm_bw=1008e9, hbm_bytes=24 * GiB,
     l2_bytes=72 * MiB, smem_bytes=100 * KiB, sm_count=128,
-    link_bw=32e9, notes="GeForce RTX 4090 (AD102), GDDR6X, PCIe 4.0 x16")
+    link_bw=32e9,
+    interconnect=Interconnect("pcie-tree", link_bw=32e9,
+                              link_latency=5.0e-6, links_per_gpu=1),
+    notes="GeForce RTX 4090 (AD102), GDDR6X, PCIe 4.0 x16")
 
 L4 = DeviceProfile(
     name="l4", kind="gpu",
@@ -97,7 +104,10 @@ L4 = DeviceProfile(
                 "float16": 121e12, "int8": 242e12, "fp8": 242e12},
     hbm_bw=300e9, hbm_bytes=24 * GiB,
     l2_bytes=48 * MiB, smem_bytes=100 * KiB, sm_count=58,
-    link_bw=32e9, notes="NVIDIA L4 (AD104), GDDR6, PCIe 4.0 x16")
+    link_bw=32e9,
+    interconnect=Interconnect("pcie-tree", link_bw=32e9,
+                              link_latency=5.0e-6, links_per_gpu=1),
+    notes="NVIDIA L4 (AD104), GDDR6, PCIe 4.0 x16")
 
 # single source of truth for v5e numbers is core/device.TPU_V5E (the
 # DeviceModel the dry-run rooflines use); mirror it, never restate it
@@ -107,6 +117,9 @@ TPU_V5E = DeviceProfile(
     hbm_bw=_device.TPU_V5E.hbm_bw, hbm_bytes=_device.TPU_V5E.hbm_bytes,
     l2_bytes=0, smem_bytes=_device.TPU_V5E.vmem_bytes, sm_count=1,
     link_bw=_device.TPU_V5E.ici_bw,
-    notes="TPU v5e chip; smem is the 128 MiB VMEM (core/device.TPU_V5E)")
+    interconnect=Interconnect("nvlink-mesh", link_bw=_device.TPU_V5E.ici_bw,
+                              link_latency=1.0e-6, links_per_gpu=4),
+    notes="TPU v5e chip; smem is the 128 MiB VMEM (core/device.TPU_V5E); "
+          "ICI: 4 links per chip (2D torus), modeled as a mesh")
 
 FLEET = (A100_80G, H100_SXM, V100, RTX_4090, L4, TPU_V5E)

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import base as C
+from repro.core.collectives import CollectiveOp, dtype_bytes
 from repro.models import layers as L
 
 
@@ -275,3 +276,211 @@ def enumerate_ops(cfg: C.ModelConfig, batch: int, seq: int,
 
 def total_flops(ops: List[Op]) -> float:
     return sum(getattr(o, "flops", 0.0) for o in ops)
+
+
+# ---------------------------------------------------------------------------
+# Parallelism-aware expansion (paper §IV-D, multi-device planning)
+# ---------------------------------------------------------------------------
+# A ParallelismSpec mirrors the logical mesh axes of distributed/sharding.py
+# ('dp' over pod/data, 'tp' over model, act_mode 'tp'|'sp'), plus a pipeline
+# degree.  ``enumerate_parallel_ops`` expands a model into ONE RANK's op
+# list: each compute op sharded per the same name-pattern rules sharding.py
+# applies to parameters, plus the induced CollectiveOps.  The collective
+# cost model itself lives in core/collectives.py; docs/parallelism.md walks
+# through every rule below with the paper mapping and a worked example.
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelismSpec:
+    """(dp, tp, pp) degrees + activation-sharding mode at block boundaries
+    ('tp' = Megatron tensor parallel, hidden states replicated over the tp
+    axis; 'sp' = Megatron sequence parallel, hidden states sharded over
+    sequence — all-reduces become reduce-scatter + all-gather pairs)."""
+    dp: int = 1
+    tp: int = 1
+    pp: int = 1
+    act_mode: str = "tp"          # 'tp' | 'sp', as distributed/sharding.py
+
+    def __post_init__(self):
+        if min(self.dp, self.tp, self.pp) < 1:
+            raise ValueError(f"parallel degrees must be >= 1: {self}")
+        if self.act_mode not in ("tp", "sp"):
+            raise ValueError(f"act_mode must be 'tp' or 'sp': {self.act_mode!r}")
+
+    @property
+    def world(self) -> int:
+        return self.dp * self.tp * self.pp
+
+    @property
+    def trivial(self) -> bool:
+        return self.world == 1
+
+    def tag(self) -> str:
+        """Stable fingerprint for cache keys / report rows."""
+        return f"dp{self.dp}.tp{self.tp}.pp{self.pp}.{self.act_mode}"
+
+
+def _ceil_div(x: int, t: int) -> int:
+    return max(-(-int(x) // int(t)), 1)
+
+
+# Name-pattern sharding rules, mirroring distributed/sharding.py's _RULES:
+# column-parallel projections shard the output dim (n), row-parallel shard
+# the contraction dim (k) and end in a partial sum the tp group must reduce.
+_COL_SUFFIXES = (".wq", ".wk", ".wv", ".w_in", ".w_gate", ".up", ".wx",
+                 ".rh", ".qkvo")
+_ROW_SUFFIXES = (".wo", ".w_out", ".down")
+_INNER_SUFFIXES = (".qkv", ".gates")      # square maps on the sharded width
+_SEQ_SUFFIXES = (".ln", ".ln2", ".residual")   # hidden (T, d) activations
+_ACT_SUFFIXES = (".act", ".expert_act", ".gate_mul", ".scan", ".conv")
+
+
+def _shard_matmul(op: MatmulOp, tp: int) -> MatmulOp:
+    nm = op.name
+    if nm == "unembed" or any(nm.endswith(s) for s in _COL_SUFFIXES):
+        return dataclasses.replace(op, n=_ceil_div(op.n, tp))
+    if any(nm.endswith(s) for s in _ROW_SUFFIXES):
+        return dataclasses.replace(op, k=_ceil_div(op.k, tp))
+    if any(nm.endswith(s) for s in _INNER_SUFFIXES):
+        return dataclasses.replace(op, n=_ceil_div(op.n, tp),
+                                   k=_ceil_div(op.k, tp))
+    # MoE: experts shard over the tp axis (sharding.py's expert rules)
+    if nm.endswith(".dispatch"):
+        return dataclasses.replace(op, m=_ceil_div(op.m, tp))
+    if nm.endswith(".expert_in") or nm.endswith(".expert_out") \
+            or nm.endswith(".state"):
+        return dataclasses.replace(op, batch=_ceil_div(op.batch, tp))
+    if nm.endswith(".combine"):
+        return dataclasses.replace(op, k=_ceil_div(op.k, tp))
+    return op
+
+
+def _shard_attention(op: AttentionOp, tp: int) -> AttentionOp:
+    return dataclasses.replace(op, heads=_ceil_div(op.heads, tp),
+                               kv_heads=_ceil_div(op.kv_heads, tp))
+
+
+def _shard_memory(op: MemoryOp, tp: int, act_mode: str) -> MemoryOp:
+    nm, shape = op.name, op.shape
+    if nm == "embed":                     # vocab-parallel embedding table
+        return dataclasses.replace(op, shape=(_ceil_div(shape[0], tp),)
+                                   + shape[1:])
+    if nm.endswith(".rope"):              # (T, heads, hd): heads sharded
+        return dataclasses.replace(
+            op, shape=(shape[0], _ceil_div(shape[1], tp)) + shape[2:])
+    if nm == "mlstm.gate" or any(nm.endswith(s) for s in _ACT_SUFFIXES):
+        # activations between a column- and a row-parallel projection:
+        # the feature dim is sharded in BOTH act modes
+        return dataclasses.replace(op, shape=shape[:-1]
+                                   + (_ceil_div(shape[-1], tp),))
+    if act_mode == "sp" and (nm == "final_norm"
+                             or any(nm.endswith(s) for s in _SEQ_SUFFIXES)):
+        # sequence parallelism shards the (T, d) hidden states over tp
+        return dataclasses.replace(op, shape=(_ceil_div(shape[0], tp),)
+                                   + shape[1:])
+    return op                             # replicated ('tp' mode hiddens,
+                                          # router softmax, ...)
+
+
+def _shard_op(op: Op, spec: ParallelismSpec) -> Op:
+    if spec.tp == 1:
+        return op
+    if isinstance(op, MatmulOp):
+        return _shard_matmul(op, spec.tp)
+    if isinstance(op, AttentionOp):
+        return _shard_attention(op, spec.tp)
+    if isinstance(op, MemoryOp):
+        return _shard_memory(op, spec.tp, spec.act_mode)
+    return op
+
+
+def _row_parallel_per_layer(cfg: C.ModelConfig, kind: str) -> int:
+    """Forward row-parallel projections per layer of ``kind`` — each ends in
+    a partial-sum hidden state the tp group must reduce (Megatron: one after
+    attention's wo, one after the MLP's w_out)."""
+    ffn = 0
+    if kind in (C.ATTN, C.LOCAL_ATTN, C.ENC_ATTN, C.CROSS_ATTN, C.RGLRU):
+        if cfg.moe is not None:
+            ffn = 1 + cfg.moe.num_shared_experts
+        elif cfg.d_ff > 0:
+            ffn = 1
+    if kind in (C.ATTN, C.LOCAL_ATTN, C.ENC_ATTN):
+        return 1 + ffn
+    if kind == C.CROSS_ATTN:
+        return 2 + ffn                    # self.wo + cross.wo
+    if kind == C.RGLRU:
+        return 1 + ffn                    # rglru.w_out
+    if kind == C.MLSTM:
+        return 1                          # mlstm.down
+    if kind == C.SLSTM:
+        return 1                          # slstm.ff w_out
+    return 0
+
+
+def _induced_collectives(cfg: C.ModelConfig, batch: int, seq: int,
+                         spec: ParallelismSpec, dt: str) -> List[Op]:
+    """The CollectiveOps one rank issues during a forward pass under
+    ``spec``.  Data parallelism induces none (gradient all-reduce is a
+    training-step concern — see ROADMAP open items)."""
+    out: List[Op] = []
+    esz = dtype_bytes(dt)
+    T = batch * seq
+    hid_bytes = float(T * cfg.d_model * esz)
+    tp, pp = spec.tp, spec.pp
+
+    def emit(name: str, nbytes: float, n_ops: int):
+        if n_ops <= 0:
+            return
+        if spec.act_mode == "sp":
+            out.append(CollectiveOp(f"{name}.reduce_scatter", "reduce_scatter",
+                                    nbytes, tp, count=n_ops, dtype=dt))
+            out.append(CollectiveOp(f"{name}.all_gather", "all_gather",
+                                    nbytes, tp, count=n_ops, dtype=dt))
+        else:
+            out.append(CollectiveOp(f"{name}.all_reduce", "all_reduce",
+                                    nbytes, tp, count=n_ops, dtype=dt))
+
+    if tp > 1:
+        from collections import Counter
+        for kind, n in sorted(Counter(cfg.layer_kinds).items()):
+            emit(f"{kind}.tp", hid_bytes,
+                 n * _row_parallel_per_layer(cfg, kind))
+        if cfg.encoder is not None:
+            enc_bytes = float(batch * cfg.encoder.n_frames * cfg.d_model * esz)
+            emit("enc.tp", enc_bytes, 2 * cfg.encoder.n_layers)
+        # vocab-parallel embed: masked partial embeddings are summed
+        out.append(CollectiveOp("embed.tp.all_reduce", "all_reduce",
+                                hid_bytes, tp, dtype=dt))
+        # vocab-parallel logits gathered for decoding
+        Vp = L.pad_vocab(cfg.vocab_size)
+        out.append(CollectiveOp("unembed.tp.all_gather", "all_gather",
+                                float(T * Vp * esz), tp, dtype=dt))
+    if pp > 1:
+        # single-microbatch pipeline: stage hand-offs are sequential p2p
+        # sends of the (T, d) activation (overlap: ROADMAP open item)
+        out.append(CollectiveOp("pp.activation_p2p", "p2p", hid_bytes, 2,
+                                count=pp - 1, dtype=dt))
+    return out
+
+
+def enumerate_parallel_ops(cfg: C.ModelConfig, batch: int, seq: int,
+                           spec: ParallelismSpec,
+                           dtype: Optional[str] = None) -> List[Op]:
+    """ONE RANK's op list for tokens (batch, seq) executed under ``spec``:
+
+    * dp shards the batch (per-rank batch = ⌈batch/dp⌉, no forward comm),
+    * tp shards each op per the ``_shard_*`` name rules and appends the
+      induced reductions/gathers,
+    * pp leaves per-rank compute equal to the full stack divided over
+      stages — a single-microbatch pipeline's end-to-end latency is the sum
+      of all stages plus the (pp-1) activation hand-offs appended here.
+
+    ``spec.trivial`` returns ``enumerate_ops`` unchanged — the single-device
+    path stays bit-identical (pinned by tests/test_collectives.py)."""
+    if spec.trivial:
+        return enumerate_ops(cfg, batch, seq, dtype=dtype)
+    dt = dtype or "float32"
+    bsh = _ceil_div(batch, spec.dp)
+    ops = [_shard_op(op, spec) for op in enumerate_ops(cfg, bsh, seq,
+                                                       dtype=dtype)]
+    return ops + _induced_collectives(cfg, bsh, seq, spec, dt)

@@ -46,21 +46,28 @@ def plan_two_devices(lat_a: Sequence[float], lat_b: Sequence[float],
                          bottleneck=best)
 
 
-def plan_stages(latencies: Sequence[float], n_stages: int) -> PartitionPlan:
+def plan_stages(latencies: Sequence[float], n_stages: int,
+                comm_cost: float = 0.0) -> PartitionPlan:
     """Homogeneous devices: contiguous min-max partition (binary search +
-    greedy packing)."""
+    greedy packing).  ``comm_cost`` charges every non-first, non-empty stage
+    one activation hand-off INSIDE the min-max search, so the boundaries are
+    optimal under the reported cost model, not just post-hoc annotated."""
     lats = list(latencies)
-    lo, hi = max(lats), sum(lats)
+    lo, hi = max(lats), sum(lats) + comm_cost
 
     def feasible(cap: float):
         stages, cur, used = [0], 0.0, 1
+        budget = cap                      # later stages pay the hand-off
         for i, t in enumerate(lats):
-            if cur + t > cap and cur > 0:
+            if cur + t > budget and cur > 0:
                 used += 1
                 stages.append(i)
                 cur = 0.0
-                if used > n_stages:
+                budget = cap - comm_cost
+                if used > n_stages or budget <= 0:
                     return None
+            if cur == 0.0 and t > budget:
+                return None               # one block overflows this stage
             cur += t
         stages.append(len(lats))
         while len(stages) < n_stages + 1:
@@ -74,7 +81,8 @@ def plan_stages(latencies: Sequence[float], n_stages: int) -> PartitionPlan:
         else:
             lo = mid
     stages = feasible(hi)
-    times = [sum(lats[a:b]) for a, b in zip(stages, stages[1:])]
+    times = [sum(lats[a:b]) + (comm_cost if i > 0 and b > a else 0.0)
+             for i, (a, b) in enumerate(zip(stages, stages[1:]))]
     return PartitionPlan(boundaries=stages, stage_times=times,
                          bottleneck=max(times))
 
@@ -93,8 +101,23 @@ def _blocks_on(predictor, cfg, batch, seq, dtype, device):
                                                        dtype=dtype)]
 
 
+def activation_comm_cost(cfg, batch: int, seq: int,
+                         dtype: Optional[str] = None,
+                         device_a: Optional[str] = None,
+                         device_b: Optional[str] = None) -> float:
+    """Predicted seconds for one stage-boundary activation hand-off: a p2p
+    transfer of the (batch, seq, d_model) hidden state over the BOTTLENECK
+    interconnect of the two endpoints (``core/collectives.py`` α–β model;
+    an unregistered/None device costs the conservative default NIC)."""
+    from repro.core import collectives as CC
+    nbytes = float(batch) * seq * cfg.d_model * CC.dtype_bytes(
+        dtype or "float32")
+    return CC.p2p_time(nbytes, CC.slowest_interconnect(device_a, device_b))
+
+
 def plan_two_devices_model(predictor, cfg, batch: int, seq: int, *,
-                           b_speed: float = 1.0, comm_cost: float = 0.0,
+                           b_speed: float = 1.0,
+                           comm_cost: Optional[float] = None,
                            dtype: Optional[str] = None,
                            device_a: Optional[str] = None,
                            device_b: Optional[str] = None
@@ -104,21 +127,35 @@ def plan_two_devices_model(predictor, cfg, batch: int, seq: int, *,
     runs all blocks' ops through one vectorized call per op family).  Name
     fleet devices via ``device_a``/``device_b`` (e.g. split a model across an
     A100 and an L4); without ``device_b``, device B falls back to a uniform
-    ``b_speed`` multiple of device A.  Returns (plan, blocks_a)."""
+    ``b_speed`` multiple of device A.  ``comm_cost`` defaults to the
+    PREDICTED activation-transfer time between the two devices
+    (``activation_comm_cost``); pass an explicit scalar (e.g. a measured
+    value, or 0.0 for the legacy compute-only plan) to override.
+    Returns (plan, blocks_a)."""
     blocks = _blocks_on(predictor, cfg, batch, seq, dtype, device_a)
     if device_b is not None:
         blocks_b = _blocks_on(predictor, cfg, batch, seq, dtype, device_b)
     else:
         blocks_b = [t * b_speed for t in blocks]
+    if comm_cost is None:
+        comm_cost = activation_comm_cost(cfg, batch, seq, dtype=dtype,
+                                         device_a=device_a, device_b=device_b)
     plan = plan_two_devices(blocks, blocks_b, comm_cost)
     return plan, blocks
 
 
 def plan_stages_model(predictor, cfg, batch: int, seq: int, n_stages: int, *,
+                      comm_cost: Optional[float] = None,
                       dtype: Optional[str] = None,
                       device: Optional[str] = None
                       ) -> Tuple[PartitionPlan, List[float]]:
     """N-stage contiguous min-max partition from one batched prediction,
-    optionally planned for a named fleet device."""
+    optionally planned for a named fleet device.  Every stage after the
+    first is charged one activation hand-off — ``comm_cost`` defaults to
+    the predicted p2p transfer time on the device's own interconnect
+    (homogeneous stages); an explicit scalar overrides it."""
     blocks = _blocks_on(predictor, cfg, batch, seq, dtype, device)
-    return plan_stages(blocks, n_stages), blocks
+    if comm_cost is None:
+        comm_cost = activation_comm_cost(cfg, batch, seq, dtype=dtype,
+                                         device_a=device, device_b=device)
+    return plan_stages(blocks, n_stages, comm_cost), blocks

@@ -37,6 +37,14 @@ class PM2Lat:
         mm = store.memory_model
         self.memory_model = MemoryModel.from_json(mm) if isinstance(mm, dict) else mm
 
+    @property
+    def interconnect(self):
+        """This device's α–β interconnect spec (collective-op prediction);
+        falls back to ``collectives.DEFAULT_INTERCONNECT`` for hosts with no
+        registered profile."""
+        from repro.core.collectives import interconnect_for
+        return interconnect_for(self.device)
+
     # ----- per-op -----
     def _matmul_table(self, op: og.MatmulOp,
                       kernel: Optional[str]) -> ThroughputTable:
@@ -67,6 +75,12 @@ class PM2Lat:
         return self.memory_model.predict(op.features(),
                                          class_of(op.snippet)) * op.count
 
+    def predict_collective(self, op) -> Tuple[float, str]:
+        """Seconds (incl. count) + selected ring/tree algorithm for one
+        ``CollectiveOp`` under this device's interconnect."""
+        from repro.core.collectives import predict_collective
+        return predict_collective(op, self.interconnect)
+
     def predict_op(self, op) -> PredictionRow:
         if op.kind in ("matmul", "bmm"):
             t = self._matmul_table(op, None)
@@ -76,6 +90,9 @@ class PM2Lat:
             t = self._attention_table(op, None)
             sec = op.flops / t.interpolate_throughput(op.skv)
             return PredictionRow(op.name, "attention", sec, t.key.kernel)
+        if op.kind == "collective":
+            sec, algo = self.predict_collective(op)
+            return PredictionRow(op.name, "collective", sec, algo)
         return PredictionRow(op.name, "memory", self.predict_memory(op), "linreg")
 
     # ----- model level -----
@@ -86,6 +103,15 @@ class PM2Lat:
     def predict_model(self, cfg: C.ModelConfig, batch: int, seq: int,
                       dtype: Optional[str] = None):
         ops = og.enumerate_ops(cfg, batch, seq, dtype=dtype)
+        return self.predict_ops(ops)
+
+    def predict_parallel(self, cfg: C.ModelConfig, batch: int, seq: int,
+                         spec: "og.ParallelismSpec",
+                         dtype: Optional[str] = None):
+        """One-rank end-to-end prediction under a ``ParallelismSpec``:
+        sharded compute ops + induced collectives (a trivial spec is the
+        plain ``predict_model`` path, op for op)."""
+        ops = og.enumerate_parallel_ops(cfg, batch, seq, spec, dtype=dtype)
         return self.predict_ops(ops)
 
     def predict_blocks(self, cfg: C.ModelConfig, batch: int, seq: int,

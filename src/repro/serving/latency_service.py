@@ -40,6 +40,35 @@ class LatencyQueryResult:
         return dataclasses.asdict(self)
 
 
+@dataclasses.dataclass
+class ParallelLatencyResult:
+    """One rank's predicted forward latency under a parallelism strategy,
+    with the compute/communication split (``comm_share`` is the planning
+    signal: the fraction of the end-to-end time spent in collectives)."""
+    model: str
+    device: str
+    dtype: str
+    batch: int
+    seq: int
+    dp: int
+    tp: int
+    pp: int
+    act_mode: str
+    world: int
+    seconds: float
+    compute_seconds: float
+    comm_seconds: float
+
+    @property
+    def comm_share(self) -> float:
+        return self.comm_seconds / self.seconds if self.seconds > 0 else 0.0
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["comm_share"] = self.comm_share
+        return d
+
+
 class LatencyService:
     def __init__(self, store=None, device: Optional[str] = None, *,
                  cache_path: Optional[str] = None, cache_size: int = 65536):
@@ -95,6 +124,32 @@ class LatencyService:
                     PredictionCache.make_key(config_key(cfg), pred.device,
                                              dtype, b, s), float(grid[i, j]))
         return grid
+
+    def latency_parallel(self, model: Union[str, ModelConfig], batch: int,
+                         seq: int, dp: int = 1, tp: int = 1, pp: int = 1,
+                         act_mode: str = "tp", dtype: Optional[str] = None,
+                         device: Optional[str] = None
+                         ) -> ParallelLatencyResult:
+        """End-to-end one-rank latency under a (dp, tp, pp) strategy: the
+        parallelism-expanded op graph (``opgraph.enumerate_parallel_ops``)
+        predicted through the vectorized engine, collectives priced by the
+        device's α–β interconnect model (``core/collectives.py``).  With
+        ``dp=tp=pp=1`` the answer is bit-identical to ``latency_query``
+        (same op list, same accumulation).  Uncached, like
+        ``latency_breakdown`` — this is the planning endpoint."""
+        from repro.core.opgraph import ParallelismSpec
+        cfg = self._resolve(model)
+        pred = self.predictor.for_device(device)
+        spec = ParallelismSpec(dp=dp, tp=tp, pp=pp, act_mode=act_mode)
+        seconds, rows = pred.predict_parallel(cfg, batch, seq, spec,
+                                              dtype=dtype)
+        comm = sum(r.seconds for r in rows if r.kind == "collective")
+        return ParallelLatencyResult(
+            model=cfg.name, device=pred.device, dtype=dtype or "float32",
+            batch=int(batch), seq=int(seq), dp=int(dp), tp=int(tp),
+            pp=int(pp), act_mode=act_mode, world=spec.world,
+            seconds=seconds, compute_seconds=seconds - comm,
+            comm_seconds=comm)
 
     def latency_breakdown(self, model: Union[str, ModelConfig], batch: int,
                           seq: int, dtype: Optional[str] = None,

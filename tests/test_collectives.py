@@ -1,0 +1,343 @@
+"""Collective-communication model + parallelism-aware prediction:
+α–β invariants, op-expansion rules, the golden dp=tp=pp=1 bit-identical
+path, comm-share monotonicity in tp, derived partition comm costs, and the
+docs/parallelism.md worked-example numbers."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import registry as cr
+from repro.core import calibrate
+from repro.core import collectives as CC
+from repro.core import opgraph as og
+from repro.core.batch_predict import BatchPredictor
+from repro.core.partition import (activation_comm_cost, plan_stages_model,
+                                  plan_two_devices_model)
+from repro.core.predictor import PM2Lat
+
+A100_IC = CC.Interconnect("nvlink-mesh", link_bw=25e9, link_latency=2e-6,
+                          links_per_gpu=12)
+PCIE_IC = CC.Interconnect("pcie-tree", link_bw=32e9, link_latency=5e-6)
+
+
+@pytest.fixture(scope="module")
+def bp(calibration_store):
+    return BatchPredictor(calibration_store, calibrate.device_name())
+
+
+# ---------------------------------------------------------------------------
+# α–β model invariants
+# ---------------------------------------------------------------------------
+
+def test_interconnect_validation():
+    with pytest.raises(ValueError, match="topology"):
+        CC.Interconnect("token-ring", 1e9, 1e-6)
+    with pytest.raises(ValueError, match="invalid"):
+        CC.Interconnect("ethernet", -1.0, 1e-6)
+    with pytest.raises(ValueError, match="unknown collective"):
+        CC.CollectiveOp("x", "all_to_all", 1.0, 2)
+
+
+def test_world_one_costs_zero():
+    for coll in CC.COLLECTIVES:
+        t, algo = CC.collective_time(coll, 1e9, 1, A100_IC)
+        assert float(t) == 0.0 and str(algo) == "none"
+
+
+@pytest.mark.parametrize("coll", CC.COLLECTIVES)
+def test_monotone_in_bytes_and_world(coll):
+    sizes = [1e3, 1e5, 1e7, 1e9]
+    worlds = [2, 3, 4, 6, 8, 16]
+    for ic in (A100_IC, PCIE_IC):
+        for w in worlds:
+            ts = [float(CC.collective_time(coll, n, w, ic)[0])
+                  for n in sizes]
+            assert all(a < b for a, b in zip(ts, ts[1:])), (coll, w, ts)
+        if coll == "p2p":
+            continue          # a pair transfer does not scale with world
+        for n in sizes:
+            ts = [float(CC.collective_time(coll, n, w, ic)[0])
+                  for w in worlds]
+            assert all(a < b for a, b in zip(ts, ts[1:])), (coll, n, ts)
+
+
+def test_ring_allreduce_equals_rs_plus_ag():
+    for n in (1e4, 1e6, 1e8):
+        for p in (2, 4, 8):
+            ar = CC.collective_time("all_reduce", n, p, A100_IC,
+                                    algorithm="ring")[0]
+            rs = CC.collective_time("reduce_scatter", n, p, A100_IC,
+                                    algorithm="ring")[0]
+            ag = CC.collective_time("all_gather", n, p, A100_IC,
+                                    algorithm="ring")[0]
+            assert float(ar) == pytest.approx(float(rs) + float(ag),
+                                              rel=1e-12)
+
+
+def test_ring_allgather_world2_equals_p2p_half_payload():
+    """At world 2, a ring all-gather moves exactly one half-tensor over one
+    hop — the α–β cost of a p2p send of n/2 at the same world."""
+    for n in (1e4, 1e6, 1e8):
+        ag = CC.collective_time("all_gather", n, 2, A100_IC,
+                                algorithm="ring")[0]
+        p2p = CC.collective_time("p2p", n / 2, 2, A100_IC)[0]
+        assert float(ag) == pytest.approx(float(p2p), rel=1e-12)
+
+
+def test_algorithm_selection_by_message_size():
+    """Small messages are latency-bound (tree: fewer rounds), large ones
+    bandwidth-bound (ring: optimal volume)."""
+    _, small = CC.collective_time("all_reduce", 1e3, 8, A100_IC)
+    _, large = CC.collective_time("all_reduce", 1e9, 8, A100_IC)
+    assert str(small) == "tree" and str(large) == "ring"
+
+
+def test_bus_bw_correction_shapes():
+    """Efficiency decays with world size, steeper on shared topologies; a
+    mesh aggregates its links, a tree does not."""
+    assert A100_IC.raw_bus_bw() == 12 * 25e9
+    assert PCIE_IC.raw_bus_bw() == 32e9
+    for ic in (A100_IC, PCIE_IC):
+        effs = [float(ic.efficiency(p)) for p in (1, 2, 4, 8)]
+        assert effs[0] == 1.0
+        assert all(a > b for a, b in zip(effs, effs[1:]))
+    assert float(PCIE_IC.efficiency(8)) < float(A100_IC.efficiency(8))
+    eth = CC.DEFAULT_INTERCONNECT
+    assert float(eth.efficiency(8)) < float(PCIE_IC.efficiency(8))
+
+
+def test_interconnect_for_fallback_and_registry():
+    assert CC.interconnect_for(None) is CC.DEFAULT_INTERCONNECT
+    assert CC.interconnect_for("no_such_device") is CC.DEFAULT_INTERCONNECT
+    assert CC.interconnect_for("a100_80g") == A100_IC
+    # bottleneck selection: the PCIe L4 is slower than the NVLink A100
+    ic = CC.slowest_interconnect("a100_80g", "l4")
+    assert ic.topology == "pcie-tree"
+
+
+def test_every_fleet_profile_has_an_interconnect():
+    from repro.core import devices as D
+    from repro.core.devices.profiles import FLEET
+    for prof in FLEET:
+        assert prof.interconnect is not None, prof.name
+        assert prof.interconnect.topology in CC.TOPOLOGIES
+
+
+# ---------------------------------------------------------------------------
+# op expansion (ParallelismSpec)
+# ---------------------------------------------------------------------------
+
+def test_spec_validation_and_tag():
+    with pytest.raises(ValueError, match="degrees"):
+        og.ParallelismSpec(dp=0)
+    with pytest.raises(ValueError, match="act_mode"):
+        og.ParallelismSpec(act_mode="zp")
+    s = og.ParallelismSpec(dp=2, tp=4, pp=2, act_mode="sp")
+    assert s.world == 16 and not s.trivial
+    assert s.tag() == "dp2.tp4.pp2.sp"
+    assert og.ParallelismSpec().trivial
+
+
+def test_trivial_spec_is_the_exact_single_device_op_list():
+    cfg = cr.get_any("qwen3-mini")
+    base = og.enumerate_ops(cfg, 4, 128)
+    par = og.enumerate_parallel_ops(cfg, 4, 128, og.ParallelismSpec())
+    assert par == base                  # dataclass equality, op for op
+
+
+def test_tp_shards_col_row_and_attention():
+    cfg = cr.get_any("qwen3-mini")
+    base = {o.name: o for o in og.enumerate_ops(cfg, 4, 128)}
+    spec = og.ParallelismSpec(tp=4)
+    par = {o.name: o for o in og.enumerate_parallel_ops(cfg, 4, 128, spec)
+           if getattr(o, "kind", "") != "collective"}
+    wq_b, wq_p = base["attn.wq"], par["attn.wq"]
+    assert (wq_p.m, wq_p.n, wq_p.k) == (wq_b.m, -(-wq_b.n // 4), wq_b.k)
+    wo_b, wo_p = base["attn.wo"], par["attn.wo"]
+    assert (wo_p.m, wo_p.n, wo_p.k) == (wo_b.m, wo_b.n, -(-wo_b.k // 4))
+    at_b, at_p = base["attn.attn"], par["attn.attn"]
+    assert at_p.heads == -(-at_b.heads // 4)
+    assert at_p.sq == at_b.sq and at_p.skv == at_b.skv
+    # hidden-state norms replicated in 'tp' mode, activation dim sharded
+    assert par["attn.ln"].shape == base["attn.ln"].shape
+    assert par["attn.act"].shape[-1] == -(-base["attn.act"].shape[-1] // 4)
+    assert par["unembed"].n == -(-base["unembed"].n // 4)
+
+
+def test_sp_mode_shards_hidden_norms_and_pairs_collectives():
+    cfg = cr.get_any("qwen3-mini")
+    tp_ops = og.enumerate_parallel_ops(cfg, 4, 128, og.ParallelismSpec(tp=4))
+    sp_ops = og.enumerate_parallel_ops(
+        cfg, 4, 128, og.ParallelismSpec(tp=4, act_mode="sp"))
+    tp_map = {o.name: o for o in tp_ops}
+    sp_map = {o.name: o for o in sp_ops}
+    assert sp_map["attn.ln"].shape[0] == -(-tp_map["attn.ln"].shape[0] // 4)
+    tp_colls = [o for o in tp_ops if getattr(o, "kind", "") == "collective"]
+    sp_colls = [o for o in sp_ops if getattr(o, "kind", "") == "collective"]
+    assert any(o.coll == "all_reduce" and o.name == "attn.tp.all_reduce"
+               for o in tp_colls)
+    # sp: the per-layer all-reduce splits into a rs+ag pair of equal bytes
+    rs = [o for o in sp_colls if o.coll == "reduce_scatter"]
+    ag = [o for o in sp_colls if o.name == "attn.tp.all_gather"]
+    assert rs and ag and rs[0].nbytes == ag[0].nbytes
+
+
+def test_dp_shards_batch_pp_appends_p2p():
+    cfg = cr.get_any("qwen3-mini")
+    base = {o.name: o for o in og.enumerate_ops(cfg, 2, 128)}
+    dp_ops = {o.name: o for o in og.enumerate_parallel_ops(
+        cfg, 8, 128, og.ParallelismSpec(dp=4))}
+    assert dp_ops["attn.wq"].m == base["attn.wq"].m   # batch 8/4 == 2
+    pp_ops = og.enumerate_parallel_ops(cfg, 8, 128, og.ParallelismSpec(pp=4))
+    p2p = [o for o in pp_ops if getattr(o, "kind", "") == "collective"]
+    assert len(p2p) == 1 and p2p[0].coll == "p2p" and p2p[0].count == 3
+
+
+def test_expansion_covers_every_arch_family():
+    spec = og.ParallelismSpec(dp=2, tp=4, pp=2)
+    for name in [f"{n}-reduced" for n in cr.ARCH_NAMES]:
+        cfg = cr.get_any(name)
+        ops = og.enumerate_parallel_ops(cfg, 2, 64, spec)
+        colls = [o for o in ops if getattr(o, "kind", "") == "collective"]
+        assert colls, name
+        assert all(o.world in (2, 4) or o.coll == "p2p" for o in colls), name
+
+
+# ---------------------------------------------------------------------------
+# prediction: golden single-device path + monotone comm share
+# ---------------------------------------------------------------------------
+
+def test_golden_trivial_spec_bit_identical(bp):
+    cfg = cr.reduced("qwen2-0.5b")
+    want, _ = bp.predict_model(cfg, 2, 32)
+    got, rows = bp.predict_parallel(cfg, 2, 32, og.ParallelismSpec())
+    assert got == want                   # bitwise, not approx
+    assert not any(r.kind == "collective" for r in rows)
+    # scalar reference agrees the same way
+    scalar = PM2Lat(bp.store, bp.device)
+    s_want, _ = scalar.predict_model(cfg, 2, 32)
+    s_got, _ = scalar.predict_parallel(cfg, 2, 32, og.ParallelismSpec())
+    assert s_got == s_want
+
+
+def test_scalar_and_batch_agree_on_collectives(bp):
+    cfg = cr.reduced("qwen2-0.5b")
+    spec = og.ParallelismSpec(tp=4, pp=2)
+    scalar = PM2Lat(bp.store, bp.device)
+    t_b, rows_b = bp.predict_parallel(cfg, 2, 32, spec)
+    t_s, rows_s = scalar.predict_parallel(cfg, 2, 32, spec)
+    assert t_b == pytest.approx(t_s, rel=1e-9)
+    for rb, rs in zip(rows_b, rows_s):
+        assert (rb.name, rb.kind, rb.kernel) == (rs.name, rs.kind, rs.kernel)
+        assert rb.seconds == pytest.approx(rs.seconds, rel=1e-9)
+
+
+def test_comm_share_strictly_increases_with_tp(bp):
+    """Acceptance criterion: comm share strictly grows with tensor-parallel
+    degree for a fixed model/device."""
+    from repro.serving.latency_service import LatencyService
+    svc = LatencyService(bp.store, bp.device)
+    prev = -1.0
+    for tp in (1, 2, 4, 8, 16):
+        r = svc.latency_parallel("qwen3-mini", 8, 256, tp=tp,
+                                 device="a100_80g")
+        assert r.comm_share > prev, (tp, r.comm_share, prev)
+        assert r.seconds == pytest.approx(r.compute_seconds + r.comm_seconds)
+        prev = r.comm_share
+
+
+def test_latency_parallel_trivial_matches_latency_query(bp):
+    from repro.serving.latency_service import LatencyService
+    svc = LatencyService(bp.store, bp.device)
+    for dev in (None, "l4"):
+        q = svc.latency_query("qwen3-mini", 8, 256, device=dev)
+        p = svc.latency_parallel("qwen3-mini", 8, 256, device=dev)
+        assert p.seconds == q.seconds    # bitwise
+        assert p.comm_seconds == 0.0 and p.world == 1
+        j = p.to_json()
+        assert j["comm_share"] == 0.0 and j["device"] == q.device
+
+
+def test_parallel_result_devices_differ(bp):
+    """The same spec priced on different interconnects gives different comm
+    times (NVLink mesh vs PCIe tree)."""
+    from repro.serving.latency_service import LatencyService
+    svc = LatencyService(bp.store, bp.device)
+    a = svc.latency_parallel("qwen3-mini", 8, 256, tp=4, device="a100_80g")
+    l = svc.latency_parallel("qwen3-mini", 8, 256, tp=4, device="l4")
+    assert l.comm_seconds > a.comm_seconds
+
+
+def test_worked_example_numbers(bp):
+    """Pin the exact numbers docs/parallelism.md reproduces by hand."""
+    from repro.serving.latency_service import LatencyService
+    svc = LatencyService(bp.store, bp.device)
+    r = svc.latency_parallel("qwen3-mini", 8, 256, tp=4, device="a100_80g")
+    one_ar = float(CC.collective_time("all_reduce", 2097152.0, 4, A100_IC,
+                                      algorithm="ring")[0])
+    assert one_ar == pytest.approx(23.115e-6, rel=1e-3)
+    ag = float(CC.collective_time("all_gather", 16777216.0, 4, A100_IC)[0])
+    assert ag == pytest.approx(48.46e-6, rel=1e-3)
+    assert r.comm_seconds == pytest.approx(13 * one_ar + ag, rel=1e-12)
+    assert r.comm_seconds == pytest.approx(348.95e-6, rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# partition planners: derived comm cost
+# ---------------------------------------------------------------------------
+
+def test_activation_comm_cost_positive_and_bottlenecked():
+    cfg = cr.get_any("qwen3-mini")
+    nv = activation_comm_cost(cfg, 8, 256, device_a="a100_80g",
+                              device_b="a100_80g")
+    px = activation_comm_cost(cfg, 8, 256, device_a="a100_80g",
+                              device_b="l4")
+    assert 0 < nv < px                   # PCIe endpoint is the bottleneck
+    # explicit dtype scales the payload
+    half = activation_comm_cost(cfg, 8, 256, dtype="bfloat16",
+                                device_a="a100_80g", device_b="a100_80g")
+    assert half < nv
+
+
+def test_plan_two_devices_model_derives_comm(bp):
+    cfg = cr.reduced("qwen2-0.5b", n_layers=4)
+    derived, _ = plan_two_devices_model(bp, cfg, 2, 32,
+                                        device_a="a100_80g", device_b="l4")
+    legacy, _ = plan_two_devices_model(bp, cfg, 2, 32, comm_cost=0.0,
+                                       device_a="a100_80g", device_b="l4")
+    assert derived.bottleneck >= legacy.bottleneck
+    # override with a huge scalar: splitting becomes pointless, all blocks
+    # land on one device
+    forced, _ = plan_two_devices_model(bp, cfg, 2, 32, comm_cost=10.0,
+                                       device_a="a100_80g", device_b="l4")
+    assert forced.split_point in (0, 4)
+
+
+def test_plan_stages_model_charges_hand_offs(bp):
+    cfg = cr.reduced("qwen2-0.5b", n_layers=4)
+    plan, _ = plan_stages_model(bp, cfg, 2, 32, 2, device="h100_sxm")
+    free, _ = plan_stages_model(bp, cfg, 2, 32, 2, comm_cost=0.0,
+                                device="h100_sxm")
+    comm = activation_comm_cost(cfg, 2, 32, device_a="h100_sxm",
+                                device_b="h100_sxm")
+    assert plan.boundaries == free.boundaries
+    assert plan.stage_times[0] == pytest.approx(free.stage_times[0])
+    assert plan.stage_times[1] == pytest.approx(free.stage_times[1] + comm)
+    assert plan.bottleneck == pytest.approx(max(plan.stage_times))
+
+
+# ---------------------------------------------------------------------------
+# benchmark smoke (the --dry-run path CI exercises)
+# ---------------------------------------------------------------------------
+
+def test_parallel_scaling_dry_run_rows():
+    from benchmarks.parallel_scaling import run
+    rows = run(batch=2, seq=64, worlds=(1, 2), strategies=["tp", "pp"],
+               devices=["a100_80g"], archs=["qwen2-0.5b-reduced"],
+               verbose=False)
+    assert len(rows) == 4
+    by = {(r["strategy"], r["world"]): r for r in rows}
+    assert by[("tp", 1)]["seconds"] == by[("pp", 1)]["seconds"]
+    assert by[("tp", 2)]["comm_share"] > 0
+    assert by[("tp", 1)]["speedup"] == pytest.approx(1.0)

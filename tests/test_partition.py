@@ -46,3 +46,28 @@ def test_plan_stages_boundaries_monotone():
     assert b[0] == 0 and b[-1] == 6
     assert all(x <= y for x, y in zip(b, b[1:]))
     assert sum(plan.stage_times) == pytest.approx(21)
+
+
+def test_plan_stages_comm_cost_inside_the_minmax():
+    """Hand-off charges must move the boundaries, not just annotate them:
+    with blocks [4,3,3] and comm 3, the zero-comm optimum [4 | 3,3] costs
+    max(4, 6+3)=9 while [4,3 | 3] costs max(7, 3+3)=7."""
+    plan = P.plan_stages([4, 3, 3], 2, comm_cost=3.0)
+    assert plan.boundaries == [0, 2, 3]
+    assert plan.stage_times == [7.0, 6.0]
+    assert plan.bottleneck == pytest.approx(7.0)
+    # zero comm keeps the legacy behavior bit for bit
+    legacy = P.plan_stages([4, 3, 3], 2)
+    assert legacy.boundaries == [0, 1, 3] and legacy.bottleneck == 6.0
+
+
+def test_plan_stages_comm_cost_oversized_block():
+    """A block bigger than a later stage's comm-charged budget must force
+    the search to a higher cap (here: keep everything in one stage at
+    bottleneck 11) instead of silently overflowing the stage (15)."""
+    plan = P.plan_stages([1, 10], 2, comm_cost=5.0)
+    assert plan.bottleneck == pytest.approx(11.0)
+    assert sum(b - a for a, b in zip(plan.boundaries, plan.boundaries[1:])
+               if b > a) == 2
+    times = [t for t in plan.stage_times if t > 0]
+    assert times == [pytest.approx(11.0)]
