@@ -47,6 +47,31 @@ PY
   echo "--- smoke: parallel-scaling benchmark (--dry-run) ---"
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TIMEOUT" \
     python -m benchmarks.parallel_scaling --dry-run
+  echo "--- smoke: latency_train round-trip (schedule-aware) ---"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TIMEOUT" \
+    python - <<'PY'
+from repro.serving.latency_service import LatencyService
+svc = LatencyService()
+q = svc.latency_query("qwen3-mini", 8, 256)
+t = svc.latency_train("qwen3-mini", 8, 256, dp=4, microbatches=2,
+                      bucket_mb=4.0, device="a100_80g")
+t2 = svc.latency_train("qwen3-mini", 8, 256, dp=4, microbatches=2,
+                       bucket_mb=4.0, device="a100_80g")
+assert t.seconds > 0 and t.bwd_seconds > t.fwd_seconds
+assert t.exposed_comm_seconds <= t.comm_seconds
+assert t2.cached and t2.seconds == t.seconds
+p = svc.latency_parallel("qwen3-mini", 8, 256, pp=2, microbatches=4,
+                         device="a100_80g")
+assert p.seconds < p.compute_seconds + p.comm_seconds  # overlap is real
+print(f"latency_train ok: step={t.seconds*1e3:.3f}ms "
+      f"(fwd={t.fwd_seconds*1e3:.3f} bwd={t.bwd_seconds*1e3:.3f} "
+      f"opt={t.optimizer_seconds*1e3:.3f} comm={t.comm_seconds*1e3:.3f} "
+      f"exposed={t.exposed_comm_seconds*1e3:.3f}) cached-hit ok; "
+      f"pp2/mb4 makespan={p.seconds*1e3:.3f}ms")
+PY
+  echo "--- smoke: overlap-scaling benchmark (--dry-run) ---"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TIMEOUT" \
+    python -m benchmarks.overlap_scaling --dry-run
 fi
 
 if [[ "$DOCS" == 1 ]]; then

@@ -505,11 +505,13 @@ class BatchPredictor:
         kernels = np.full(len(ops), "linreg", object)
         groups: Dict[tuple, List[int]] = {}
         for i, op in enumerate(ops):
-            if op.kind in ("matmul", "bmm"):
+            # dispatch over the real Op union (opgraph.Op), not duck-typed
+            # kind strings
+            if isinstance(op, og.MatmulOp):
                 groups.setdefault(("mm", op.kind, op.dtype), []).append(i)
-            elif op.kind == "attention":
+            elif isinstance(op, og.AttentionOp):
                 groups.setdefault(("attn", op.dtype), []).append(i)
-            elif op.kind == "collective":
+            elif isinstance(op, CC.CollectiveOp):
                 groups.setdefault(("coll", op.coll), []).append(i)
             else:
                 groups.setdefault(("mem",), []).append(i)
@@ -540,8 +542,8 @@ class BatchPredictor:
         secs, kernels = self._predict_ops_arrays(ops)
         rows = []
         for op, sec, kern in zip(ops, secs, kernels):
-            kind = op.kind if op.kind in ("matmul", "bmm", "attention",
-                                          "collective") else "memory"
+            kind = op.kind if isinstance(op, (og.MatmulOp, og.AttentionOp,
+                                              CC.CollectiveOp)) else "memory"
             rows.append(PredictionRow(op.name, kind, float(sec), str(kern)))
         return sum(r.seconds for r in rows), rows
 
@@ -558,16 +560,51 @@ class BatchPredictor:
                          spec: og.ParallelismSpec,
                          dtype: Optional[str] = None,
                          device: Optional[str] = None):
-        """One-rank end-to-end prediction under a ``ParallelismSpec``: the
-        sharded compute ops plus the induced collectives, every family
-        vectorized (collectives via one α–β evaluation per collective type).
-        A trivial spec runs the exact ``predict_model`` op list, so the
-        single-device answer is bit-identical."""
+        """Schedule-aware end-to-end prediction under a ``ParallelismSpec``:
+        the makespan of the two-stream list schedule over the sharded
+        compute ops plus the induced collectives, every family vectorized
+        (collectives via one α–β evaluation per collective type).  With
+        ``microbatches == 1`` the schedule is a serialized chain — the
+        historical sequential sum, bit for bit — and a trivial spec runs
+        the exact ``predict_model`` op list."""
+        sched = self.schedule_parallel(cfg, batch, seq, spec, dtype=dtype,
+                                       device=device)
+        return sched.makespan, sched.rows
+
+    def schedule_parallel(self, cfg: C.ModelConfig, batch: int, seq: int,
+                          spec: og.ParallelismSpec,
+                          dtype: Optional[str] = None,
+                          device: Optional[str] = None):
+        """The full ``Schedule`` (timeline + busy/exposed splits) behind
+        ``predict_parallel``."""
         if device is not None and device != self.device:
-            return self.for_device(device).predict_parallel(
+            return self.for_device(device).schedule_parallel(
                 cfg, batch, seq, spec, dtype=dtype)
-        ops = og.enumerate_parallel_ops(cfg, batch, seq, spec, dtype=dtype)
-        return self.predict_ops(ops)
+        from repro.core import schedule as S
+        return S.schedule_parallel(self, cfg, batch, seq, spec, dtype=dtype)
+
+    def predict_step(self, cfg: C.ModelConfig, batch: int, seq: int,
+                     spec: og.ParallelismSpec = None, train=None,
+                     dtype: Optional[str] = None,
+                     device: Optional[str] = None):
+        """One TRAINING step (fwd + bwd + gradient comm + optimizer
+        update) priced as the schedule makespan — the vectorized twin of
+        ``PM2Lat.predict_step``."""
+        sched = self.schedule_step(cfg, batch, seq, spec=spec, train=train,
+                                   dtype=dtype, device=device)
+        return sched.makespan, sched.rows
+
+    def schedule_step(self, cfg: C.ModelConfig, batch: int, seq: int,
+                      spec: og.ParallelismSpec = None, train=None,
+                      dtype: Optional[str] = None,
+                      device: Optional[str] = None):
+        """The full training-step ``Schedule`` behind ``predict_step``."""
+        if device is not None and device != self.device:
+            return self.for_device(device).schedule_step(
+                cfg, batch, seq, spec=spec, train=train, dtype=dtype)
+        from repro.core import schedule as S
+        return S.schedule_step(self, cfg, batch, seq, spec=spec, train=train,
+                               dtype=dtype)
 
     def predict_blocks(self, cfg: C.ModelConfig, batch: int, seq: int,
                        dtype: Optional[str] = None,
@@ -691,8 +728,15 @@ def config_key(cfg: C.ModelConfig) -> str:
 
 class PredictionCache:
     """LRU cache of model-level predictions keyed on
-    ``(model, device, dtype, batch, seq)``, JSON-persistable so NAS sweeps
-    and the serving latency endpoint survive process restarts.
+    ``(model, device, dtype, batch, seq[, spec])``, JSON-persistable so NAS
+    sweeps and the serving latency endpoint survive process restarts.
+
+    Values are either a bare float (``latency_query``-style single-device
+    seconds) or a flat ``{str: float}`` dict (``latency_parallel`` /
+    ``latency_train`` results, which carry a makespan + busy-time split).
+    The optional ``spec`` key component is the ``ParallelismSpec.tag()``
+    (plus the training tag for training-step entries); single-device keys
+    are unchanged.
 
     ``SCHEMA`` stamps the persisted file with the prediction SEMANTICS
     version: bump it whenever the predictor's math changes (e.g. the
@@ -702,23 +746,26 @@ class PredictionCache:
 
     # 2: one-full-tile floor on the tile=None path + oracle-driven
     #    bmm/attention kernel selection (entries differ from schema-1 values)
-    SCHEMA = 2
+    # 3: schedule-aware parallel/training entries (spec-tagged keys, dict
+    #    values) + MoE all-to-all in the parallel op expansion
+    SCHEMA = 3
 
     def __init__(self, maxsize: int = 65536, path: Optional[str] = None):
         self.maxsize = int(maxsize)
         self.path = path
         self.hits = 0
         self.misses = 0
-        self._od: "OrderedDict[str, float]" = OrderedDict()
+        self._od: "OrderedDict[str, Union[float, dict]]" = OrderedDict()
         if path and os.path.exists(path):
             self.load(path)
 
     @staticmethod
     def make_key(model: str, device: str, dtype: Optional[str],
-                 batch: int, seq: int) -> str:
-        return f"{model}|{device}|{dtype or 'float32'}|{int(batch)}|{int(seq)}"
+                 batch: int, seq: int, spec: Optional[str] = None) -> str:
+        key = f"{model}|{device}|{dtype or 'float32'}|{int(batch)}|{int(seq)}"
+        return f"{key}|{spec}" if spec else key
 
-    def get(self, key: str) -> Optional[float]:
+    def get(self, key: str) -> Union[None, float, dict]:
         if key in self._od:
             self._od.move_to_end(key)
             self.hits += 1
@@ -726,8 +773,11 @@ class PredictionCache:
         self.misses += 1
         return None
 
-    def put(self, key: str, seconds: float):
-        self._od[key] = float(seconds)
+    def put(self, key: str, seconds: Union[float, dict]):
+        if isinstance(seconds, dict):
+            self._od[key] = {k: float(v) for k, v in seconds.items()}
+        else:
+            self._od[key] = float(seconds)
         self._od.move_to_end(key)
         while len(self._od) > self.maxsize:
             self._od.popitem(last=False)
@@ -772,8 +822,17 @@ class PredictionCache:
         if not isinstance(d, dict) or d.get("schema") != self.SCHEMA:
             return
         entries = d.get("entries", [])
+
+        def _ok(v):
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                return True
+            return (isinstance(v, dict)
+                    and all(isinstance(k, str)
+                            and isinstance(x, (int, float))
+                            and not isinstance(x, bool)
+                            for k, x in v.items()))
+
         for e in entries:
             if (isinstance(e, (list, tuple)) and len(e) == 2
-                    and isinstance(e[0], str)
-                    and isinstance(e[1], (int, float))):
+                    and isinstance(e[0], str) and _ok(e[1])):
                 self.put(e[0], e[1])

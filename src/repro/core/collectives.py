@@ -21,9 +21,11 @@ Cost formulas (n = FULL tensor bytes, p = world size, B = bus bandwidth):
     ring  all-reduce       2(p-1)·α + 2·n·(p-1)/p / B
     ring  all-gather       (p-1)·α  +   n·(p-1)/p / B      (reduce-scatter =)
     ring  broadcast        (p-1)·α  +   n / B              (pipelined)
+    ring  all-to-all       (p-1)·α  +   n·(p-1)/p / B      (pairwise exchange)
     tree  all-reduce       2·⌈log2 p⌉·(α + n/B)
     tree  all-gather       ⌈log2 p⌉·α + n·(p-1)/p / B      (recursive doubling)
     tree  broadcast        ⌈log2 p⌉·(α + n/B)
+    tree  all-to-all       ⌈log2 p⌉·(α + (n/2)/B)          (Bruck)
     p2p                    α + n/B
 
 Invariants pinned by tests/test_collectives.py: monotone in bytes and world
@@ -43,7 +45,7 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 COLLECTIVES = ("all_reduce", "all_gather", "reduce_scatter", "broadcast",
-               "p2p")
+               "all_to_all", "p2p")
 TOPOLOGIES = ("nvlink-mesh", "pcie-tree", "ethernet")
 
 _DTYPE_BYTES = {"float32": 4, "tf32": 4, "bfloat16": 2, "float16": 2,
@@ -143,7 +145,9 @@ def _ring_time(coll: str, n, p, alpha: float, B) -> np.ndarray:
     frac = np.divide(steps, p, out=np.zeros_like(p), where=p > 0)
     if coll == "all_reduce":
         return 2.0 * steps * alpha + 2.0 * n * frac / B
-    if coll in ("all_gather", "reduce_scatter"):
+    if coll in ("all_gather", "reduce_scatter", "all_to_all"):
+        # all-to-all: pairwise exchange, p-1 rounds of n/p bytes each —
+        # the same wire volume per rank as an all-gather ring
         return steps * alpha + n * frac / B
     if coll == "broadcast":
         return steps * alpha + n / B
@@ -162,6 +166,9 @@ def _tree_time(coll: str, n, p, alpha: float, B) -> np.ndarray:
         return rounds * alpha + n * frac / B
     if coll == "broadcast":
         return rounds * (alpha + n / B)
+    if coll == "all_to_all":
+        # Bruck: ⌈log2 p⌉ rounds, each moving half the local payload
+        return rounds * (alpha + 0.5 * n / B)
     if coll == "p2p":
         return np.full_like(n, alpha) + n / B
     raise ValueError(f"unknown collective {coll!r}")

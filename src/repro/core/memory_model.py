@@ -48,6 +48,7 @@ KERNEL_CLASS = {
     "silu_mul": "transcendental", "gate_sigmoid": "transcendental",
     "rope": "pointwise", "embed_gather": "pointwise", "conv1d4": "pointwise",
     "assoc_scan": "scan", "seq_scan": "scan",
+    "adamw_update": "transcendental", "sgd_update": "pointwise",
 }
 
 

@@ -1,4 +1,4 @@
-"""Op-graph extraction: ModelConfig + input shape -> the PM2Lat op list.
+"""Op-graph extraction: ModelConfig + input shape -> the PM2Lat op IR.
 
 PM2Lat aggregates per-kernel predictions assuming sequential execution
 (paper §III).  The framework owns the model definitions, so the op graph is
@@ -6,12 +6,20 @@ enumerated directly from the config: every matmul-family op with its
 (batch, M, N, K), every attention call with its geometry, every memory-bound
 op as a jit-lowerable snippet whose proxy features come from
 ``cost_analysis`` (cached by shape).
+
+Since the schedule-aware refactor the primary representation is a typed
+``OpGraph``: nodes carry an execution ``stream`` (``'compute'`` | ``'comm'``,
+pipeline builders use suffixed labels like ``'compute.s1'``) and explicit
+dependency edges, so ``core/schedule.py`` can price a model as the *makespan*
+of a two-stream list schedule instead of a sequential sum.
+``enumerate_ops`` / ``enumerate_parallel_ops`` are thin flat views over the
+graph builders — the trivial single-device path stays bit-identical.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -69,7 +77,74 @@ class MemoryOp:
         return _snippet_features(self.snippet, self.shape, self.dtype)
 
 
-Op = object  # union
+Op = Union[MatmulOp, AttentionOp, MemoryOp, CollectiveOp]
+OP_TYPES: Tuple[type, ...] = (MatmulOp, AttentionOp, MemoryOp, CollectiveOp)
+
+COMPUTE_STREAM = "compute"
+COMM_STREAM = "comm"
+
+
+def stream_of(op: Op) -> str:
+    """Default execution stream: collectives run on the comm stream,
+    everything else on the compute stream."""
+    return COMM_STREAM if isinstance(op, CollectiveOp) else COMPUTE_STREAM
+
+
+@dataclasses.dataclass
+class OpNode:
+    """One node of the schedule-aware IR: an op, the stream it executes on,
+    and the indices of the nodes that must finish before it starts."""
+    op: Op
+    stream: str = COMPUTE_STREAM
+    deps: Tuple[int, ...] = ()
+
+
+@dataclasses.dataclass
+class OpGraph:
+    """Dependency/stream-aware op IR.  Nodes are appended in topological
+    order (every dep index is smaller than the node's own index), which is
+    what ``core/schedule.py``'s list scheduler consumes directly."""
+    nodes: List[OpNode] = dataclasses.field(default_factory=list)
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    def ops(self) -> List[Op]:
+        """The flat op list, in insertion (topological) order."""
+        return [n.op for n in self.nodes]
+
+    def tail(self) -> Tuple[int, ...]:
+        """Dep tuple pointing at the last node (empty for an empty graph)."""
+        return (len(self.nodes) - 1,) if self.nodes else ()
+
+    def add(self, op: Op, stream: Optional[str] = None,
+            deps: Sequence[int] = ()) -> int:
+        """Append one node; returns its index.  ``stream`` defaults to
+        ``stream_of(op)``."""
+        deps = tuple(deps)
+        assert all(0 <= d < len(self.nodes) for d in deps), (deps, len(self))
+        self.nodes.append(OpNode(op, stream or stream_of(op), deps))
+        return len(self.nodes) - 1
+
+    def add_chain(self, ops: Sequence[Op], deps: Sequence[int] = (),
+                  compute_stream: Optional[str] = None) -> Tuple[int, ...]:
+        """Append ``ops`` serialized (each depends on the previous; the first
+        on ``deps``).  Compute ops go on ``compute_stream`` (default
+        'compute'); collectives always go on the comm stream."""
+        ids: List[int] = []
+        for op in ops:
+            stream = None if isinstance(op, CollectiveOp) else compute_stream
+            ids.append(self.add(op, stream=stream, deps=deps))
+            deps = (ids[-1],)
+        return tuple(ids)
+
+    @classmethod
+    def chain(cls, ops: Sequence[Op]) -> "OpGraph":
+        """A fully serialized graph — the classic sequential-sum op list.
+        Scheduling it reproduces ``sum(op seconds)`` bit for bit."""
+        g = cls()
+        g.add_chain(ops)
+        return g
 
 
 # ----- memory-op snippets (jit-lowerable, no allocation) -----
@@ -96,6 +171,13 @@ SNIPPETS: Dict[str, Callable] = {
     "seq_scan": lambda x: jax.lax.scan(
         lambda c, xt: (jnp.tanh(c * 0.9 + xt), None), x[:, 0], x.swapaxes(0, 1))[0],
     "gate_sigmoid": lambda x: jax.nn.sigmoid(x) * x,
+    # optimizer updates (core/schedule.py training step): single-input
+    # elementwise chains shaped like the real update math so cost_analysis
+    # sees the right flop/transcendental mix per parameter element
+    "adamw_update": lambda x: x - 0.01 * (
+        (0.9 * x + 0.1 * x) / (jnp.sqrt(0.999 * x * x + 0.001 * x * x)
+                               + 1e-8) + 0.01 * x),
+    "sgd_update": lambda x: x - 0.01 * x,
 }
 
 
@@ -115,16 +197,22 @@ def _snippet_features(snippet: str, shape: tuple, dtype: str) -> Dict[str, float
 # enumeration
 # ---------------------------------------------------------------------------
 
-def enumerate_ops(cfg: C.ModelConfig, batch: int, seq: int,
-                  dtype: Optional[str] = None) -> List[Op]:
-    """Forward-pass op list for tokens (batch, seq)."""
+def _forward_segments(cfg: C.ModelConfig, batch: int, seq: int,
+                      dtype: Optional[str] = None
+                      ) -> List[Tuple[str, List[Op]]]:
+    """Forward-pass ops for tokens (batch, seq) as labeled segments:
+    ``('head', [embed])``, one ``('group:<kind>', [...])`` per layer-kind
+    group (counts folded over the group's layers, exactly as the flat list
+    always enumerated them), optionally ``('encoder', [...])``, and
+    ``('tail', [final_norm, unembed])``.  Concatenating the segments IS the
+    historical ``enumerate_ops`` list, op for op."""
     dt = dtype or "float32"
     d, hq, hkv, hd, ff = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
                           cfg.head_dim, cfg.d_ff)
     T = batch * seq
     Vp = L.pad_vocab(cfg.vocab_size)
-    ops: List[Op] = [
-        MemoryOp("embed", "embed_gather", (Vp, d), dtype=dt),
+    segments: List[Tuple[str, List[Op]]] = [
+        ("head", [MemoryOp("embed", "embed_gather", (Vp, d), dtype=dt)]),
     ]
     kinds = cfg.layer_kinds
     from collections import Counter
@@ -193,6 +281,7 @@ def enumerate_ops(cfg: C.ModelConfig, batch: int, seq: int,
 
     # --- main stack ---
     for kind, n in sorted(kind_counts.items()):
+        ops: List[Op] = []
         if kind in (C.ATTN, C.LOCAL_ATTN):
             ops += attn_ops(n, kind, kind)
             ops += ffn_ops(n, kind)
@@ -254,24 +343,73 @@ def enumerate_ops(cfg: C.ModelConfig, batch: int, seq: int,
         elif kind == C.ENC_ATTN:
             ops += attn_ops(n, C.ENC_ATTN, "enc")
             ops += ffn_ops(n, "enc")
+        segments.append((f"group:{kind}", ops))
 
     if cfg.encoder is not None:
         Tx = batch * cfg.encoder.n_frames
         n = cfg.encoder.n_layers
-        ops += [
+        enc: List[Op] = [
             MemoryOp("enc.ln", "rmsnorm", (Tx, d), count=2 * n, dtype=dt),
             MatmulOp("enc.qkvo", m=Tx, n=d, k=d, count=4 * n, dtype=dt),
             AttentionOp("enc.attn", batch=batch, heads=hq, kv_heads=hq,
                         sq=cfg.encoder.n_frames, skv=cfg.encoder.n_frames,
                         hd=hd, causal=False, count=n, dtype=dt),
         ]
-        ops += _mlp_ops("enc.ff", n, ff)
+        enc += _mlp_ops("enc.ff", n, ff)
+        segments.append(("encoder", enc))
 
-    ops += [
+    segments.append(("tail", [
         MemoryOp("final_norm", "rmsnorm", (T, d), dtype=dt),
         MatmulOp("unembed", m=T, n=Vp, k=d, dtype=dt),
-    ]
-    return ops
+    ]))
+    return segments
+
+
+def enumerate_graph(cfg: C.ModelConfig, batch: int, seq: int,
+                    dtype: Optional[str] = None) -> OpGraph:
+    """Forward pass for tokens (batch, seq) as an ``OpGraph`` — one fully
+    serialized compute chain (the paper's sequential-aggregation model)."""
+    g = OpGraph()
+    for _, seg in _forward_segments(cfg, batch, seq, dtype=dtype):
+        g.add_chain(seg, deps=g.tail())
+    return g
+
+
+def enumerate_ops(cfg: C.ModelConfig, batch: int, seq: int,
+                  dtype: Optional[str] = None) -> List[Op]:
+    """Forward-pass op list for tokens (batch, seq) — the flat view over
+    ``enumerate_graph`` (same ops, same order)."""
+    return enumerate_graph(cfg, batch, seq, dtype=dtype).ops()
+
+
+def layer_segments(cfg: C.ModelConfig, batch: int, seq: int,
+                   dtype: Optional[str] = None
+                   ) -> Tuple[List[Op], List[List[Op]], List[Op]]:
+    """Per-LAYER forward segmentation for pipeline staging:
+    ``(head_ops, [ops per layer in positional order], tail_ops)``.
+
+    The flat enumeration folds repetition counts over each layer-kind group;
+    pipeline schedules need positional per-layer granularity instead, so each
+    layer is re-enumerated as a single-layer config (the same move
+    ``predict_blocks`` makes).  ``head`` carries the embedding plus the whole
+    encoder stack (it runs before stage 0 of the decoder pipeline), ``tail``
+    the final norm + unembed.  Costs match the folded enumeration exactly up
+    to float association (count folding multiplies, per-layer splitting
+    sums)."""
+    segs = dict(_forward_segments(cfg, batch, seq, dtype=dtype))
+    head = list(segs["head"]) + list(segs.get("encoder", []))
+    tail = list(segs["tail"])
+    ctx = cfg.cross_attn_context_len or (
+        cfg.encoder.n_frames if cfg.encoder else 0)
+    per_layer: List[List[Op]] = []
+    for kind in cfg.layer_kinds:
+        one = dataclasses.replace(cfg, n_layers=1, block_pattern=(kind,),
+                                  encoder=None, cross_attn_context_len=ctx)
+        ops = [op for label, seg in _forward_segments(one, batch, seq,
+                                                      dtype=dtype)
+               if label.startswith("group:") for op in seg]
+        per_layer.append(ops)
+    return head, per_layer, tail
 
 
 def total_flops(ops: List[Op]) -> float:
@@ -295,17 +433,27 @@ class ParallelismSpec:
     """(dp, tp, pp) degrees + activation-sharding mode at block boundaries
     ('tp' = Megatron tensor parallel, hidden states replicated over the tp
     axis; 'sp' = Megatron sequence parallel, hidden states sharded over
-    sequence — all-reduces become reduce-scatter + all-gather pairs)."""
+    sequence — all-reduces become reduce-scatter + all-gather pairs).
+
+    ``microbatches`` splits one rank's batch into that many sequential
+    chunks: under ``pp > 1`` the chunks pipeline across stages (the bubble
+    emerges from the schedule in ``core/schedule.py``); under ``pp == 1``
+    they model gradient-accumulation-style chunked execution.  The flat
+    ``enumerate_parallel_ops`` view ignores it — only the schedule builders
+    and cache keys see it."""
     dp: int = 1
     tp: int = 1
     pp: int = 1
     act_mode: str = "tp"          # 'tp' | 'sp', as distributed/sharding.py
+    microbatches: int = 1
 
     def __post_init__(self):
         if min(self.dp, self.tp, self.pp) < 1:
             raise ValueError(f"parallel degrees must be >= 1: {self}")
         if self.act_mode not in ("tp", "sp"):
             raise ValueError(f"act_mode must be 'tp' or 'sp': {self.act_mode!r}")
+        if self.microbatches < 1:
+            raise ValueError(f"microbatches must be >= 1: {self.microbatches}")
 
     @property
     def world(self) -> int:
@@ -316,8 +464,13 @@ class ParallelismSpec:
         return self.world == 1
 
     def tag(self) -> str:
-        """Stable fingerprint for cache keys / report rows."""
-        return f"dp{self.dp}.tp{self.tp}.pp{self.pp}.{self.act_mode}"
+        """Stable fingerprint for cache keys / report rows.  The microbatch
+        degree is appended only when non-default, so pre-schedule tags (and
+        everything keyed on them) are unchanged."""
+        base = f"dp{self.dp}.tp{self.tp}.pp{self.pp}.{self.act_mode}"
+        if self.microbatches != 1:
+            base += f".mb{self.microbatches}"
+        return base
 
 
 def _ceil_div(x: int, t: int) -> int:
@@ -417,11 +570,63 @@ def _row_parallel_per_layer(cfg: C.ModelConfig, kind: str) -> int:
     return 0
 
 
+# Layer kinds whose blocks carry an FFN (``ffn_ops`` in the enumeration) —
+# under MoE these are the layers that route tokens through experts.
+_FFN_KINDS = (C.ATTN, C.LOCAL_ATTN, C.CROSS_ATTN, C.RGLRU, C.ENC_ATTN)
+
+
+def moe_routed_bytes(cfg: C.ModelConfig, batch: int, seq: int,
+                     dt: str) -> float:
+    """Full (unsharded) payload of ONE MoE layer's dispatch (== combine)
+    all-to-all: the routed ``(G, E·cap, d_model)`` activation, with the same
+    capacity floor the expert bmms use — so the modeled wire volume is
+    capacity-factor-dependent exactly like the compute."""
+    m = cfg.moe
+    T = batch * seq
+    G = batch
+    Sg = T // G
+    cap = max(int(m.capacity_factor * Sg * m.top_k / m.num_experts),
+              m.top_k, 4)
+    return float(G * m.num_experts * cap * cfg.d_model * dtype_bytes(dt))
+
+
+def _moe_all_to_all(cfg: C.ModelConfig, batch: int, seq: int, tp: int,
+                    dt: str, count: int = 1) -> List[Op]:
+    """Dispatch + combine token-routing all-to-alls for ``count`` MoE
+    layers (experts are sharded over the tp axis, as ``_shard_matmul``)."""
+    routed = moe_routed_bytes(cfg, batch, seq, dt)
+    return [
+        CollectiveOp("moe.dispatch.all_to_all", "all_to_all", routed, tp,
+                     count=count, dtype=dt),
+        CollectiveOp("moe.combine.all_to_all", "all_to_all", routed, tp,
+                     count=count, dtype=dt),
+    ]
+
+
+def tp_boundary_reductions(name: str, nbytes: float, spec: ParallelismSpec,
+                           dt: str, count: int = 1) -> List[Op]:
+    """The collective(s) one partial-sum boundary induces under ``spec``'s
+    act mode: a single all-reduce in Megatron-TP, a reduce-scatter +
+    all-gather pair of the same bytes in sequence-parallel mode.  The ONE
+    implementation of that dispatch — both the flat expansion below and
+    ``core/schedule.py``'s per-layer pipeline stages emit through it, so
+    the two paths cannot desynchronize."""
+    if count <= 0 or spec.tp <= 1:
+        return []
+    if spec.act_mode == "sp":
+        return [CollectiveOp(f"{name}.reduce_scatter", "reduce_scatter",
+                             nbytes, spec.tp, count=count, dtype=dt),
+                CollectiveOp(f"{name}.all_gather", "all_gather",
+                             nbytes, spec.tp, count=count, dtype=dt)]
+    return [CollectiveOp(f"{name}.all_reduce", "all_reduce", nbytes,
+                         spec.tp, count=count, dtype=dt)]
+
+
 def _induced_collectives(cfg: C.ModelConfig, batch: int, seq: int,
                          spec: ParallelismSpec, dt: str) -> List[Op]:
     """The CollectiveOps one rank issues during a forward pass under
     ``spec``.  Data parallelism induces none (gradient all-reduce is a
-    training-step concern — see ROADMAP open items)."""
+    training-step concern — ``core/schedule.py``'s training graph)."""
     out: List[Op] = []
     esz = dtype_bytes(dt)
     T = batch * seq
@@ -429,16 +634,8 @@ def _induced_collectives(cfg: C.ModelConfig, batch: int, seq: int,
     tp, pp = spec.tp, spec.pp
 
     def emit(name: str, nbytes: float, n_ops: int):
-        if n_ops <= 0:
-            return
-        if spec.act_mode == "sp":
-            out.append(CollectiveOp(f"{name}.reduce_scatter", "reduce_scatter",
-                                    nbytes, tp, count=n_ops, dtype=dt))
-            out.append(CollectiveOp(f"{name}.all_gather", "all_gather",
-                                    nbytes, tp, count=n_ops, dtype=dt))
-        else:
-            out.append(CollectiveOp(f"{name}.all_reduce", "all_reduce",
-                                    nbytes, tp, count=n_ops, dtype=dt))
+        out.extend(tp_boundary_reductions(name, nbytes, spec, dt,
+                                          count=n_ops))
 
     if tp > 1:
         from collections import Counter
@@ -455,6 +652,12 @@ def _induced_collectives(cfg: C.ModelConfig, batch: int, seq: int,
         Vp = L.pad_vocab(cfg.vocab_size)
         out.append(CollectiveOp("unembed.tp.all_gather", "all_gather",
                                 float(T * Vp * esz), tp, dtype=dt))
+        # MoE: expert parallelism over the tp axis routes tokens through
+        # dispatch/combine all-to-alls (capacity-factor-dependent payload)
+        if cfg.moe is not None:
+            n_moe = sum(1 for k in cfg.layer_kinds if k in _FFN_KINDS)
+            if n_moe:
+                out += _moe_all_to_all(cfg, batch, seq, tp, dt, count=n_moe)
     if pp > 1:
         # single-microbatch pipeline: stage hand-offs are sequential p2p
         # sends of the (T, d) activation (overlap: ROADMAP open item)

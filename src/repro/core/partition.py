@@ -17,10 +17,46 @@ class PartitionPlan:
     boundaries: List[int]        # stage i = blocks [boundaries[i], boundaries[i+1])
     stage_times: List[float]
     bottleneck: float
+    # schedule-aware cost (filled by the *_model planners): the end-to-end
+    # makespan of the planned stages run as a micro-batched pipeline
+    # (core/schedule.py list schedule), and the microbatch count it assumed.
+    makespan: Optional[float] = None
+    microbatches: int = 1
 
     @property
     def split_point(self) -> int:  # two-device convenience
         return self.boundaries[1]
+
+
+def _attach_makespan(plan: "PartitionPlan", pure_stage_times: List[float],
+                     mb_handoff: float, microbatches: int
+                     ) -> "PartitionPlan":
+    """Price the planned stages as a micro-batched pipeline schedule
+    (stage cost = scheduled makespan, not an annotated sum): per-microbatch
+    stage cost is ``stage/mb``, ``mb_handoff`` is the per-microbatch
+    hand-off riding the per-link comm streams."""
+    from repro.core.schedule import pipeline_stage_schedule
+    sched = pipeline_stage_schedule(pure_stage_times, mb_handoff,
+                                    microbatches=microbatches)
+    plan.makespan = sched.makespan
+    plan.microbatches = int(microbatches)
+    return plan
+
+
+def _mb_handoff(cfg, batch: int, seq: int, microbatches: int, *,
+                derived: bool, comm_cost: float, dtype, device_a,
+                device_b) -> float:
+    """The per-microbatch stage hand-off: when the full-batch cost was
+    DERIVED from the α–β model, re-price it at the microbatch batch
+    ``⌈batch/mb⌉`` (the α latency term is paid per transfer); an explicit
+    scalar override is opaque, so it is split evenly across microbatches."""
+    mb = max(int(microbatches), 1)
+    if mb == 1:
+        return comm_cost
+    if derived:
+        return activation_comm_cost(cfg, -(-batch // mb), seq, dtype=dtype,
+                                    device_a=device_a, device_b=device_b)
+    return comm_cost / mb
 
 
 def plan_two_devices(lat_a: Sequence[float], lat_b: Sequence[float],
@@ -120,7 +156,8 @@ def plan_two_devices_model(predictor, cfg, batch: int, seq: int, *,
                            comm_cost: Optional[float] = None,
                            dtype: Optional[str] = None,
                            device_a: Optional[str] = None,
-                           device_b: Optional[str] = None
+                           device_b: Optional[str] = None,
+                           microbatches: int = 1
                            ) -> Tuple[PartitionPlan, List[float]]:
     """Two-device split for a model config: per-block latencies come from a
     single batched predictor pass per device (``BatchPredictor.predict_blocks``
@@ -131,31 +168,51 @@ def plan_two_devices_model(predictor, cfg, batch: int, seq: int, *,
     PREDICTED activation-transfer time between the two devices
     (``activation_comm_cost``); pass an explicit scalar (e.g. a measured
     value, or 0.0 for the legacy compute-only plan) to override.
+    ``microbatches`` prices the plan as a micro-batched pipeline schedule
+    (``plan.makespan``) on top of the bottleneck objective.
     Returns (plan, blocks_a)."""
     blocks = _blocks_on(predictor, cfg, batch, seq, dtype, device_a)
     if device_b is not None:
         blocks_b = _blocks_on(predictor, cfg, batch, seq, dtype, device_b)
     else:
         blocks_b = [t * b_speed for t in blocks]
-    if comm_cost is None:
+    derived = comm_cost is None
+    if derived:
         comm_cost = activation_comm_cost(cfg, batch, seq, dtype=dtype,
                                          device_a=device_a, device_b=device_b)
     plan = plan_two_devices(blocks, blocks_b, comm_cost)
-    return plan, blocks
+    s = plan.split_point
+    pure = [sum(blocks[:s]), sum(blocks_b[s:])]
+    handoff = _mb_handoff(cfg, batch, seq, microbatches, derived=derived,
+                          comm_cost=comm_cost, dtype=dtype,
+                          device_a=device_a, device_b=device_b)
+    return _attach_makespan(plan, pure, handoff, microbatches), blocks
 
 
 def plan_stages_model(predictor, cfg, batch: int, seq: int, n_stages: int, *,
                       comm_cost: Optional[float] = None,
                       dtype: Optional[str] = None,
-                      device: Optional[str] = None
+                      device: Optional[str] = None,
+                      microbatches: int = 1
                       ) -> Tuple[PartitionPlan, List[float]]:
     """N-stage contiguous min-max partition from one batched prediction,
     optionally planned for a named fleet device.  Every stage after the
     first is charged one activation hand-off — ``comm_cost`` defaults to
     the predicted p2p transfer time on the device's own interconnect
-    (homogeneous stages); an explicit scalar overrides it."""
+    (homogeneous stages); an explicit scalar overrides it.  The returned
+    plan additionally carries the SCHEDULED end-to-end cost
+    (``plan.makespan``): the planned stages run as a ``microbatches``-deep
+    pipeline through ``core/schedule.py`` — minimizing the bottleneck also
+    minimizes the steady-state makespan term ``(mb-1)·bottleneck``."""
     blocks = _blocks_on(predictor, cfg, batch, seq, dtype, device)
-    if comm_cost is None:
+    derived = comm_cost is None
+    if derived:
         comm_cost = activation_comm_cost(cfg, batch, seq, dtype=dtype,
                                          device_a=device, device_b=device)
-    return plan_stages(blocks, n_stages, comm_cost), blocks
+    plan = plan_stages(blocks, n_stages, comm_cost)
+    pure = [sum(blocks[a:b])
+            for a, b in zip(plan.boundaries, plan.boundaries[1:])]
+    handoff = _mb_handoff(cfg, batch, seq, microbatches, derived=derived,
+                          comm_cost=comm_cost, dtype=dtype,
+                          device_a=device, device_b=device)
+    return _attach_makespan(plan, pure, handoff, microbatches), blocks

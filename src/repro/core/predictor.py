@@ -108,11 +108,40 @@ class PM2Lat:
     def predict_parallel(self, cfg: C.ModelConfig, batch: int, seq: int,
                          spec: "og.ParallelismSpec",
                          dtype: Optional[str] = None):
-        """One-rank end-to-end prediction under a ``ParallelismSpec``:
-        sharded compute ops + induced collectives (a trivial spec is the
-        plain ``predict_model`` path, op for op)."""
-        ops = og.enumerate_parallel_ops(cfg, batch, seq, spec, dtype=dtype)
-        return self.predict_ops(ops)
+        """Schedule-aware end-to-end prediction under a ``ParallelismSpec``:
+        the makespan of the two-stream list schedule (``core/schedule.py``)
+        over the sharded compute ops + induced collectives.  With
+        ``microbatches == 1`` the schedule is a serialized chain, so the
+        answer is bit-identical to the historical sequential sum (and a
+        trivial spec is the plain ``predict_model`` path, op for op)."""
+        sched = self.schedule_parallel(cfg, batch, seq, spec, dtype=dtype)
+        return sched.makespan, sched.rows
+
+    def schedule_parallel(self, cfg: C.ModelConfig, batch: int, seq: int,
+                          spec: "og.ParallelismSpec",
+                          dtype: Optional[str] = None):
+        """The full ``Schedule`` (timeline + busy/exposed splits) behind
+        ``predict_parallel``."""
+        from repro.core import schedule as S
+        return S.schedule_parallel(self, cfg, batch, seq, spec, dtype=dtype)
+
+    def predict_step(self, cfg: C.ModelConfig, batch: int, seq: int,
+                     spec: "og.ParallelismSpec" = None, train=None,
+                     dtype: Optional[str] = None):
+        """One TRAINING step (fwd + bwd + gradient comm + optimizer update)
+        under a ``ParallelismSpec`` + ``schedule.TrainingStepSpec``, priced
+        as the schedule makespan."""
+        sched = self.schedule_step(cfg, batch, seq, spec=spec, train=train,
+                                   dtype=dtype)
+        return sched.makespan, sched.rows
+
+    def schedule_step(self, cfg: C.ModelConfig, batch: int, seq: int,
+                      spec: "og.ParallelismSpec" = None, train=None,
+                      dtype: Optional[str] = None):
+        """The full training-step ``Schedule`` behind ``predict_step``."""
+        from repro.core import schedule as S
+        return S.schedule_step(self, cfg, batch, seq, spec=spec, train=train,
+                               dtype=dtype)
 
     def predict_blocks(self, cfg: C.ModelConfig, batch: int, seq: int,
                        dtype: Optional[str] = None) -> List[float]:

@@ -1,0 +1,526 @@
+"""Two-stream list-schedule simulator: price an ``OpGraph`` as *makespan*.
+
+PM2Lat (paper §III) aggregates per-kernel predictions sequentially; that is
+exact for a single device but wrong whenever compute and communication (or
+two pipeline stages) overlap.  This module prices the dependency/stream-
+aware ``OpGraph`` IR (``core/opgraph.py``) with a deterministic list
+schedule instead of a sum:
+
+* each node runs on a named stream (``'compute'``, ``'comm'``, per-stage
+  ``'compute.s<i>'``, per-link ``'comm.pp<i>'``, ...);
+* a node starts at ``max(stream available, all dependencies finished)``;
+* the makespan is the last finish time.
+
+Three schedule families are built here:
+
+1. **Micro-batched pipeline** (``ParallelismSpec.microbatches`` under
+   ``pp > 1``) — per-stage, per-microbatch op segments with p2p activation
+   hand-offs; the classic ``(pp-1)/(pp+mb-1)`` GPipe bubble *emerges* from
+   the schedule rather than being a closed-form correction.
+2. **Bucketed gradient all-reduce** — a ``TrainingStepSpec`` prices one
+   optimizer step: forward + backward (≈ ``bwd_fwd_ratio`` × forward
+   compute, collectives mirrored at 1×), with the data-parallel gradient
+   all-reduce split into DDP-style buckets that overlap the tail of
+   backward on the comm stream, and the optimizer update priced by the
+   memory model.
+3. **Stage-level pipeline** (``pipeline_stage_schedule``) — the partition
+   planners' objective: already-priced stage times scheduled as a
+   micro-batched pipeline.
+
+Two invariants hold *by construction* and are pinned by
+``tests/test_schedule.py``: a fully serialized graph's makespan is
+bit-identical to the sequential sum (the list scheduler performs the same
+float additions in the same order), and for every graph
+``max(per-stream busy time) <= makespan <= sum of all durations``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs import base as C
+from repro.core import opgraph as og
+from repro.core.collectives import CollectiveOp, dtype_bytes
+from repro.core.predictor import PredictionRow
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainingStepSpec:
+    """What one optimizer step looks like, beyond the forward pass.
+
+    ``bucket_mb`` is the DDP-style gradient-bucket size (MiB): the
+    data-parallel all-reduce is issued per bucket as backward produces the
+    corresponding gradients, so small buckets overlap more (and pay more
+    latency terms).  ``bwd_fwd_ratio`` is the standard backward/forward
+    compute ratio (2×: grads w.r.t. inputs and weights)."""
+    optimizer: str = "adamw"        # 'adamw' | 'sgd'
+    bucket_mb: float = 25.0         # gradient all-reduce bucket size (MiB)
+    bwd_fwd_ratio: float = 2.0
+
+    def __post_init__(self):
+        if self.optimizer not in ("adamw", "sgd"):
+            raise ValueError(f"unknown optimizer {self.optimizer!r}; "
+                             "expected 'adamw' or 'sgd'")
+        if self.bucket_mb <= 0 or self.bwd_fwd_ratio <= 0:
+            raise ValueError(f"invalid TrainingStepSpec: {self}")
+
+    def tag(self) -> str:
+        """Stable fingerprint for cache keys / report rows.  The backward
+        ratio is appended only when non-default, keeping common tags
+        short."""
+        base = f"{self.optimizer}.bkt{self.bucket_mb:g}"
+        if self.bwd_fwd_ratio != 2.0:
+            base += f".bwd{self.bwd_fwd_ratio:g}"
+        return base
+
+
+# Optimizer-update traffic multiplier: the jit-lowered snippet fuses to one
+# read + one write of the parameter tensor, while a real update streams
+# param+grad+moments in and param+moments out (~3x that for AdamW).
+_OPT_SNIPPET = {"adamw": ("adamw_update", 3), "sgd": ("sgd_update", 1)}
+
+
+# ---------------------------------------------------------------------------
+# the simulator
+# ---------------------------------------------------------------------------
+
+def simulate(durations: Sequence[float], streams: Sequence[str],
+             deps: Sequence[Tuple[int, ...]]
+             ) -> Tuple[np.ndarray, np.ndarray, float]:
+    """Deterministic list schedule over named streams.
+
+    Nodes must be in topological order (dep indices < own index — what the
+    ``OpGraph`` builders guarantee).  Returns ``(starts, ends, makespan)``.
+    A fully serialized chain accumulates exactly like ``sum(durations)``
+    (same additions, same order), so the no-overlap path is bit-identical
+    to the sequential aggregation it replaces.
+    """
+    n = len(durations)
+    starts = np.zeros(n)
+    ends = np.zeros(n)
+    avail: Dict[str, float] = {}
+    for i in range(n):
+        t = avail.get(streams[i], 0.0)
+        for d in deps[i]:
+            if ends[d] > t:
+                t = ends[d]
+        starts[i] = t
+        ends[i] = t + durations[i]
+        avail[streams[i]] = float(ends[i])
+    makespan = float(ends.max()) if n else 0.0
+    return starts, ends, makespan
+
+
+@dataclasses.dataclass
+class Schedule:
+    """A priced, simulated ``OpGraph``: per-node rows (same order as the
+    graph) plus the stream timeline the list scheduler produced."""
+    rows: List[PredictionRow]
+    streams: List[str]
+    starts: np.ndarray
+    ends: np.ndarray
+    makespan: float
+
+    @property
+    def sequential_seconds(self) -> float:
+        """What the pre-schedule sequential aggregation would report."""
+        return sum(r.seconds for r in self.rows)
+
+    @property
+    def comm_seconds(self) -> float:
+        """Total communication work (sum over collective rows — busy time,
+        not necessarily on the critical path)."""
+        return sum(r.seconds for r in self.rows if r.kind == "collective")
+
+    @property
+    def compute_seconds(self) -> float:
+        """Total compute work (sum over non-collective rows)."""
+        return sum(r.seconds for r in self.rows if r.kind != "collective")
+
+    @property
+    def exposed_comm_seconds(self) -> float:
+        """Communication (and bubble) time NOT hidden behind compute:
+        ``makespan - compute_seconds``, floored at 0 (a multi-stage pipeline
+        has more total compute than critical path)."""
+        return max(self.makespan - self.compute_seconds, 0.0)
+
+    def busy(self) -> Dict[str, float]:
+        """Busy seconds per stream."""
+        out: Dict[str, float] = {}
+        for r, s in zip(self.rows, self.streams):
+            out[s] = out.get(s, 0.0) + r.seconds
+        return out
+
+    @property
+    def bubble_share(self) -> float:
+        """Idle fraction of the compute executors:
+        ``1 - total compute busy / (n_compute_streams · makespan)``.
+        For a balanced micro-batched pipeline this is the classic
+        ``(pp-1)/(pp+mb-1)`` GPipe bubble — emerging from the schedule, not
+        a formula — and it shrinks monotonically as microbatches grow even
+        when smaller per-chunk shapes make the absolute makespan worse
+        (fixed per-op overheads).  Only the per-stage ``compute.s<i>``
+        executors count when present — the bare ``compute`` stream (e.g.
+        the optimizer node in training schedules) is not a pipeline
+        stage."""
+        busy = self.busy()
+        comp = {s: b for s, b in busy.items() if s.startswith("compute.s")}
+        if not comp:
+            comp = {s: b for s, b in busy.items()
+                    if s.startswith(og.COMPUTE_STREAM)}
+        if not comp or self.makespan <= 0:
+            return 0.0
+        return max(1.0 - sum(comp.values())
+                   / (len(comp) * self.makespan), 0.0)
+
+    def bounds_ok(self, rel: float = 1e-9) -> bool:
+        """The acceptance invariant: busiest stream <= makespan <= the
+        sequential sum (up to float accumulation noise)."""
+        hi = self.sequential_seconds
+        lo = max(self.busy().values()) if self.rows else 0.0
+        return (lo <= self.makespan * (1 + rel)
+                and self.makespan <= hi * (1 + rel))
+
+
+def schedule_graph(predictor, graph: og.OpGraph) -> Schedule:
+    """Price every node through ``predictor`` (scalar ``PM2Lat`` or the
+    vectorized ``BatchPredictor`` — both expose ``predict_ops``) and
+    simulate the two-stream list schedule."""
+    _, rows = predictor.predict_ops(graph.ops())
+    streams = [n.stream for n in graph.nodes]
+    deps = [n.deps for n in graph.nodes]
+    starts, ends, makespan = simulate([r.seconds for r in rows],
+                                      streams, deps)
+    return Schedule(rows, streams, starts, ends, makespan)
+
+
+# ---------------------------------------------------------------------------
+# graph builders: forward (parallel) schedules
+# ---------------------------------------------------------------------------
+
+_ceil_div = og._ceil_div
+
+
+def _stage_ops(cfg: C.ModelConfig, bmb: int, seq: int,
+               spec: og.ParallelismSpec, dt: str
+               ) -> Tuple[List[List[og.Op]], float]:
+    """One microbatch's ops per pipeline stage (tp-sharded, per-layer tp
+    collectives inline), plus the stage-boundary activation payload.
+
+    Layers split contiguously and near-evenly over ``pp`` stages; the
+    embedding (+ encoder) lands on stage 0, final norm + unembed on the
+    last stage, with their vocab-parallel collectives."""
+    head, per_layer, tail = og.layer_segments(cfg, bmb, seq, dtype=dt)
+    shard = lambda ops: [og._shard_op(o, spec) for o in ops]
+    esz = dtype_bytes(dt)
+    T = bmb * seq
+    hid_bytes = float(T * cfg.d_model * esz)
+    pp, tp = spec.pp, spec.tp
+    n_layers = len(per_layer)
+    bounds = [round(i * n_layers / pp) for i in range(pp + 1)]
+    stages: List[List[og.Op]] = []
+    for s in range(pp):
+        ops: List[og.Op] = []
+        if s == 0:
+            ops += shard(head)
+            if tp > 1:
+                ops.append(CollectiveOp("embed.tp.all_reduce", "all_reduce",
+                                        hid_bytes, tp, dtype=dt))
+                if cfg.encoder is not None:
+                    enc_bytes = float(bmb * cfg.encoder.n_frames
+                                      * cfg.d_model * esz)
+                    ops += og.tp_boundary_reductions(
+                        "enc.tp", enc_bytes, spec, dt,
+                        count=2 * cfg.encoder.n_layers)
+        for li in range(bounds[s], bounds[s + 1]):
+            kind = cfg.layer_kinds[li]
+            ops += shard(per_layer[li])
+            ops += og.tp_boundary_reductions(
+                f"{kind}.tp", hid_bytes, spec, dt,
+                count=og._row_parallel_per_layer(cfg, kind))
+            if tp > 1 and cfg.moe is not None and kind in og._FFN_KINDS:
+                ops += og._moe_all_to_all(cfg, bmb, seq, tp, dt)
+        if s == pp - 1:
+            ops += shard(tail)
+            if tp > 1:
+                Vp = L.pad_vocab(cfg.vocab_size)
+                ops.append(CollectiveOp("unembed.tp.all_gather", "all_gather",
+                                        float(T * Vp * esz), tp, dtype=dt))
+        stages.append(ops)
+    return stages, hid_bytes
+
+
+def _wire_pipeline_grid(pp: int, mb: int, add_stage, add_p2p,
+                        last_in_stage: List[Optional[int]],
+                        reverse: bool = False) -> None:
+    """THE (stage × microbatch) dependency wiring, shared by the op-level
+    grids and the planners' stage-level scheduler: stage ``s`` of
+    microbatch ``m`` depends on stage ``s`` of microbatch ``m-1`` (same
+    executor, serialized by its stream) and on the p2p hand-off from the
+    upstream stage of the same microbatch.  ``add_stage(m, s, deps)``
+    appends one stage node-chain and returns its last id (or None for an
+    empty stage); ``add_p2p(m, s, link, dep)`` appends one hand-off and
+    returns its id.  ``reverse`` flows stage-last-to-first (the backward
+    pass); ``last_in_stage`` is read and updated in place so successive
+    grids chain."""
+    order = range(pp - 1, -1, -1) if reverse else range(pp)
+    first = order[0]
+    for m in range(mb):
+        prev_last: Optional[int] = None
+        for s in order:
+            deps: List[int] = []
+            if s != first and prev_last is not None:
+                link = s if not reverse else s + 1
+                deps.append(add_p2p(m, s, link, prev_last))
+            if last_in_stage[s] is not None:
+                deps.append(last_in_stage[s])
+            nid = add_stage(m, s, tuple(deps))
+            prev_last = nid if nid is not None else (deps[0] if deps
+                                                     else None)
+            last_in_stage[s] = prev_last
+
+
+def _add_pipeline_grid(g: og.OpGraph, stage_ops: Sequence[Sequence[og.Op]],
+                       hid_bytes: float, mb: int, dt: str,
+                       last_in_stage: List[Optional[int]], *,
+                       reverse: bool = False,
+                       p2p_prefix: str = "pp.act_p2p") -> None:
+    """Append a (stage × microbatch) op grid over the shared wiring, with
+    p2p hand-offs of the per-microbatch activation on per-link
+    ``comm.pp<link>`` streams."""
+
+    def add_stage(m, s, deps):
+        ids = g.add_chain(stage_ops[s], deps=deps,
+                          compute_stream=f"compute.s{s}")
+        return ids[-1] if ids else None
+
+    def add_p2p(m, s, link, dep):
+        return g.add(CollectiveOp(f"{p2p_prefix}.s{s}", "p2p", hid_bytes,
+                                  2, dtype=dt),
+                     stream=f"comm.pp{link}", deps=(dep,))
+
+    _wire_pipeline_grid(len(stage_ops), mb, add_stage, add_p2p,
+                        last_in_stage, reverse=reverse)
+
+
+def _pipeline_graph(cfg: C.ModelConfig, batch: int, seq: int,
+                    spec: og.ParallelismSpec,
+                    dtype: Optional[str]) -> og.OpGraph:
+    """The micro-batched pipeline schedule as a (stage × microbatch)
+    grid.  Stage ops and the p2p activation payload are enumerated at the
+    per-microbatch batch, so hand-off bytes scale down with ``mb``."""
+    dt = dtype or "float32"
+    mb, pp = spec.microbatches, spec.pp
+    bsh = _ceil_div(batch, spec.dp)
+    bmb = _ceil_div(bsh, mb)
+    stages, hid_bytes = _stage_ops(cfg, bmb, seq, spec, dt)
+    g = og.OpGraph()
+    last_in_stage: List[Optional[int]] = [None] * pp
+    _add_pipeline_grid(g, stages, hid_bytes, mb, dt, last_in_stage)
+    return g
+
+
+def build_parallel_graph(cfg: C.ModelConfig, batch: int, seq: int,
+                         spec: og.ParallelismSpec,
+                         dtype: Optional[str] = None) -> og.OpGraph:
+    """The forward-pass schedule under ``spec``.
+
+    * ``microbatches == 1`` — the flat one-rank op list
+      (``opgraph.enumerate_parallel_ops``) as a serialized chain: scheduling
+      it reproduces the historical sequential sum bit for bit (tp
+      collectives are blocking — the next op consumes their output).
+    * ``microbatches > 1, pp > 1`` — the pipeline grid (bubble emerges).
+    * ``microbatches > 1, pp == 1`` — sequential chunked execution
+      (gradient-accumulation-style forward).
+    """
+    if spec.microbatches == 1:
+        return og.OpGraph.chain(
+            og.enumerate_parallel_ops(cfg, batch, seq, spec, dtype=dtype))
+    if spec.pp > 1:
+        return _pipeline_graph(cfg, batch, seq, spec, dtype)
+    bsh = _ceil_div(batch, spec.dp)
+    bmb = _ceil_div(bsh, spec.microbatches)
+    chunk_spec = dataclasses.replace(spec, microbatches=1)
+    chunk = og.enumerate_parallel_ops(cfg, bmb * spec.dp, seq, chunk_spec,
+                                      dtype=dtype)
+    g = og.OpGraph()
+    for _ in range(spec.microbatches):
+        g.add_chain(chunk, deps=g.tail())
+    return g
+
+
+# ---------------------------------------------------------------------------
+# graph builders: training step
+# ---------------------------------------------------------------------------
+
+def _backward_ops(fwd_ops: Sequence[og.Op], ratio: float) -> List[og.Op]:
+    """Backward ops mirrored in reverse order: compute at ``ratio``× the
+    forward count (grads w.r.t. inputs and weights), collectives at 1×
+    (Megatron's conjugate f/g pairs recur once in backward)."""
+    out: List[og.Op] = []
+    for op in reversed(list(fwd_ops)):
+        if isinstance(op, CollectiveOp):
+            out.append(dataclasses.replace(op, name=f"bwd.{op.name}"))
+        else:
+            out.append(dataclasses.replace(op, name=f"bwd.{op.name}",
+                                           count=op.count * ratio))
+    return out
+
+
+def _grad_buckets(g: og.OpGraph, bwd_ids: Sequence[int], grad_bytes: float,
+                  bucket_bytes: float, dp: int, dt: str) -> List[int]:
+    """Append the bucketed data-parallel gradient all-reduce: bucket ``i``
+    becomes ready once the first ``(i+1)/n`` of the (reverse-order) backward
+    nodes finish — DDP's reverse-registration bucketing, anchored
+    structurally so the overlap emerges from the schedule."""
+    n_buckets = max(int(math.ceil(grad_bytes / bucket_bytes)), 1)
+    ids: List[int] = []
+    nb = len(bwd_ids)
+    for i in range(n_buckets):
+        nbytes = min(bucket_bytes, grad_bytes - i * bucket_bytes)
+        anchor = bwd_ids[min(nb - 1, _ceil_div((i + 1) * nb, n_buckets) - 1)]
+        ids.append(g.add(
+            CollectiveOp(f"grad.bucket{i}.all_reduce", "all_reduce",
+                         float(nbytes), dp, dtype=dt),
+            deps=(anchor,)))
+    return ids
+
+
+def _optimizer_op(cfg: C.ModelConfig, spec: og.ParallelismSpec,
+                  train: TrainingStepSpec) -> og.Op:
+    """The optimizer update as a ``MemoryOp`` priced by the memory model:
+    an elementwise snippet over this rank's parameter shard (params are
+    sharded by tp and, across pipeline stages, by pp), with a traffic
+    multiplier for the optimizer-state streams the fused snippet hides."""
+    snippet, traffic = _OPT_SNIPPET[train.optimizer]
+    shard = _ceil_div(cfg.param_count(), spec.tp * spec.pp)
+    return og.MemoryOp("opt.update", snippet, (shard,), count=traffic,
+                       dtype="float32")
+
+
+def build_training_graph(cfg: C.ModelConfig, batch: int, seq: int,
+                         spec: Optional[og.ParallelismSpec] = None,
+                         train: Optional[TrainingStepSpec] = None,
+                         dtype: Optional[str] = None) -> og.OpGraph:
+    """One optimizer step as an ``OpGraph``: forward + backward (pipelined
+    per microbatch under ``pp > 1``, GPipe-style flush), the bucketed
+    data-parallel gradient all-reduce overlapping the last microbatch's
+    backward, and the optimizer update."""
+    spec = spec or og.ParallelismSpec()
+    train = train or TrainingStepSpec()
+    dt = dtype or "float32"
+    mb, pp, dp = spec.microbatches, spec.pp, spec.dp
+    bsh = _ceil_div(batch, dp)
+    bmb = _ceil_div(bsh, mb)
+    g = og.OpGraph()
+    last_bwd_ids: List[int] = []
+
+    if pp == 1:
+        chunk_spec = dataclasses.replace(spec, microbatches=1)
+        fwd = og.enumerate_parallel_ops(cfg, bmb * dp, seq, chunk_spec,
+                                        dtype=dt)
+        bwd = _backward_ops(fwd, train.bwd_fwd_ratio)
+        for m in range(mb):
+            g.add_chain(fwd, deps=g.tail())
+            ids = g.add_chain(bwd, deps=g.tail())
+            if m == mb - 1:
+                last_bwd_ids = [i for i in ids
+                                if not isinstance(g.nodes[i].op,
+                                                  CollectiveOp)]
+    else:
+        stages, hid_bytes = _stage_ops(cfg, bmb, seq, spec, dt)
+        bwd_stages = [_backward_ops(s, train.bwd_fwd_ratio) for s in stages]
+        last_in_stage: List[Optional[int]] = [None] * pp
+        # forward grid, then backward grid in reverse stage order (GPipe
+        # flush: per-stage streams serialize bwd after that stage's fwd)
+        _add_pipeline_grid(g, stages, hid_bytes, mb, dt, last_in_stage)
+        n_fwd = len(g)
+        _add_pipeline_grid(g, bwd_stages, hid_bytes, mb, dt, last_in_stage,
+                           reverse=True, p2p_prefix="pp.grad_p2p")
+        # the last microbatch's backward compute nodes, in insertion order
+        # (= reverse-stage = gradient-availability order)
+        mb_nodes = (len(g) - n_fwd) // mb
+        last_bwd_ids = [i for i in range(len(g) - mb_nodes, len(g))
+                        if not isinstance(g.nodes[i].op, CollectiveOp)]
+
+    opt_deps: List[int] = list(g.tail())
+    if dp > 1 and last_bwd_ids:
+        grad_bytes = (cfg.param_count() / (spec.tp * pp)) * dtype_bytes(dt)
+        bucket_ids = _grad_buckets(g, last_bwd_ids, grad_bytes,
+                                   train.bucket_mb * 2 ** 20, dp, dt)
+        opt_deps = [opt_deps[-1], bucket_ids[-1]] if opt_deps else \
+            [bucket_ids[-1]]
+    g.add(_optimizer_op(cfg, spec, train), stream="compute",
+          deps=tuple(opt_deps))
+    return g
+
+
+# ---------------------------------------------------------------------------
+# high-level entry points (predictor-agnostic)
+# ---------------------------------------------------------------------------
+
+def schedule_parallel(predictor, cfg: C.ModelConfig, batch: int, seq: int,
+                      spec: og.ParallelismSpec,
+                      dtype: Optional[str] = None) -> Schedule:
+    """Forward-pass schedule under ``spec``, priced by ``predictor``."""
+    return schedule_graph(predictor,
+                          build_parallel_graph(cfg, batch, seq, spec,
+                                               dtype=dtype))
+
+
+def schedule_step(predictor, cfg: C.ModelConfig, batch: int, seq: int,
+                  spec: Optional[og.ParallelismSpec] = None,
+                  train: Optional[TrainingStepSpec] = None,
+                  dtype: Optional[str] = None) -> Schedule:
+    """Training-step schedule (fwd + bwd + grad comm + optimizer), priced
+    by ``predictor``."""
+    return schedule_graph(predictor,
+                          build_training_graph(cfg, batch, seq, spec=spec,
+                                               train=train, dtype=dtype))
+
+
+# ---------------------------------------------------------------------------
+# stage-level pipeline (partition planners)
+# ---------------------------------------------------------------------------
+
+def pipeline_stage_schedule(stage_seconds: Sequence[float],
+                            handoff_seconds: float,
+                            microbatches: int = 1) -> Schedule:
+    """Schedule already-priced pipeline stages as a micro-batched pipeline
+    over the same grid wiring as the op-level builders: per-microbatch
+    stage cost = ``stage_seconds[s] / microbatches``, and
+    ``handoff_seconds`` is the PER-MICROBATCH hand-off, charged once per
+    microbatch per link — the caller prices it at the microbatch batch
+    size (``plan_stages_model`` recomputes ``activation_comm_cost`` there),
+    so the α latency term is paid per transfer, exactly like
+    ``_pipeline_graph``'s per-microbatch p2p ops.  The partition planners
+    report this makespan as the plan's end-to-end cost."""
+    mb = max(int(microbatches), 1)
+    pp = len(stage_seconds)
+    rows: List[PredictionRow] = []
+    streams: List[str] = []
+    deps: List[Tuple[int, ...]] = []
+    last_in_stage: List[Optional[int]] = [None] * pp
+
+    def add(name, kind, sec, stream, dep):
+        rows.append(PredictionRow(name, kind, float(sec), "schedule"))
+        streams.append(stream)
+        deps.append(tuple(dep))
+        return len(rows) - 1
+
+    def add_stage(m, s, d):
+        return add(f"stage{s}.mb{m}", "stage", stage_seconds[s] / mb,
+                   f"compute.s{s}", d)
+
+    def add_p2p(m, s, link, dep):
+        return add(f"p2p.s{s}.mb{m}", "collective", handoff_seconds,
+                   f"comm.pp{link}", (dep,))
+
+    _wire_pipeline_grid(pp, mb, add_stage, add_p2p, last_in_stage)
+    starts, ends, makespan = simulate([r.seconds for r in rows], streams,
+                                      deps)
+    return Schedule(rows, streams, starts, ends, makespan)

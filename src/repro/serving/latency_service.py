@@ -40,11 +40,26 @@ class LatencyQueryResult:
         return dataclasses.asdict(self)
 
 
+class _CommShareMixin:
+    """Shared derived view for results carrying ``seconds`` +
+    ``comm_seconds``."""
+    @property
+    def comm_share(self) -> float:
+        return self.comm_seconds / self.seconds if self.seconds > 0 else 0.0
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["comm_share"] = self.comm_share
+        return d
+
+
 @dataclasses.dataclass
-class ParallelLatencyResult:
+class ParallelLatencyResult(_CommShareMixin):
     """One rank's predicted forward latency under a parallelism strategy,
     with the compute/communication split (``comm_share`` is the planning
-    signal: the fraction of the end-to-end time spent in collectives)."""
+    signal: the fraction of the end-to-end time spent in collectives).
+    ``seconds`` is the schedule MAKESPAN; with micro-batched overlap it can
+    be smaller than ``compute_seconds + comm_seconds`` (total work)."""
     model: str
     device: str
     dtype: str
@@ -58,15 +73,36 @@ class ParallelLatencyResult:
     seconds: float
     compute_seconds: float
     comm_seconds: float
+    microbatches: int = 1
+    cached: bool = False
 
-    @property
-    def comm_share(self) -> float:
-        return self.comm_seconds / self.seconds if self.seconds > 0 else 0.0
 
-    def to_json(self) -> dict:
-        d = dataclasses.asdict(self)
-        d["comm_share"] = self.comm_share
-        return d
+@dataclasses.dataclass
+class TrainLatencyResult(_CommShareMixin):
+    """One TRAINING step (fwd + bwd + gradient comm + optimizer update)
+    under a parallelism strategy: schedule makespan plus the busy-time
+    split.  ``exposed_comm_seconds`` is the communication/bubble time not
+    hidden behind compute — the overlap-planning signal."""
+    model: str
+    device: str
+    dtype: str
+    batch: int
+    seq: int
+    dp: int
+    tp: int
+    pp: int
+    act_mode: str
+    microbatches: int
+    world: int
+    optimizer: str
+    bucket_mb: float
+    seconds: float
+    fwd_seconds: float
+    bwd_seconds: float
+    comm_seconds: float
+    optimizer_seconds: float
+    exposed_comm_seconds: float
+    cached: bool = False
 
 
 class LatencyService:
@@ -127,29 +163,107 @@ class LatencyService:
 
     def latency_parallel(self, model: Union[str, ModelConfig], batch: int,
                          seq: int, dp: int = 1, tp: int = 1, pp: int = 1,
-                         act_mode: str = "tp", dtype: Optional[str] = None,
+                         act_mode: str = "tp", microbatches: int = 1,
+                         dtype: Optional[str] = None,
                          device: Optional[str] = None
                          ) -> ParallelLatencyResult:
-        """End-to-end one-rank latency under a (dp, tp, pp) strategy: the
-        parallelism-expanded op graph (``opgraph.enumerate_parallel_ops``)
-        predicted through the vectorized engine, collectives priced by the
-        device's α–β interconnect model (``core/collectives.py``).  With
-        ``dp=tp=pp=1`` the answer is bit-identical to ``latency_query``
-        (same op list, same accumulation).  Uncached, like
-        ``latency_breakdown`` — this is the planning endpoint."""
+        """End-to-end one-rank latency under a (dp, tp, pp[, microbatches])
+        strategy: the schedule-aware op graph (``core/schedule.py``) priced
+        through the vectorized engine, collectives by the device's α–β
+        interconnect model (``core/collectives.py``), reported as the
+        two-stream schedule MAKESPAN.  With ``dp=tp=pp=1, microbatches=1``
+        the answer is bit-identical to ``latency_query`` (same op list,
+        same accumulation).  Cached on the spec tag, like ``latency_query``
+        — planners sweeping strategy grids hit the cache on repeats."""
         from repro.core.opgraph import ParallelismSpec
         cfg = self._resolve(model)
         pred = self.predictor.for_device(device)
-        spec = ParallelismSpec(dp=dp, tp=tp, pp=pp, act_mode=act_mode)
-        seconds, rows = pred.predict_parallel(cfg, batch, seq, spec,
-                                              dtype=dtype)
-        comm = sum(r.seconds for r in rows if r.kind == "collective")
-        return ParallelLatencyResult(
-            model=cfg.name, device=pred.device, dtype=dtype or "float32",
-            batch=int(batch), seq=int(seq), dp=int(dp), tp=int(tp),
-            pp=int(pp), act_mode=act_mode, world=spec.world,
-            seconds=seconds, compute_seconds=seconds - comm,
-            comm_seconds=comm)
+        spec = ParallelismSpec(dp=dp, tp=tp, pp=pp, act_mode=act_mode,
+                               microbatches=microbatches)
+
+        def result(seconds, compute, comm, cached):
+            return ParallelLatencyResult(
+                model=cfg.name, device=pred.device, dtype=dtype or "float32",
+                batch=int(batch), seq=int(seq), dp=int(dp), tp=int(tp),
+                pp=int(pp), act_mode=act_mode, world=spec.world,
+                seconds=seconds, compute_seconds=compute, comm_seconds=comm,
+                microbatches=int(microbatches), cached=cached)
+
+        key = PredictionCache.make_key(config_key(cfg), pred.device, dtype,
+                                       batch, seq, spec=spec.tag())
+        hit = self.cache.get(key)
+        # a persisted entry missing expected fields (foreign writer,
+        # hand-edited file) is treated as a miss, not a crash
+        if isinstance(hit, dict) and {"seconds", "compute_seconds",
+                                      "comm_seconds"} <= hit.keys():
+            return result(hit["seconds"], hit["compute_seconds"],
+                          hit["comm_seconds"], True)
+        sched = pred.schedule_parallel(cfg, batch, seq, spec, dtype=dtype)
+        comm = sched.comm_seconds
+        self.cache.put(key, {"seconds": sched.makespan,
+                             "compute_seconds": sched.compute_seconds,
+                             "comm_seconds": comm})
+        return result(sched.makespan, sched.compute_seconds, comm, False)
+
+    def latency_train(self, model: Union[str, ModelConfig], batch: int,
+                      seq: int, dp: int = 1, tp: int = 1, pp: int = 1,
+                      act_mode: str = "tp", microbatches: int = 1,
+                      optimizer: str = "adamw", bucket_mb: float = 25.0,
+                      dtype: Optional[str] = None,
+                      device: Optional[str] = None) -> TrainLatencyResult:
+        """One TRAINING-step latency: forward + backward (≈2× forward
+        compute), the bucketed data-parallel gradient all-reduce overlapped
+        with backward, pipeline microbatching, and the optimizer update —
+        all priced as the two-stream schedule makespan
+        (``core/schedule.py``).  Cached on the spec + training tags."""
+        from repro.core.opgraph import ParallelismSpec
+        from repro.core.schedule import TrainingStepSpec
+        cfg = self._resolve(model)
+        pred = self.predictor.for_device(device)
+        spec = ParallelismSpec(dp=dp, tp=tp, pp=pp, act_mode=act_mode,
+                               microbatches=microbatches)
+        train = TrainingStepSpec(optimizer=optimizer, bucket_mb=bucket_mb)
+
+        def result(d, cached):
+            return TrainLatencyResult(
+                model=cfg.name, device=pred.device, dtype=dtype or "float32",
+                batch=int(batch), seq=int(seq), dp=int(dp), tp=int(tp),
+                pp=int(pp), act_mode=act_mode,
+                microbatches=int(microbatches), world=spec.world,
+                optimizer=optimizer, bucket_mb=float(bucket_mb),
+                seconds=d["seconds"], fwd_seconds=d["fwd_seconds"],
+                bwd_seconds=d["bwd_seconds"], comm_seconds=d["comm_seconds"],
+                optimizer_seconds=d["optimizer_seconds"],
+                exposed_comm_seconds=d["exposed_comm_seconds"],
+                cached=cached)
+
+        key = PredictionCache.make_key(
+            config_key(cfg), pred.device, dtype, batch, seq,
+            spec=f"{spec.tag()}+{train.tag()}+train")
+        _FIELDS = {"seconds", "fwd_seconds", "bwd_seconds", "comm_seconds",
+                   "optimizer_seconds", "exposed_comm_seconds"}
+        hit = self.cache.get(key)
+        # tolerate persisted entries missing expected fields: miss, recompute
+        if isinstance(hit, dict) and _FIELDS <= hit.keys():
+            return result(hit, True)
+        sched = pred.schedule_step(cfg, batch, seq, spec=spec, train=train,
+                                   dtype=dtype)
+        fwd = bwd = opt = 0.0
+        for r in sched.rows:
+            if r.kind == "collective":
+                continue
+            if r.name.startswith("bwd."):
+                bwd += r.seconds
+            elif r.name.startswith("opt."):
+                opt += r.seconds
+            else:
+                fwd += r.seconds
+        d = {"seconds": sched.makespan, "fwd_seconds": fwd,
+             "bwd_seconds": bwd, "comm_seconds": sched.comm_seconds,
+             "optimizer_seconds": opt,
+             "exposed_comm_seconds": sched.exposed_comm_seconds}
+        self.cache.put(key, d)
+        return result(d, False)
 
     def latency_breakdown(self, model: Union[str, ModelConfig], batch: int,
                           seq: int, dtype: Optional[str] = None,

@@ -36,7 +36,9 @@ def test_interconnect_validation():
     with pytest.raises(ValueError, match="invalid"):
         CC.Interconnect("ethernet", -1.0, 1e-6)
     with pytest.raises(ValueError, match="unknown collective"):
-        CC.CollectiveOp("x", "all_to_all", 1.0, 2)
+        CC.CollectiveOp("x", "gossip", 1.0, 2)
+    # all_to_all joined the collective set with the MoE routing model
+    assert "all_to_all" in CC.COLLECTIVES
 
 
 def test_world_one_costs_zero():
