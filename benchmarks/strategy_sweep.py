@@ -1,0 +1,188 @@
+"""Vectorized strategy-sweep benchmark: specs/sec vs the per-spec loop.
+
+``core/schedule.py::sweep_strategies`` prices a whole (dp, tp, pp,
+microbatches, bucket_mb) strategy grid in one template/bind/simulate-batch
+pass; the per-spec alternative builds and walks a full ``OpGraph`` per
+point (``schedule_parallel`` / ``schedule_step``).  This benchmark times
+both on the same grid, checks they agree to <= 1e-9 relative makespan
+error, and writes the machine-readable ``BENCH_strategy_sweep.json`` so
+the perf trajectory (specs/sec, speedup) is tracked from PR 6 on.
+
+Two timed sections:
+
+* **training sweep** — the headline >= 1000-point grid: every
+  (dp, tp, pp, mb) in the spec grid crossed with every gradient-bucket
+  size, each point one full optimizer step (fwd + bwd + bucketed grad
+  all-reduce + optimizer).  The per-spec loop is timed on a bounded
+  subset (``--loop-limit``) and extrapolated per spec.
+* **forward sweep** — the same spec grid forward-only, against the
+  ``schedule_parallel`` loop.
+
+  PYTHONPATH=src python -m benchmarks.strategy_sweep [--arch qwen3-mini]
+      [--device a100_80g] [--batch 8] [--seq 128] [--dp 1,2,4,8]
+      [--tp 1,2,4,8] [--pp 1,2,4,8] [--microbatches 1,2,4,8]
+      [--buckets 1,5,25,100] [--loop-limit 64]
+      [--json artifacts/BENCH_strategy_sweep.json] [--dry-run]
+
+``--dry-run`` prices a small grid on the reduced arch and asserts the
+golden equivalence over EVERY point, so CI (scripts/test.sh --smoke)
+exercises the full sweep path cheaply.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from benchmarks import common
+from repro.configs import registry as cr
+from repro.core import calibrate
+from repro.core.batch_predict import BatchPredictor
+from repro.core.schedule import TrainingStepSpec, strategy_grid
+
+
+def _cross_buckets(specs, buckets):
+    """(spec grid) x (bucket sizes) -> aligned (specs, trains) lists."""
+    out_s, out_t = [], []
+    for bkt in buckets:
+        tr = TrainingStepSpec(bucket_mb=float(bkt))
+        for sp in specs:
+            out_s.append(sp)
+            out_t.append(tr)
+    return out_s, out_t
+
+
+def run(arch="qwen3-mini", device="a100_80g", batch=8, seq=128,
+        dp=(1, 2, 4, 8), tp=(1, 2, 4, 8), pp=(1, 2, 4, 8),
+        microbatches=(1, 2, 4, 8), buckets=(1.0, 5.0, 25.0, 100.0),
+        loop_limit=64, dtype=None, verbose=True):
+    store = common.get_calibration()
+    bp = BatchPredictor(store, calibrate.device_name())
+    bp.host_profile()
+    cfg = cr.get_any(arch)
+    pred = bp.for_device(device)
+
+    specs = strategy_grid(dp=dp, tp=tp, pp=pp, microbatches=microbatches)
+    tspecs, trains = _cross_buckets(specs, buckets)
+    n = len(tspecs)
+
+    # Warm the predictor's per-shape caches once so the timed comparison is
+    # warm-vs-warm (the per-spec loop below reuses the same warmed tables).
+    pred.sweep_strategies(cfg, batch, seq, tspecs, train=trains, dtype=dtype)
+    with common.timer() as t_sweep:
+        sw = pred.sweep_strategies(cfg, batch, seq, tspecs, train=trains,
+                                   dtype=dtype)
+    assert bool(sw.bounds_ok().all()), "sweep violated schedule bounds"
+    sweep_sps = n / t_sweep.s
+
+    # Per-spec loop on a bounded, evenly strided subset of the same grid.
+    loop_n = min(int(loop_limit), n) if loop_limit else n
+    idx = np.linspace(0, n - 1, loop_n).astype(int) if loop_n else []
+    with common.timer() as t_loop:
+        loop_secs = [pred.schedule_step(cfg, batch, seq, spec=tspecs[i],
+                                        train=trains[i], dtype=dtype).makespan
+                     for i in idx]
+    loop_sps = loop_n / t_loop.s if loop_n else 0.0
+    speedup = sweep_sps / loop_sps if loop_sps else float("inf")
+    max_rel = max(abs(sw.seconds[i] - s) / s
+                  for i, s in zip(idx, loop_secs)) if loop_n else 0.0
+
+    # Forward-only comparison on the bare spec grid.
+    pred.sweep_strategies(cfg, batch, seq, specs, dtype=dtype)
+    with common.timer() as t_fwd:
+        fsw = pred.sweep_strategies(cfg, batch, seq, specs, dtype=dtype)
+    fwd_n = min(int(loop_limit), len(specs)) if loop_limit else len(specs)
+    fidx = np.linspace(0, len(specs) - 1, fwd_n).astype(int)
+    with common.timer() as t_floop:
+        floop = [pred.schedule_parallel(cfg, batch, seq, specs[i],
+                                        dtype=dtype).makespan for i in fidx]
+    fwd_rel = max(abs(fsw.seconds[i] - s) / s
+                  for i, s in zip(fidx, floop)) if fwd_n else 0.0
+    fwd_sps = len(specs) / t_fwd.s
+    floop_sps = fwd_n / t_floop.s if fwd_n else 0.0
+
+    res = {
+        "arch": cfg.name, "device": pred.device, "batch": int(batch),
+        "seq": int(seq), "dtype": dtype or "float32",
+        "n_specs": n, "sweep_seconds": t_sweep.s,
+        "specs_per_sec": sweep_sps,
+        "loop_n": int(loop_n), "loop_seconds": t_loop.s,
+        "loop_specs_per_sec": loop_sps,
+        "speedup": speedup, "max_rel_err": float(max_rel),
+        "forward": {"n_specs": len(specs), "sweep_seconds": t_fwd.s,
+                    "specs_per_sec": fwd_sps, "loop_n": int(fwd_n),
+                    "loop_specs_per_sec": floop_sps,
+                    "speedup": fwd_sps / floop_sps if floop_sps
+                    else float("inf"),
+                    "max_rel_err": float(fwd_rel)},
+        "best": sw.row(sw.best()),
+    }
+    if verbose:
+        print(f"train grid: {n} specs  sweep {t_sweep.s*1e3:.1f}ms "
+              f"({sweep_sps:,.0f}/s)  loop[{loop_n}] "
+              f"({loop_sps:,.0f}/s)  speedup {speedup:.1f}x  "
+              f"max rel err {max_rel:.2e}")
+        print(f"fwd grid:   {len(specs)} specs  sweep {t_fwd.s*1e3:.1f}ms "
+              f"({fwd_sps:,.0f}/s)  loop[{fwd_n}] ({floop_sps:,.0f}/s)  "
+              f"max rel err {fwd_rel:.2e}")
+        print(f"best train spec: {res['best']['spec']} "
+              f"{res['best']['seconds']*1e3:.3f}ms")
+    common.emit("strategy_sweep/train_specs_per_sec", 1e6 / sweep_sps,
+                f"{sweep_sps:.0f}/s over {n} specs")
+    common.emit("strategy_sweep/speedup_vs_loop", t_sweep.s * 1e6 / n,
+                f"{speedup:.1f}x (loop {loop_sps:.0f}/s)")
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-mini")
+    ap.add_argument("--device", default="a100_80g")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--dp", default="1,2,4,8")
+    ap.add_argument("--tp", default="1,2,4,8")
+    ap.add_argument("--pp", default="1,2,4,8")
+    ap.add_argument("--microbatches", default="1,2,4,8")
+    ap.add_argument("--buckets", default="1,5,25,100",
+                    help="comma-separated gradient-bucket sizes (MiB)")
+    ap.add_argument("--loop-limit", type=int, default=64,
+                    help="per-spec loop subset size (golden + timing)")
+    ap.add_argument("--dtype", default=None)
+    ap.add_argument("--json", default=None,
+                    help="output path (default artifacts/"
+                         "BENCH_strategy_sweep.json; dry runs write "
+                         "..._dry.json so CI never clobbers the tracked "
+                         "perf trajectory)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="small grid on the reduced arch, golden-check "
+                         "every point (CI smoke)")
+    args = ap.parse_args()
+    ints = lambda s: tuple(int(x) for x in s.split(","))
+    if args.dry_run:
+        res = run(arch="qwen2-0.5b-reduced", device=args.device,
+                  batch=4, seq=64, dp=(1, 2), tp=(1,), pp=(1, 2),
+                  microbatches=(1, 2), buckets=(1.0, 25.0),
+                  loop_limit=0, dtype=args.dtype)
+        assert res["max_rel_err"] <= 1e-9, res["max_rel_err"]
+        assert res["forward"]["max_rel_err"] <= 1e-9, res["forward"]
+        print("dry-run golden check ok (every point <= 1e-9 rel)")
+    else:
+        res = run(arch=args.arch, device=args.device, batch=args.batch,
+                  seq=args.seq, dp=ints(args.dp), tp=ints(args.tp),
+                  pp=ints(args.pp), microbatches=ints(args.microbatches),
+                  buckets=tuple(float(x) for x in args.buckets.split(",")),
+                  loop_limit=args.loop_limit, dtype=args.dtype)
+    res["dry_run"] = bool(args.dry_run)
+    path = args.json or os.path.join(
+        common.ARTIFACTS, "BENCH_strategy_sweep_dry.json" if args.dry_run
+        else "BENCH_strategy_sweep.json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

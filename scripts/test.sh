@@ -72,6 +72,9 @@ PY
   echo "--- smoke: overlap-scaling benchmark (--dry-run) ---"
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TIMEOUT" \
     python -m benchmarks.overlap_scaling --dry-run
+  echo "--- smoke: vectorized strategy-sweep benchmark (--dry-run) ---"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TIMEOUT" \
+    python -m benchmarks.strategy_sweep --dry-run
 fi
 
 if [[ "$DOCS" == 1 ]]; then

@@ -606,6 +606,24 @@ class BatchPredictor:
         return S.schedule_step(self, cfg, batch, seq, spec=spec, train=train,
                                dtype=dtype)
 
+    def sweep_strategies(self, cfg: C.ModelConfig, batch: int, seq: int,
+                         specs: Sequence["og.ParallelismSpec"], *,
+                         train=None, dtype: Optional[str] = None,
+                         device: Optional[str] = None):
+        """Price MANY parallelism strategies in one vectorized pass
+        (``schedule.sweep_strategies``): unique op components are
+        enumerated once, priced through ONE ``predict_ops_seconds`` call,
+        and simulated per structural template by the batched list-schedule
+        kernel.  Returns a ``schedule.StrategySweep`` with arrays aligned
+        to ``specs``; ``train`` (None | TrainingStepSpec | per-spec
+        sequence) switches forward sweeps to full training steps."""
+        if device is not None and device != self.device:
+            return self.for_device(device).sweep_strategies(
+                cfg, batch, seq, specs, train=train, dtype=dtype)
+        from repro.core import schedule as S
+        return S.sweep_strategies(self, cfg, batch, seq, specs, train=train,
+                                  dtype=dtype)
+
     def predict_blocks(self, cfg: C.ModelConfig, batch: int, seq: int,
                        dtype: Optional[str] = None,
                        device: Optional[str] = None) -> List[float]:
@@ -748,7 +766,11 @@ class PredictionCache:
     #    bmm/attention kernel selection (entries differ from schema-1 values)
     # 3: schedule-aware parallel/training entries (spec-tagged keys, dict
     #    values) + MoE all-to-all in the parallel op expansion
-    SCHEMA = 3
+    # 4: exposed_comm_seconds redefined as makespan minus the UNION of
+    #    compute busy intervals (nonzero under pp > 1; old entries floored
+    #    it to 0), and parallel/train entries extended with the sweep
+    #    field set (sequential/bubble/max-stream-busy)
+    SCHEMA = 4
 
     def __init__(self, maxsize: int = 65536, path: Optional[str] = None):
         self.maxsize = int(maxsize)

@@ -40,6 +40,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
+import warnings
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -62,9 +64,33 @@ _EFF_GAMMA: Dict[str, float] = {
 }
 
 
-def dtype_bytes(dtype: str) -> int:
-    """Element size in bytes; unknown dtypes cost like float32."""
-    return _DTYPE_BYTES.get(str(dtype), 4)
+# Same env knob as core/device.py's peak_lookup — duplicated literally here
+# because this module must stay repo-import-free (see module docstring).
+STRICT_DTYPE_ENV = "REPRO_STRICT_DTYPE"
+_WARNED_DTYPES: set = set()
+
+
+def dtype_bytes(dtype: str, *, strict: Optional[bool] = None) -> int:
+    """Element size in bytes, with a LOUD fallback: an unknown dtype is
+    priced as float32 (4 bytes), silently mis-sizing every collective
+    payload derived from it — so warn (once per dtype), and raise when
+    strict (arg or ``REPRO_STRICT_DTYPE=1``), the same policy as
+    ``DeviceModel.peak()``."""
+    dt = str(dtype)
+    if dt in _DTYPE_BYTES:
+        return _DTYPE_BYTES[dt]
+    if strict is None:
+        strict = os.environ.get(STRICT_DTYPE_ENV, "") not in ("", "0")
+    msg = (f"dtype_bytes: unknown dtype {dt!r} "
+           f"(known: {sorted(_DTYPE_BYTES)})")
+    if strict:
+        raise KeyError(msg)
+    if dt not in _WARNED_DTYPES:
+        _WARNED_DTYPES.add(dt)
+        warnings.warn(f"{msg}; assuming float32 (4 bytes) — collective "
+                      "payloads for this dtype may be mis-sized",
+                      stacklevel=2)
+    return 4
 
 
 @dataclasses.dataclass(frozen=True)

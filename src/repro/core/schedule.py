@@ -115,6 +115,58 @@ def simulate(durations: Sequence[float], streams: Sequence[str],
     return starts, ends, makespan
 
 
+def simulate_batch(durations: np.ndarray, streams: Sequence[str],
+                   deps: Sequence[Tuple[int, ...]]
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Batched list schedule: ``durations`` is ``(S, N)`` — S specs sharing
+    ONE graph shape (same ``streams`` + ``deps``), differing only in
+    per-node durations.  This is the sweep kernel: the per-node event
+    propagation runs once, with every per-spec update a length-S vector op,
+    instead of S full Python walks.
+
+    Row ``s`` performs exactly the same max/add sequence as
+    ``simulate(durations[s], streams, deps)``, so each row is bit-identical
+    to the scalar simulator.  Returns ``(starts, ends, makespans)`` of
+    shapes ``(S, N)``, ``(S, N)``, ``(S,)``.
+    """
+    D = np.asarray(durations, dtype=np.float64)
+    S, n = D.shape
+    ids: Dict[str, int] = {}
+    sid = [ids.setdefault(st, len(ids)) for st in streams]
+    # (N, S) layout so per-node rows are contiguous in the hot loop
+    Dt = np.ascontiguousarray(D.T)
+    starts = np.empty((n, S))
+    ends = np.empty((n, S))
+    avail = np.zeros((max(len(ids), 1), S))
+    for i in range(n):
+        t = avail[sid[i]]
+        for d in deps[i]:
+            t = np.maximum(t, ends[d])
+        starts[i] = t
+        np.add(t, Dt[i], out=ends[i])
+        avail[sid[i]] = ends[i]
+    makespans = ends.max(axis=0) if n else np.zeros(S)
+    return starts.T, ends.T, makespans
+
+
+def _interval_union(starts: np.ndarray, ends: np.ndarray) -> np.ndarray:
+    """Total measure of the union of ``[start, end)`` intervals along the
+    last axis (leading axes are independent rows): sort by start, then each
+    interval contributes ``max(0, end - max(start, running max of earlier
+    ends))`` — the part not already covered."""
+    starts = np.asarray(starts, dtype=np.float64)
+    ends = np.asarray(ends, dtype=np.float64)
+    if starts.shape[-1] == 0:
+        return np.zeros(starts.shape[:-1])
+    order = np.argsort(starts, axis=-1, kind="stable")
+    s = np.take_along_axis(starts, order, axis=-1)
+    e = np.take_along_axis(ends, order, axis=-1)
+    covered = np.maximum.accumulate(e, axis=-1)
+    prev = np.concatenate(
+        [np.full(s.shape[:-1] + (1,), -np.inf), covered[..., :-1]], axis=-1)
+    return np.maximum(e - np.maximum(s, prev), 0.0).sum(axis=-1)
+
+
 @dataclasses.dataclass
 class Schedule:
     """A priced, simulated ``OpGraph``: per-node rows (same order as the
@@ -144,9 +196,24 @@ class Schedule:
     @property
     def exposed_comm_seconds(self) -> float:
         """Communication (and bubble) time NOT hidden behind compute:
-        ``makespan - compute_seconds``, floored at 0 (a multi-stage pipeline
-        has more total compute than critical path)."""
-        return max(self.makespan - self.compute_seconds, 0.0)
+        ``makespan`` minus the measure of the UNION of the busy intervals of
+        all non-collective nodes — the wall-clock span during which no
+        compute runs anywhere.
+
+        The union is taken from the simulated timeline, not from summed
+        busy time: with one compute stream the two agree, but a multi-stage
+        pipeline sums per-stage busy time past the makespan, which floored
+        the old ``makespan - compute_seconds`` definition to 0.0 exactly
+        where the overlap signal matters (pp > 1 — pinned by
+        ``tests/test_schedule.py``'s two-stage worked example, where 10ms of
+        hand-off is provably exposed).  Because the list schedule is
+        work-conserving, some node is always running before the makespan,
+        so the exposed span is covered by collective intervals and
+        ``exposed_comm_seconds <= comm_seconds`` still holds."""
+        comp = [i for i, r in enumerate(self.rows)
+                if r.kind != "collective"]
+        union = float(_interval_union(self.starts[comp], self.ends[comp]))
+        return max(self.makespan - union, 0.0)
 
     def busy(self) -> Dict[str, float]:
         """Busy seconds per stream."""
@@ -206,15 +273,20 @@ _ceil_div = og._ceil_div
 
 
 def _stage_ops(cfg: C.ModelConfig, bmb: int, seq: int,
-               spec: og.ParallelismSpec, dt: str
+               spec: og.ParallelismSpec, dt: str,
+               segments: Optional[Tuple] = None
                ) -> Tuple[List[List[og.Op]], float]:
     """One microbatch's ops per pipeline stage (tp-sharded, per-layer tp
     collectives inline), plus the stage-boundary activation payload.
 
     Layers split contiguously and near-evenly over ``pp`` stages; the
     embedding (+ encoder) lands on stage 0, final norm + unembed on the
-    last stage, with their vocab-parallel collectives."""
-    head, per_layer, tail = og.layer_segments(cfg, bmb, seq, dtype=dt)
+    last stage, with their vocab-parallel collectives.  ``segments`` lets a
+    sweep pass a precomputed ``og.layer_segments(cfg, bmb, seq)`` so the
+    per-layer re-enumeration is shared across every spec with the same
+    microbatch shape."""
+    head, per_layer, tail = (segments if segments is not None
+                             else og.layer_segments(cfg, bmb, seq, dtype=dt))
     shard = lambda ops: [og._shard_op(o, spec) for o in ops]
     esz = dtype_bytes(dt)
     T = bmb * seq
@@ -284,44 +356,442 @@ def _wire_pipeline_grid(pp: int, mb: int, add_stage, add_p2p,
             last_in_stage[s] = prev_last
 
 
-def _add_pipeline_grid(g: og.OpGraph, stage_ops: Sequence[Sequence[og.Op]],
-                       hid_bytes: float, mb: int, dt: str,
-                       last_in_stage: List[Optional[int]], *,
-                       reverse: bool = False,
-                       p2p_prefix: str = "pp.act_p2p") -> None:
-    """Append a (stage × microbatch) op grid over the shared wiring, with
-    p2p hand-offs of the per-microbatch activation on per-link
-    ``comm.pp<link>`` streams."""
+# ---------------------------------------------------------------------------
+# graph templates: symbolic wiring shared across specs
+# ---------------------------------------------------------------------------
+# A sweep prices thousands of ParallelismSpecs over the SAME structural
+# shapes: for a fixed (pp, mb, collective-position, bucket-count) layout the
+# wiring (streams + deps) is identical across specs, only op durations vary.
+# The template layer therefore splits graph construction in two:
+#
+#   template — node list of (slot, stream, deps), built ONCE per shape by
+#              the same ``_wire_pipeline_grid`` callbacks the op-level
+#              builders always used;
+#   bind     — per-spec op durations indexed into the slots
+#              (``durations[:, template.slots]``) and simulated in one
+#              ``simulate_batch`` call for the whole template group.
+#
+# ``build_parallel_graph`` / ``build_training_graph`` instantiate concrete
+# ``OpGraph``s from the same templates, so the per-spec and swept paths can
+# never disagree on structure.
+
+_CLS_FWD, _CLS_BWD, _CLS_OPT = 0, 1, 2
+
+
+class _TemplateBuilder:
+    """Accumulates symbolic nodes ``(slot, stream, deps)`` — the template
+    mirror of ``OpGraph.add`` / ``add_chain``."""
+
+    def __init__(self):
+        self.slots: List[int] = []
+        self.streams: List[str] = []
+        self.deps: List[Tuple[int, ...]] = []
+
+    def __len__(self) -> int:
+        return len(self.slots)
+
+    def tail(self) -> Tuple[int, ...]:
+        return (len(self.slots) - 1,) if self.slots else ()
+
+    def add(self, slot: int, stream: str,
+            deps: Sequence[int] = ()) -> int:
+        self.slots.append(slot)
+        self.streams.append(stream)
+        self.deps.append(tuple(deps))
+        return len(self.slots) - 1
+
+    def add_chain(self, slot0: int, coll_mask: Sequence[bool],
+                  deps: Sequence[int], compute_stream: str) -> List[int]:
+        """Serialized chain over slots ``slot0 + j``; collective positions
+        go on the shared comm stream, exactly like ``OpGraph.add_chain``."""
+        ids: List[int] = []
+        for j, is_coll in enumerate(coll_mask):
+            stream = og.COMM_STREAM if is_coll else compute_stream
+            ids.append(self.add(slot0 + j, stream, deps))
+            deps = (ids[-1],)
+        return ids
+
+
+@dataclasses.dataclass
+class GraphTemplate:
+    """Symbolic schedule graph for one structural shape.
+
+    ``slots[i]`` indexes node ``i``'s duration in a per-spec slot vector
+    (slots repeat across microbatches: the grid reuses one stage's op list
+    ``mb`` times).  ``simulate_slots`` binds ``(S, n_slots)`` durations and
+    prices all S specs in one batched walk; ``_instantiate`` binds concrete
+    ops into the same wiring for the per-spec ``OpGraph`` path.
+
+    For the batched walk, maximal serialized same-stream runs that no other
+    node depends into are fused to single nodes (their durations sum —
+    that's the only float re-association between this path and the scalar
+    simulator, bounded well under the 1e-9 golden-equivalence tolerance).
+    """
+    key: Tuple
+    slots: np.ndarray               # (n_nodes,) -> slot id
+    streams: List[str]              # per node
+    deps: List[Tuple[int, ...]]     # per node
+    n_slots: int
+    slot_class: np.ndarray          # (n_slots,) _CLS_FWD | _CLS_BWD | _CLS_OPT
+    last_bwd_ids: Tuple[int, ...] = ()   # training: last microbatch's
+    #                                      backward compute node ids
+
+    def __post_init__(self):
+        n = len(self.slots)
+        self.n_nodes = n
+        node_is_comm = np.array([st.startswith("comm")
+                                 for st in self.streams], dtype=bool)
+        self.slot_is_comm = np.zeros(self.n_slots, dtype=bool)
+        self.slot_is_comm[self.slots] = node_is_comm
+        self.slot_mult = np.bincount(
+            self.slots, minlength=self.n_slots).astype(np.float64)
+        # per-stream slot multiplicity (busy time = durs @ this matrix)
+        self.stream_names = list(dict.fromkeys(self.streams))
+        sid_of = {s: i for i, s in enumerate(self.stream_names)}
+        sid = np.array([sid_of[s] for s in self.streams], dtype=np.int64)
+        self.slot_stream_mult = np.zeros((self.n_slots,
+                                          len(self.stream_names)))
+        np.add.at(self.slot_stream_mult, (self.slots, sid), 1.0)
+        # pipeline-executor columns for bubble_share (same rule as
+        # Schedule.bubble_share: per-stage compute.s<i> streams when
+        # present, else any compute* stream)
+        cols = [i for i, s in enumerate(self.stream_names)
+                if s.startswith("compute.s")]
+        if not cols:
+            cols = [i for i, s in enumerate(self.stream_names)
+                    if s.startswith(og.COMPUTE_STREAM)]
+        self.comp_cols = np.array(cols, dtype=np.int64)
+        # ----- fused serial runs for the batched walk -----
+        referenced = np.zeros(n, dtype=bool)
+        for k, ds in enumerate(self.deps):
+            for d in ds:
+                if not (len(ds) == 1 and d == k - 1):
+                    referenced[d] = True
+        start_new = np.ones(n, dtype=bool)
+        for i in range(1, n):
+            if (self.deps[i] == (i - 1,)
+                    and self.streams[i] == self.streams[i - 1]
+                    and not referenced[i - 1]):
+                start_new[i] = False
+        self.run_starts = np.flatnonzero(start_new)
+        run_of = np.cumsum(start_new) - 1
+        self.run_streams = [self.streams[i] for i in self.run_starts]
+        self.run_deps = [tuple(int(run_of[d]) for d in self.deps[i])
+                         for i in self.run_starts]
+        self.run_is_comm = node_is_comm[self.run_starts]
+
+    def simulate_slots(self, slot_durs: np.ndarray
+                       ) -> Dict[str, np.ndarray]:
+        """Bind ``(S, n_slots)`` per-spec durations and price all S specs:
+        returns the per-spec metric arrays (keys match ``StrategySweep``
+        fields), each row matching the scalar ``Schedule`` to float
+        re-association."""
+        D = np.asarray(slot_durs, dtype=np.float64)
+        Dn = D[:, self.slots]                               # (S, n_nodes)
+        Dr = np.add.reduceat(Dn, self.run_starts, axis=1)
+        starts, ends, mk = simulate_batch(Dr, self.run_streams,
+                                          self.run_deps)
+        keep = ~self.run_is_comm
+        union = _interval_union(starts[:, keep], ends[:, keep])
+        w = self.slot_mult
+        not_coll = w * ~self.slot_is_comm
+        busy = D @ self.slot_stream_mult                    # (S, n_streams)
+        if self.comp_cols.size:
+            comp_busy = busy[:, self.comp_cols].sum(axis=1)
+            k = len(self.comp_cols)
+            with np.errstate(divide="ignore", invalid="ignore"):
+                bubble = np.where(
+                    mk > 0,
+                    np.maximum(1.0 - comp_busy / (k * np.maximum(mk, 1e-300)),
+                               0.0), 0.0)
+        else:
+            bubble = np.zeros(len(D))
+        return {
+            "seconds": mk,
+            "compute_seconds": D @ not_coll,
+            "comm_seconds": D @ (w * self.slot_is_comm),
+            "exposed_comm_seconds": np.maximum(mk - union, 0.0),
+            "sequential_seconds": D @ w,
+            "bubble_share": bubble,
+            "max_stream_busy": busy.max(axis=1),
+            "fwd_seconds": D @ (not_coll * (self.slot_class == _CLS_FWD)),
+            "bwd_seconds": D @ (not_coll * (self.slot_class == _CLS_BWD)),
+            "optimizer_seconds": D @ (not_coll
+                                      * (self.slot_class == _CLS_OPT)),
+        }
+
+
+def _instantiate(tpl: GraphTemplate,
+                 slot_ops: Sequence[og.Op]) -> og.OpGraph:
+    """Bind concrete ops into the symbolic wiring: node ``i`` executes
+    ``slot_ops[tpl.slots[i]]`` on ``tpl.streams[i]``."""
+    g = og.OpGraph()
+    for slot, stream, deps in zip(tpl.slots, tpl.streams, tpl.deps):
+        g.add(slot_ops[slot], stream=stream, deps=deps)
+    return g
+
+
+def _grid_template(tb: _TemplateBuilder,
+                   stage_masks: Sequence[Sequence[bool]], mb: int,
+                   stage_slot0: Sequence[int], p2p_slot0: int,
+                   last_in_stage: List[Optional[int]], *,
+                   reverse: bool = False,
+                   record: Optional[List[List[int]]] = None) -> None:
+    """Append a symbolic (stage × microbatch) grid over
+    ``_wire_pipeline_grid``: stage ``s``'s chain binds slots
+    ``stage_slot0[s] + j`` on ``compute.s<s>``, the hand-off for stage
+    ``s`` binds ``p2p_slot0 + (s if reverse else s - 1)`` on its
+    ``comm.pp<link>`` stream.  ``record`` collects every microbatch's node
+    ids straight from the wiring callbacks — per-microbatch membership is
+    never derived from node-count arithmetic (which an empty stage would
+    break)."""
 
     def add_stage(m, s, deps):
-        ids = g.add_chain(stage_ops[s], deps=deps,
-                          compute_stream=f"compute.s{s}")
+        ids = tb.add_chain(stage_slot0[s], stage_masks[s], deps,
+                           f"compute.s{s}")
+        if record is not None:
+            record[m].extend(ids)
         return ids[-1] if ids else None
 
     def add_p2p(m, s, link, dep):
-        return g.add(CollectiveOp(f"{p2p_prefix}.s{s}", "p2p", hid_bytes,
-                                  2, dtype=dt),
-                     stream=f"comm.pp{link}", deps=(dep,))
+        i = tb.add(p2p_slot0 + (s if reverse else s - 1),
+                   f"comm.pp{link}", (dep,))
+        if record is not None:
+            record[m].append(i)
+        return i
 
-    _wire_pipeline_grid(len(stage_ops), mb, add_stage, add_p2p,
+    _wire_pipeline_grid(len(stage_masks), mb, add_stage, add_p2p,
                         last_in_stage, reverse=reverse)
 
 
-def _pipeline_graph(cfg: C.ModelConfig, batch: int, seq: int,
-                    spec: og.ParallelismSpec,
-                    dtype: Optional[str]) -> og.OpGraph:
-    """The micro-batched pipeline schedule as a (stage × microbatch)
-    grid.  Stage ops and the p2p activation payload are enumerated at the
-    per-microbatch batch, so hand-off bytes scale down with ``mb``."""
-    dt = dtype or "float32"
-    mb, pp = spec.microbatches, spec.pp
-    bsh = _ceil_div(batch, spec.dp)
-    bmb = _ceil_div(bsh, mb)
-    stages, hid_bytes = _stage_ops(cfg, bmb, seq, spec, dt)
-    g = og.OpGraph()
-    last_in_stage: List[Optional[int]] = [None] * pp
-    _add_pipeline_grid(g, stages, hid_bytes, mb, dt, last_in_stage)
-    return g
+def _bucket_anchors(bwd_ids: Sequence[int], n_buckets: int) -> List[int]:
+    """DDP-style reverse-registration bucketing: bucket ``i`` becomes ready
+    once the first ``(i+1)/n`` of the (reverse-order) backward nodes
+    finish, so the gradient all-reduce overlaps the tail of backward."""
+    nb = len(bwd_ids)
+    return [bwd_ids[min(nb - 1, _ceil_div((i + 1) * nb, n_buckets) - 1)]
+            for i in range(n_buckets)]
+
+
+def _build_template(key: Tuple, masks: Sequence[Tuple[bool, ...]],
+                    classes: Sequence[int]) -> GraphTemplate:
+    """Construct the symbolic wiring for one template ``key``.  ``masks``
+    holds each component's collective-position mask (components concatenate
+    into the slot vector in order), ``classes`` the per-component
+    fwd/bwd/opt class.  The key fully determines the wiring; specs sharing
+    a key differ only in durations."""
+    kind = key[0]
+    offs = np.cumsum([0] + [len(m) for m in masks])
+    slot_class = np.array([c for m, c in zip(masks, classes) for _ in m],
+                          dtype=np.int8)
+    tb = _TemplateBuilder()
+    last_bwd: List[int] = []
+    if kind == "chain":
+        tb.add_chain(0, masks[0], (), og.COMPUTE_STREAM)
+    elif kind == "chunks":
+        for _ in range(key[1]):
+            tb.add_chain(0, masks[0], tb.tail(), og.COMPUTE_STREAM)
+    elif kind == "grid":
+        pp, mb = key[1], key[2]
+        last: List[Optional[int]] = [None] * pp
+        _grid_template(tb, masks[:pp], mb, [int(o) for o in offs[:pp]],
+                       int(offs[pp]), last)
+    elif kind == "train1":
+        mb = key[1]
+        b_ids: List[int] = []
+        for _ in range(mb):
+            tb.add_chain(int(offs[0]), masks[0], tb.tail(),
+                         og.COMPUTE_STREAM)
+            b_ids = tb.add_chain(int(offs[1]), masks[1], tb.tail(),
+                                 og.COMPUTE_STREAM)
+        last_bwd = [i for i in b_ids
+                    if not tb.streams[i].startswith("comm")]
+    elif kind == "trainpp":
+        pp, mb = key[1], key[2]
+        last = [None] * pp
+        per_mb: List[List[int]] = [[] for _ in range(mb)]
+        # forward grid, then backward grid in reverse stage order (GPipe
+        # flush: per-stage streams serialize bwd after that stage's fwd)
+        _grid_template(tb, masks[:pp], mb, [int(o) for o in offs[:pp]],
+                       int(offs[2 * pp]), last)
+        _grid_template(tb, masks[pp:2 * pp], mb,
+                       [int(o) for o in offs[pp:2 * pp]],
+                       int(offs[2 * pp + 1]), last, reverse=True,
+                       record=per_mb)
+        # the last microbatch's backward compute nodes, in insertion order
+        # (= reverse-stage = gradient-availability order), collected from
+        # the wiring itself so empty stages can't skew the selection
+        last_bwd = [i for i in per_mb[mb - 1]
+                    if not tb.streams[i].startswith("comm")]
+    else:
+        raise ValueError(f"unknown template kind {kind!r}")
+    if kind in ("train1", "trainpp"):
+        n_buckets = key[3] if kind == "train1" else key[4]
+        opt_deps: List[int] = list(tb.tail())
+        if n_buckets and last_bwd:
+            boff = int(offs[-3])          # bucket component precedes opt
+            anchors = _bucket_anchors(last_bwd, n_buckets)
+            bids = [tb.add(boff + i, og.COMM_STREAM, (anchors[i],))
+                    for i in range(n_buckets)]
+            opt_deps = ([opt_deps[-1], bids[-1]] if opt_deps
+                        else [bids[-1]])
+        tb.add(int(offs[-2]), og.COMPUTE_STREAM, tuple(opt_deps))
+    return GraphTemplate(key=key, slots=np.array(tb.slots, dtype=np.int64),
+                         streams=tb.streams, deps=tb.deps,
+                         n_slots=int(offs[-1]), slot_class=slot_class,
+                         last_bwd_ids=tuple(last_bwd))
+
+
+class _SweepBuilder:
+    """Shared working state for one sweep (or one graph build): unique op
+    components — stage op lists, backward mirrors, p2p/bucket/optimizer
+    ops — cached so specs share both enumeration and (later) pricing, plus
+    the template cache keyed on structural shape."""
+
+    def __init__(self, cfg: C.ModelConfig, batch: int, seq: int, dt: str):
+        self.cfg, self.batch, self.seq, self.dt = cfg, int(batch), int(seq), dt
+        self.uniq_ops: List[List[og.Op]] = []
+        self.uniq_masks: List[Tuple[bool, ...]] = []
+        self._comp: Dict[Tuple, int] = {}
+        self._stage_sets: Dict[Tuple, Tuple[List[int], Tuple, float]] = {}
+        self._segments: Dict[int, Tuple] = {}
+        self._templates: Dict[Tuple, GraphTemplate] = {}
+
+    # ----- unique components -----
+    def _component(self, key: Tuple, make) -> int:
+        ci = self._comp.get(key)
+        if ci is None:
+            ops = list(make())
+            ci = len(self.uniq_ops)
+            self.uniq_ops.append(ops)
+            self.uniq_masks.append(
+                tuple(isinstance(o, CollectiveOp) for o in ops))
+            self._comp[key] = ci
+        return ci
+
+    def _flat(self, spec: og.ParallelismSpec, batch: int) -> int:
+        """One serialized-chain component (``enumerate_parallel_ops`` at
+        ``batch``), keyed on the per-rank batch shard — dp enters the op
+        list only through ⌈batch/dp⌉."""
+        bsh = _ceil_div(batch, spec.dp)
+        return self._component(
+            ("flat", bsh, spec.tp, spec.pp, spec.act_mode),
+            lambda: og.enumerate_parallel_ops(self.cfg, batch, self.seq,
+                                              spec, dtype=self.dt))
+
+    def _stages(self, bmb: int, spec: og.ParallelismSpec
+                ) -> Tuple[List[int], Tuple, float]:
+        key = ("stages", bmb, spec.tp, spec.pp, spec.act_mode)
+        hit = self._stage_sets.get(key)
+        if hit is None:
+            segs = self._segments.get(bmb)
+            if segs is None:
+                segs = og.layer_segments(self.cfg, bmb, self.seq,
+                                         dtype=self.dt)
+                self._segments[bmb] = segs
+            stages, hid_bytes = _stage_ops(self.cfg, bmb, self.seq, spec,
+                                           self.dt, segments=segs)
+            idxs = [self._component(key + (s,), lambda ops=ops: ops)
+                    for s, ops in enumerate(stages)]
+            hit = (idxs, tuple(self.uniq_masks[i] for i in idxs), hid_bytes)
+            self._stage_sets[key] = hit
+        return hit
+
+    def _bwd(self, fwd_idx: int, ratio: float) -> int:
+        return self._component(
+            ("bwd", fwd_idx, ratio),
+            lambda: _backward_ops(self.uniq_ops[fwd_idx], ratio))
+
+    def _p2p(self, prefix: str, pp: int, hid_bytes: float,
+             reverse: bool) -> int:
+        rng = range(pp - 1) if reverse else range(1, pp)
+        return self._component(
+            ("p2p", prefix, pp, hid_bytes),
+            lambda: [CollectiveOp(f"{prefix}.s{s}", "p2p", hid_bytes, 2,
+                                  dtype=self.dt) for s in rng])
+
+    def _bucket_shape(self, spec: og.ParallelismSpec,
+                      train: TrainingStepSpec) -> Tuple[int, float, float]:
+        """(n_buckets, grad_bytes, bucket_bytes); no buckets under dp=1 —
+        computable per spec without building any graph."""
+        if spec.dp == 1:
+            return 0, 0.0, 0.0
+        grad_bytes = (self.cfg.param_count()
+                      / (spec.tp * spec.pp)) * dtype_bytes(self.dt)
+        bucket_bytes = train.bucket_mb * 2 ** 20
+        n = max(int(math.ceil(grad_bytes / bucket_bytes)), 1)
+        return n, grad_bytes, bucket_bytes
+
+    def _buckets(self, grad_bytes: float, bucket_bytes: float,
+                 dp: int) -> int:
+        n = max(int(math.ceil(grad_bytes / bucket_bytes)), 1)
+        return self._component(
+            ("buckets", grad_bytes, bucket_bytes, dp),
+            lambda: [CollectiveOp(
+                f"grad.bucket{i}.all_reduce", "all_reduce",
+                float(min(bucket_bytes, grad_bytes - i * bucket_bytes)),
+                dp, dtype=self.dt) for i in range(n)])
+
+    # ----- per-spec plan -----
+    def spec_plan(self, spec: og.ParallelismSpec,
+                  train: Optional[TrainingStepSpec]
+                  ) -> Tuple[GraphTemplate, List[int]]:
+        """The (template, component list) pair for one spec: components
+        concatenate (in order) into the template's slot vector."""
+        dp, tp, pp, mb = spec.dp, spec.tp, spec.pp, spec.microbatches
+        bmb = _ceil_div(_ceil_div(self.batch, dp), mb)
+        if train is None:
+            if mb == 1:
+                ci = self._flat(spec, self.batch)
+                return self._template(("chain", self.uniq_masks[ci]),
+                                      [ci], [_CLS_FWD])
+            if pp == 1:
+                chunk = dataclasses.replace(spec, microbatches=1)
+                ci = self._flat(chunk, bmb * dp)
+                return self._template(("chunks", mb, self.uniq_masks[ci]),
+                                      [ci], [_CLS_FWD])
+            idxs, masks, hid = self._stages(bmb, spec)
+            pi = self._p2p("pp.act_p2p", pp, hid, reverse=False)
+            return self._template(("grid", pp, mb, masks), idxs + [pi],
+                                  [_CLS_FWD] * (pp + 1))
+        n_buckets, grad_bytes, bucket_bytes = self._bucket_shape(spec, train)
+        if pp == 1:
+            chunk = dataclasses.replace(spec, microbatches=1)
+            fi = self._flat(chunk, bmb * dp)
+            bi = self._bwd(fi, train.bwd_fwd_ratio)
+            comps = [fi, bi]
+            classes = [_CLS_FWD, _CLS_BWD]
+            key: Tuple = ("train1", mb, self.uniq_masks[fi], n_buckets)
+        else:
+            idxs, masks, hid = self._stages(bmb, spec)
+            bidxs = [self._bwd(i, train.bwd_fwd_ratio) for i in idxs]
+            fpi = self._p2p("pp.act_p2p", pp, hid, reverse=False)
+            bpi = self._p2p("pp.grad_p2p", pp, hid, reverse=True)
+            comps = idxs + bidxs + [fpi, bpi]
+            classes = ([_CLS_FWD] * pp + [_CLS_BWD] * pp
+                       + [_CLS_FWD, _CLS_BWD])
+            key = ("trainpp", pp, mb, masks, n_buckets)
+        if n_buckets:
+            comps.append(self._buckets(grad_bytes, bucket_bytes, dp))
+            classes.append(_CLS_BWD)
+        comps.append(self._component(
+            ("opt", train.optimizer, tp * pp),
+            lambda: [_optimizer_op(self.cfg, spec, train)]))
+        classes.append(_CLS_OPT)
+        return self._template(key, comps, classes)
+
+    def _template(self, key: Tuple, comps: List[int],
+                  classes: List[int]) -> Tuple[GraphTemplate, List[int]]:
+        tpl = self._templates.get(key)
+        if tpl is None:
+            tpl = _build_template(key, [self.uniq_masks[c] for c in comps],
+                                  classes)
+            self._templates[key] = tpl
+        return tpl, comps
+
+    def slot_ops(self, comps: Sequence[int]) -> List[og.Op]:
+        """The concrete per-spec slot op list (component concatenation)."""
+        return [op for c in comps for op in self.uniq_ops[c]]
 
 
 def build_parallel_graph(cfg: C.ModelConfig, batch: int, seq: int,
@@ -336,21 +806,16 @@ def build_parallel_graph(cfg: C.ModelConfig, batch: int, seq: int,
     * ``microbatches > 1, pp > 1`` — the pipeline grid (bubble emerges).
     * ``microbatches > 1, pp == 1`` — sequential chunked execution
       (gradient-accumulation-style forward).
-    """
+
+    The multi-microbatch families are instantiated from the shared
+    ``GraphTemplate`` layer, so this per-spec path and ``sweep_strategies``
+    can never disagree on wiring."""
     if spec.microbatches == 1:
         return og.OpGraph.chain(
             og.enumerate_parallel_ops(cfg, batch, seq, spec, dtype=dtype))
-    if spec.pp > 1:
-        return _pipeline_graph(cfg, batch, seq, spec, dtype)
-    bsh = _ceil_div(batch, spec.dp)
-    bmb = _ceil_div(bsh, spec.microbatches)
-    chunk_spec = dataclasses.replace(spec, microbatches=1)
-    chunk = og.enumerate_parallel_ops(cfg, bmb * spec.dp, seq, chunk_spec,
-                                      dtype=dtype)
-    g = og.OpGraph()
-    for _ in range(spec.microbatches):
-        g.add_chain(chunk, deps=g.tail())
-    return g
+    b = _SweepBuilder(cfg, batch, seq, dtype or "float32")
+    tpl, comps = b.spec_plan(spec, None)
+    return _instantiate(tpl, b.slot_ops(comps))
 
 
 # ---------------------------------------------------------------------------
@@ -369,25 +834,6 @@ def _backward_ops(fwd_ops: Sequence[og.Op], ratio: float) -> List[og.Op]:
             out.append(dataclasses.replace(op, name=f"bwd.{op.name}",
                                            count=op.count * ratio))
     return out
-
-
-def _grad_buckets(g: og.OpGraph, bwd_ids: Sequence[int], grad_bytes: float,
-                  bucket_bytes: float, dp: int, dt: str) -> List[int]:
-    """Append the bucketed data-parallel gradient all-reduce: bucket ``i``
-    becomes ready once the first ``(i+1)/n`` of the (reverse-order) backward
-    nodes finish — DDP's reverse-registration bucketing, anchored
-    structurally so the overlap emerges from the schedule."""
-    n_buckets = max(int(math.ceil(grad_bytes / bucket_bytes)), 1)
-    ids: List[int] = []
-    nb = len(bwd_ids)
-    for i in range(n_buckets):
-        nbytes = min(bucket_bytes, grad_bytes - i * bucket_bytes)
-        anchor = bwd_ids[min(nb - 1, _ceil_div((i + 1) * nb, n_buckets) - 1)]
-        ids.append(g.add(
-            CollectiveOp(f"grad.bucket{i}.all_reduce", "all_reduce",
-                         float(nbytes), dp, dtype=dt),
-            deps=(anchor,)))
-    return ids
 
 
 def _optimizer_op(cfg: C.ModelConfig, spec: og.ParallelismSpec,
@@ -409,54 +855,19 @@ def build_training_graph(cfg: C.ModelConfig, batch: int, seq: int,
     """One optimizer step as an ``OpGraph``: forward + backward (pipelined
     per microbatch under ``pp > 1``, GPipe-style flush), the bucketed
     data-parallel gradient all-reduce overlapping the last microbatch's
-    backward, and the optimizer update."""
+    backward, and the optimizer update.
+
+    Instantiated from the shared ``GraphTemplate`` layer: gradient buckets
+    anchor to the last microbatch's backward compute nodes COLLECTED FROM
+    THE WIRING CALLBACKS (``_grid_template``'s ``record``), never from
+    per-microbatch node-count arithmetic — an empty pipeline stage
+    (``pp`` > layer count) contributes only hand-off nodes and would skew
+    any count-based selection."""
     spec = spec or og.ParallelismSpec()
     train = train or TrainingStepSpec()
-    dt = dtype or "float32"
-    mb, pp, dp = spec.microbatches, spec.pp, spec.dp
-    bsh = _ceil_div(batch, dp)
-    bmb = _ceil_div(bsh, mb)
-    g = og.OpGraph()
-    last_bwd_ids: List[int] = []
-
-    if pp == 1:
-        chunk_spec = dataclasses.replace(spec, microbatches=1)
-        fwd = og.enumerate_parallel_ops(cfg, bmb * dp, seq, chunk_spec,
-                                        dtype=dt)
-        bwd = _backward_ops(fwd, train.bwd_fwd_ratio)
-        for m in range(mb):
-            g.add_chain(fwd, deps=g.tail())
-            ids = g.add_chain(bwd, deps=g.tail())
-            if m == mb - 1:
-                last_bwd_ids = [i for i in ids
-                                if not isinstance(g.nodes[i].op,
-                                                  CollectiveOp)]
-    else:
-        stages, hid_bytes = _stage_ops(cfg, bmb, seq, spec, dt)
-        bwd_stages = [_backward_ops(s, train.bwd_fwd_ratio) for s in stages]
-        last_in_stage: List[Optional[int]] = [None] * pp
-        # forward grid, then backward grid in reverse stage order (GPipe
-        # flush: per-stage streams serialize bwd after that stage's fwd)
-        _add_pipeline_grid(g, stages, hid_bytes, mb, dt, last_in_stage)
-        n_fwd = len(g)
-        _add_pipeline_grid(g, bwd_stages, hid_bytes, mb, dt, last_in_stage,
-                           reverse=True, p2p_prefix="pp.grad_p2p")
-        # the last microbatch's backward compute nodes, in insertion order
-        # (= reverse-stage = gradient-availability order)
-        mb_nodes = (len(g) - n_fwd) // mb
-        last_bwd_ids = [i for i in range(len(g) - mb_nodes, len(g))
-                        if not isinstance(g.nodes[i].op, CollectiveOp)]
-
-    opt_deps: List[int] = list(g.tail())
-    if dp > 1 and last_bwd_ids:
-        grad_bytes = (cfg.param_count() / (spec.tp * pp)) * dtype_bytes(dt)
-        bucket_ids = _grad_buckets(g, last_bwd_ids, grad_bytes,
-                                   train.bucket_mb * 2 ** 20, dp, dt)
-        opt_deps = [opt_deps[-1], bucket_ids[-1]] if opt_deps else \
-            [bucket_ids[-1]]
-    g.add(_optimizer_op(cfg, spec, train), stream="compute",
-          deps=tuple(opt_deps))
-    return g
+    b = _SweepBuilder(cfg, batch, seq, dtype or "float32")
+    tpl, comps = b.spec_plan(spec, train)
+    return _instantiate(tpl, b.slot_ops(comps))
 
 
 # ---------------------------------------------------------------------------
@@ -484,6 +895,180 @@ def schedule_step(predictor, cfg: C.ModelConfig, batch: int, seq: int,
 
 
 # ---------------------------------------------------------------------------
+# vectorized strategy sweep
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StrategySweep:
+    """Vectorized pricing of many parallelism strategies over one
+    (model, batch, seq, device): every array is aligned with ``specs``.
+
+    ``seconds`` is the schedule makespan (``Schedule.makespan``); the
+    remaining fields mirror the scalar ``Schedule`` properties.  Training
+    sweeps (``trains`` set) additionally carry the fwd/bwd/optimizer
+    busy-time split that ``LatencyService.latency_train`` reports.
+    ``cached``, when present, is the service layer's per-spec cache-hit
+    mask."""
+    specs: List[og.ParallelismSpec]
+    seconds: np.ndarray
+    compute_seconds: np.ndarray
+    comm_seconds: np.ndarray
+    exposed_comm_seconds: np.ndarray
+    sequential_seconds: np.ndarray
+    bubble_share: np.ndarray
+    max_stream_busy: np.ndarray
+    trains: Optional[List[TrainingStepSpec]] = None
+    fwd_seconds: Optional[np.ndarray] = None
+    bwd_seconds: Optional[np.ndarray] = None
+    optimizer_seconds: Optional[np.ndarray] = None
+    cached: Optional[np.ndarray] = None
+
+    def __len__(self) -> int:
+        return len(self.specs)
+
+    def bounds_ok(self, rel: float = 1e-9) -> np.ndarray:
+        """``Schedule.bounds_ok`` batch-wise: busiest stream <= makespan <=
+        sequential sum, per spec."""
+        return ((self.max_stream_busy <= self.seconds * (1 + rel))
+                & (self.seconds <= self.sequential_seconds * (1 + rel)))
+
+    def best(self) -> int:
+        """Index of the fastest spec."""
+        return int(np.argmin(self.seconds))
+
+    def tag(self, i: int) -> str:
+        t = self.specs[i].tag()
+        if self.trains is not None:
+            t += f"+{self.trains[i].tag()}"
+        return t
+
+    def row(self, i: int) -> dict:
+        """One spec's metrics as a plain dict (report/JSON row)."""
+        out = {"spec": self.tag(i),
+               "seconds": float(self.seconds[i]),
+               "compute_seconds": float(self.compute_seconds[i]),
+               "comm_seconds": float(self.comm_seconds[i]),
+               "exposed_comm_seconds": float(self.exposed_comm_seconds[i]),
+               "sequential_seconds": float(self.sequential_seconds[i]),
+               "bubble_share": float(self.bubble_share[i]),
+               "max_stream_busy": float(self.max_stream_busy[i])}
+        if self.trains is not None:
+            out.update(fwd_seconds=float(self.fwd_seconds[i]),
+                       bwd_seconds=float(self.bwd_seconds[i]),
+                       optimizer_seconds=float(self.optimizer_seconds[i]))
+        if self.cached is not None:
+            out["cached"] = bool(self.cached[i])
+        return out
+
+    def rows(self) -> List[dict]:
+        return [self.row(i) for i in range(len(self))]
+
+
+# Metric field names shared with the serving layer's cache entries
+SWEEP_METRICS = ("seconds", "compute_seconds", "comm_seconds",
+                 "exposed_comm_seconds", "sequential_seconds",
+                 "bubble_share", "max_stream_busy")
+TRAIN_METRICS = ("fwd_seconds", "bwd_seconds", "optimizer_seconds")
+
+
+def sweep_strategies(predictor, cfg: C.ModelConfig, batch: int, seq: int,
+                     specs: Sequence[og.ParallelismSpec], *,
+                     train=None, dtype: Optional[str] = None
+                     ) -> StrategySweep:
+    """Price many parallelism strategies in one vectorized pass.
+
+    Three stages, amortizing everything the per-spec loop repeats:
+
+    1. **enumerate** — unique op components (stage op lists, backward
+       mirrors, p2p/bucket/optimizer ops) are built once and shared across
+       every spec that needs them (``_SweepBuilder``);
+    2. **price** — every unique op goes through ONE vectorized predictor
+       call (``BatchPredictor.predict_ops_seconds``; a scalar predictor
+       works too, just without the vectorization win);
+    3. **simulate** — specs are grouped by structural ``GraphTemplate``
+       (same (pp, mb, collective-position, bucket-count) shape) and each
+       group is walked once by ``simulate_batch`` with per-spec durations
+       bound into the template slots.
+
+    Per-spec results match ``schedule_parallel`` / ``schedule_step`` to
+    <= 1e-9 relative — the only divergence is float re-association when
+    fused serial runs sum their durations — pinned by tests/test_sweep.py.
+
+    ``train`` is ``None`` (forward sweep), one shared ``TrainingStepSpec``,
+    or a per-spec sequence aligned with ``specs`` (so a (spec × bucket_mb)
+    grid is a single call)."""
+    dt = dtype or "float32"
+    specs = list(specs)
+    if train is None:
+        trains = None
+    elif isinstance(train, TrainingStepSpec):
+        trains = [train] * len(specs)
+    else:
+        trains = list(train)
+        if len(trains) != len(specs):
+            raise ValueError(f"train sequence length {len(trains)} != "
+                             f"{len(specs)} specs")
+        if any(t is None for t in trains):
+            raise ValueError("per-spec train sequence must not mix None "
+                             "with TrainingStepSpecs")
+    b = _SweepBuilder(cfg, batch, seq, dt)
+    plans = [b.spec_plan(sp, trains[i] if trains is not None else None)
+             for i, sp in enumerate(specs)]
+    all_ops = [op for ops in b.uniq_ops for op in ops]
+    if not all_ops:
+        secs = np.zeros(0)
+    elif hasattr(predictor, "predict_ops_seconds"):
+        secs = np.asarray(predictor.predict_ops_seconds(all_ops),
+                          dtype=np.float64)
+    else:
+        secs = np.array([r.seconds
+                         for r in predictor.predict_ops(all_ops)[1]])
+    offs = np.cumsum([0] + [len(ops) for ops in b.uniq_ops])
+    comp_secs = [secs[offs[i]:offs[i + 1]]
+                 for i in range(len(b.uniq_ops))]
+    S = len(specs)
+    out = {name: np.zeros(S) for name in SWEEP_METRICS + TRAIN_METRICS}
+    groups: Dict[Tuple, List[int]] = {}
+    for i, (tpl, _) in enumerate(plans):
+        groups.setdefault(tpl.key, []).append(i)
+    for idxs in groups.values():
+        tpl = plans[idxs[0]][0]
+        D = np.stack([np.concatenate([comp_secs[c] for c in plans[i][1]])
+                      for i in idxs])
+        metrics = tpl.simulate_slots(D)
+        for name, vec in metrics.items():
+            out[name][idxs] = vec
+    train_kw = {name: out.pop(name) for name in TRAIN_METRICS}
+    if trains is None:
+        train_kw = {name: None for name in TRAIN_METRICS}
+    return StrategySweep(specs=specs, trains=trains, **out, **train_kw)
+
+
+def strategy_grid(*, dp: Sequence[int] = (1,), tp: Sequence[int] = (1,),
+                  pp: Sequence[int] = (1,),
+                  microbatches: Sequence[int] = (1,),
+                  act_modes: Sequence[str] = ("tp",),
+                  max_world: Optional[int] = None
+                  ) -> List[og.ParallelismSpec]:
+    """Cartesian ``ParallelismSpec`` grid for sweeps, in deterministic
+    (act_mode, dp, tp, pp, microbatches) nesting order.  ``max_world``
+    drops specs needing more devices than the fleet has."""
+    out: List[og.ParallelismSpec] = []
+    for a in act_modes:
+        for d in dp:
+            for t in tp:
+                for p in pp:
+                    for m in microbatches:
+                        s = og.ParallelismSpec(dp=int(d), tp=int(t),
+                                               pp=int(p), act_mode=a,
+                                               microbatches=int(m))
+                        if max_world is not None and s.world > max_world:
+                            continue
+                        out.append(s)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # stage-level pipeline (partition planners)
 # ---------------------------------------------------------------------------
 
@@ -497,7 +1082,7 @@ def pipeline_stage_schedule(stage_seconds: Sequence[float],
     microbatch per link — the caller prices it at the microbatch batch
     size (``plan_stages_model`` recomputes ``activation_comm_cost`` there),
     so the α latency term is paid per transfer, exactly like
-    ``_pipeline_graph``'s per-microbatch p2p ops.  The partition planners
+    the op-level grid's per-microbatch p2p ops.  The partition planners
     report this makespan as the plan's end-to-end cost."""
     mb = max(int(microbatches), 1)
     pp = len(stage_seconds)

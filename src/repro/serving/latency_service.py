@@ -59,7 +59,10 @@ class ParallelLatencyResult(_CommShareMixin):
     with the compute/communication split (``comm_share`` is the planning
     signal: the fraction of the end-to-end time spent in collectives).
     ``seconds`` is the schedule MAKESPAN; with micro-batched overlap it can
-    be smaller than ``compute_seconds + comm_seconds`` (total work)."""
+    be smaller than ``compute_seconds + comm_seconds`` (total work).
+    ``exposed_comm_seconds`` is the wall-clock span during which no compute
+    runs anywhere — communication/bubble time not hidden behind compute
+    (``Schedule.exposed_comm_seconds``)."""
     model: str
     device: str
     dtype: str
@@ -73,6 +76,7 @@ class ParallelLatencyResult(_CommShareMixin):
     seconds: float
     compute_seconds: float
     comm_seconds: float
+    exposed_comm_seconds: float = 0.0
     microbatches: int = 1
     cached: bool = False
 
@@ -103,6 +107,21 @@ class TrainLatencyResult(_CommShareMixin):
     optimizer_seconds: float
     exposed_comm_seconds: float
     cached: bool = False
+
+
+def _sched_entry(sched) -> dict:
+    """One scalar ``Schedule`` as the full sweep-metric cache entry
+    (``schedule.SWEEP_METRICS`` field set) — the same shape
+    ``sweep_parallel`` persists, so scalar and sweep queries hit each
+    other's entries."""
+    busy = sched.busy()
+    return {"seconds": sched.makespan,
+            "compute_seconds": sched.compute_seconds,
+            "comm_seconds": sched.comm_seconds,
+            "exposed_comm_seconds": sched.exposed_comm_seconds,
+            "sequential_seconds": sched.sequential_seconds,
+            "bubble_share": sched.bubble_share,
+            "max_stream_busy": max(busy.values()) if busy else 0.0}
 
 
 class LatencyService:
@@ -181,12 +200,14 @@ class LatencyService:
         spec = ParallelismSpec(dp=dp, tp=tp, pp=pp, act_mode=act_mode,
                                microbatches=microbatches)
 
-        def result(seconds, compute, comm, cached):
+        def result(d, cached):
             return ParallelLatencyResult(
                 model=cfg.name, device=pred.device, dtype=dtype or "float32",
                 batch=int(batch), seq=int(seq), dp=int(dp), tp=int(tp),
                 pp=int(pp), act_mode=act_mode, world=spec.world,
-                seconds=seconds, compute_seconds=compute, comm_seconds=comm,
+                seconds=d["seconds"], compute_seconds=d["compute_seconds"],
+                comm_seconds=d["comm_seconds"],
+                exposed_comm_seconds=d["exposed_comm_seconds"],
                 microbatches=int(microbatches), cached=cached)
 
         key = PredictionCache.make_key(config_key(cfg), pred.device, dtype,
@@ -195,15 +216,13 @@ class LatencyService:
         # a persisted entry missing expected fields (foreign writer,
         # hand-edited file) is treated as a miss, not a crash
         if isinstance(hit, dict) and {"seconds", "compute_seconds",
-                                      "comm_seconds"} <= hit.keys():
-            return result(hit["seconds"], hit["compute_seconds"],
-                          hit["comm_seconds"], True)
+                                      "comm_seconds",
+                                      "exposed_comm_seconds"} <= hit.keys():
+            return result(hit, True)
         sched = pred.schedule_parallel(cfg, batch, seq, spec, dtype=dtype)
-        comm = sched.comm_seconds
-        self.cache.put(key, {"seconds": sched.makespan,
-                             "compute_seconds": sched.compute_seconds,
-                             "comm_seconds": comm})
-        return result(sched.makespan, sched.compute_seconds, comm, False)
+        d = _sched_entry(sched)
+        self.cache.put(key, d)
+        return result(d, False)
 
     def latency_train(self, model: Union[str, ModelConfig], batch: int,
                       seq: int, dp: int = 1, tp: int = 1, pp: int = 1,
@@ -258,12 +277,91 @@ class LatencyService:
                 opt += r.seconds
             else:
                 fwd += r.seconds
-        d = {"seconds": sched.makespan, "fwd_seconds": fwd,
-             "bwd_seconds": bwd, "comm_seconds": sched.comm_seconds,
-             "optimizer_seconds": opt,
-             "exposed_comm_seconds": sched.exposed_comm_seconds}
+        d = _sched_entry(sched)
+        d.update(fwd_seconds=fwd, bwd_seconds=bwd, optimizer_seconds=opt)
         self.cache.put(key, d)
         return result(d, False)
+
+    def sweep_parallel(self, model: Union[str, ModelConfig], batch: int,
+                       seq: int, specs, dtype: Optional[str] = None,
+                       device: Optional[str] = None):
+        """Price MANY forward parallelism strategies in one vectorized
+        pass (``schedule.sweep_strategies``): cached specs are answered
+        from their ``latency_parallel`` entries, the misses go through a
+        single template/bind/simulate-batch call, and every fresh result
+        is written back under its spec-tagged key — so a follow-up
+        ``latency_parallel`` on any swept spec is a cache hit.  Returns a
+        ``schedule.StrategySweep`` with the per-spec ``cached`` mask."""
+        from repro.core import schedule as S
+        cfg = self._resolve(model)
+        pred = self.predictor.for_device(device)
+        specs = list(specs)
+        keys = [PredictionCache.make_key(config_key(cfg), pred.device,
+                                         dtype, batch, seq, spec=sp.tag())
+                for sp in specs]
+        return self._sweep(pred, cfg, batch, seq, specs, keys,
+                           S.SWEEP_METRICS, dtype, trains=None)
+
+    def sweep_train(self, model: Union[str, ModelConfig], batch: int,
+                    seq: int, specs, train=None,
+                    dtype: Optional[str] = None,
+                    device: Optional[str] = None):
+        """``sweep_parallel`` for TRAINING steps: each spec priced as one
+        optimizer step (fwd + bwd + bucketed gradient all-reduce +
+        optimizer update).  ``train`` is None (default ``TrainingStepSpec``),
+        one shared spec, or a per-spec sequence — so a (strategy ×
+        bucket_mb) grid is a single call.  Entries share keys (and the
+        field superset) with ``latency_train``."""
+        from repro.core import schedule as S
+        cfg = self._resolve(model)
+        pred = self.predictor.for_device(device)
+        specs = list(specs)
+        if train is None:
+            train = S.TrainingStepSpec()
+        if isinstance(train, S.TrainingStepSpec):
+            trains = [train] * len(specs)
+        else:
+            trains = list(train)
+            if len(trains) != len(specs):
+                raise ValueError(f"train sequence length {len(trains)} != "
+                                 f"{len(specs)} specs")
+        keys = [PredictionCache.make_key(
+                    config_key(cfg), pred.device, dtype, batch, seq,
+                    spec=f"{sp.tag()}+{tr.tag()}+train")
+                for sp, tr in zip(specs, trains)]
+        return self._sweep(pred, cfg, batch, seq, specs, keys,
+                           S.SWEEP_METRICS + S.TRAIN_METRICS, dtype,
+                           trains=trains)
+
+    def _sweep(self, pred, cfg, batch, seq, specs, keys, fields, dtype,
+               trains):
+        """Shared cache-or-compute core of ``sweep_parallel`` /
+        ``sweep_train``: answer hits from the cache, vector-price the
+        misses in ONE ``sweep_strategies`` call, persist them."""
+        from repro.core import schedule as S
+        need = set(fields)
+        hits = [self.cache.get(k) for k in keys]
+        cached = np.array([isinstance(h, dict) and need <= h.keys()
+                           for h in hits], dtype=bool)
+        out = {name: np.zeros(len(specs)) for name in fields}
+        for i, h in enumerate(hits):
+            if cached[i]:
+                for name in fields:
+                    out[name][i] = h[name]
+        miss = [i for i in range(len(specs)) if not cached[i]]
+        if miss:
+            sw = pred.sweep_strategies(
+                cfg, batch, seq, [specs[i] for i in miss],
+                train=[trains[i] for i in miss] if trains else None,
+                dtype=dtype)
+            for j, i in enumerate(miss):
+                entry = {name: float(getattr(sw, name)[j])
+                         for name in fields}
+                self.cache.put(keys[i], entry)
+                for name in fields:
+                    out[name][i] = entry[name]
+        return S.StrategySweep(specs=specs, trains=trains, cached=cached,
+                               **out)
 
     def latency_breakdown(self, model: Union[str, ModelConfig], batch: int,
                           seq: int, dtype: Optional[str] = None,

@@ -343,3 +343,27 @@ def test_parallel_scaling_dry_run_rows():
     assert by[("tp", 1)]["seconds"] == by[("pp", 1)]["seconds"]
     assert by[("tp", 2)]["comm_share"] > 0
     assert by[("tp", 1)]["speedup"] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# dtype sizing policy (warn-once + strict, like DeviceModel.peak)
+# ---------------------------------------------------------------------------
+
+def test_dtype_bytes_known_and_strict(monkeypatch):
+    import warnings
+    assert CC.dtype_bytes("float32") == 4 and CC.dtype_bytes("bfloat16") == 2
+    with pytest.raises(KeyError, match="unknown dtype"):
+        CC.dtype_bytes("floa32", strict=True)
+    monkeypatch.setenv(CC.STRICT_DTYPE_ENV, "1")
+    with pytest.raises(KeyError):
+        CC.dtype_bytes("floa32")
+    monkeypatch.setenv(CC.STRICT_DTYPE_ENV, "0")
+    CC._WARNED_DTYPES.discard("floa32")
+    with pytest.warns(UserWarning, match="assuming float32"):
+        assert CC.dtype_bytes("floa32") == 4
+    # warn-once: a repeat lookup of the same dtype is silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert CC.dtype_bytes("floa32") == 4
+    # known dtypes never raise, even under strict
+    assert CC.dtype_bytes("fp8", strict=True) == 1

@@ -1,0 +1,303 @@
+"""Vectorized strategy sweep (``schedule.sweep_strategies``): batched
+simulator bit-identity with the scalar walk, golden equivalence of the
+sweep against the per-spec ``schedule_parallel`` / ``schedule_step`` loops
+(<= 1e-9 rel, on two devices), batch-wise bounds and bubble-monotonicity
+invariants, the corrected ``exposed_comm_seconds`` accounting (pinned
+pp>1 worked example where the old definition floored to 0.0), the
+degenerate-stage bucket-anchoring regression, and the service-layer
+``sweep_parallel`` / ``sweep_train`` cache round-trips."""
+import numpy as np
+import pytest
+
+from repro.configs import registry as cr
+from repro.core import calibrate
+from repro.core import collectives as CC
+from repro.core import opgraph as og
+from repro.core import schedule as S
+from repro.core.batch_predict import BatchPredictor
+
+
+@pytest.fixture(scope="module")
+def bp(calibration_store):
+    return BatchPredictor(calibration_store, calibrate.device_name())
+
+
+GRID = S.strategy_grid(dp=(1, 2), tp=(1, 4), pp=(1, 2, 3),
+                       microbatches=(1, 2, 4))
+
+
+def _close(a, b, rel=1e-9, abs_=0.0):
+    np.testing.assert_allclose(a, b, rtol=rel, atol=abs_)
+
+
+# ---------------------------------------------------------------------------
+# the batched simulator kernel
+# ---------------------------------------------------------------------------
+
+def test_simulate_batch_bitwise_matches_scalar():
+    rng = np.random.default_rng(0)
+    n = 40
+    streams = [f"s{int(x)}" for x in rng.integers(0, 4, n)]
+    deps = [tuple(rng.choice(i, size=min(i, int(rng.integers(0, 3))),
+                             replace=False)) for i in range(n)]
+    D = rng.uniform(1e-5, 1e-2, size=(7, n))
+    starts, ends, mk = S.simulate_batch(D, streams, deps)
+    for s in range(D.shape[0]):
+        st, en, m = S.simulate(D[s], streams, deps)
+        assert np.array_equal(starts[s], st)   # bitwise, not approx
+        assert np.array_equal(ends[s], en)
+        assert mk[s] == m
+
+
+def test_simulate_batch_empty_graph():
+    starts, ends, mk = S.simulate_batch(np.zeros((3, 0)), [], [])
+    assert starts.shape == (3, 0) and np.array_equal(mk, np.zeros(3))
+
+
+def test_interval_union():
+    st = np.array([0.0, 1.0, 5.0, 4.0])
+    en = np.array([2.0, 3.0, 6.0, 5.5])
+    assert S._interval_union(st, en) == pytest.approx(5.0)
+    # batched rows are independent
+    u = S._interval_union(np.array([[0.0, 1.0], [0.0, 5.0]]),
+                          np.array([[2.0, 4.0], [1.0, 6.0]]))
+    _close(u, [4.0, 2.0], rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# golden equivalence: sweep == per-spec loop
+# ---------------------------------------------------------------------------
+
+def _golden(pred, cfg, batch, seq, specs):
+    sw = pred.sweep_strategies(cfg, batch, seq, specs)
+    scheds = [pred.schedule_parallel(cfg, batch, seq, sp) for sp in specs]
+    _close(sw.seconds, [s.makespan for s in scheds])
+    _close(sw.compute_seconds, [s.compute_seconds for s in scheds])
+    _close(sw.comm_seconds, [s.comm_seconds for s in scheds])
+    _close(sw.sequential_seconds, [s.sequential_seconds for s in scheds])
+    # exposed/bubble hit exact zeros: rel tolerance + absolute epsilon
+    _close(sw.exposed_comm_seconds,
+           [s.exposed_comm_seconds for s in scheds], rel=1e-6, abs_=1e-12)
+    _close(sw.bubble_share, [s.bubble_share for s in scheds],
+           rel=1e-6, abs_=1e-12)
+    _close(sw.max_stream_busy,
+           [max(s.busy().values()) for s in scheds])
+    assert sw.bounds_ok().all()
+    return sw
+
+
+def test_sweep_matches_per_spec_loop_host(bp):
+    cfg = cr.reduced("qwen2-0.5b")
+    sw = _golden(bp, cfg, 8, 32, GRID)
+    assert len(sw) == len(GRID) and sw.trains is None
+    # makespans are spec-dependent: the sweep isn't collapsing specs
+    assert len(set(np.round(sw.seconds, 12))) > len(GRID) // 2
+
+
+def test_sweep_matches_per_spec_loop_second_device(bp):
+    cfg = cr.reduced("qwen2-0.5b")
+    pred = bp.for_device("a100_80g")
+    specs = S.strategy_grid(dp=(1, 2), tp=(1, 4), pp=(1, 2),
+                            microbatches=(1, 4))
+    _golden(pred, cfg, 8, 32, specs)
+
+
+def test_train_sweep_matches_schedule_step(bp):
+    cfg = cr.reduced("qwen2-0.5b")
+    trains = [S.TrainingStepSpec(bucket_mb=b) for b in (0.5, 25.0)]
+    specs = [sp for sp in S.strategy_grid(dp=(1, 2), tp=(1, 4), pp=(1, 2),
+                                          microbatches=(1, 2))
+             for _ in trains]
+    tr = trains * (len(specs) // len(trains))
+    sw = bp.sweep_strategies(cfg, 8, 32, specs, train=tr)
+    assert sw.trains == tr and sw.bounds_ok().all()
+    for i in range(0, len(specs), 3):      # stride: loop is the slow path
+        sched = bp.schedule_step(cfg, 8, 32, spec=specs[i], train=tr[i])
+        assert sw.seconds[i] == pytest.approx(sched.makespan, rel=1e-9)
+        assert sw.comm_seconds[i] == pytest.approx(sched.comm_seconds,
+                                                   rel=1e-9)
+        fwd = bwd = opt = 0.0
+        for r in sched.rows:
+            if r.kind == "collective":
+                continue
+            if r.name.startswith("bwd."):
+                bwd += r.seconds
+            elif r.name.startswith("opt."):
+                opt += r.seconds
+            else:
+                fwd += r.seconds
+        assert sw.fwd_seconds[i] == pytest.approx(fwd, rel=1e-9)
+        assert sw.bwd_seconds[i] == pytest.approx(bwd, rel=1e-9)
+        assert sw.optimizer_seconds[i] == pytest.approx(opt, rel=1e-9)
+
+
+def test_sweep_bubble_monotone_in_microbatches(bp):
+    cfg = cr.reduced("qwen2-0.5b")
+    specs = [og.ParallelismSpec(pp=4, microbatches=m) for m in (2, 4, 8)]
+    sw = bp.sweep_strategies(cfg, 8, 32, specs)
+    assert sw.bubble_share[0] > sw.bubble_share[1] > sw.bubble_share[2]
+
+
+def test_strategy_grid_count_and_max_world():
+    assert len(GRID) == 2 * 2 * 3 * 3
+    capped = S.strategy_grid(dp=(1, 2), tp=(1, 4), pp=(1, 2, 3),
+                             microbatches=(1,), max_world=4)
+    assert capped and all(s.world <= 4 for s in capped)
+    assert len(capped) < 2 * 2 * 3
+
+
+def test_sweep_scalar_predictor_fallback(calibration_store):
+    """A predictor without ``predict_ops_seconds`` (scalar ``PM2Lat``)
+    still sweeps, through the row-wise fallback."""
+    from repro.core.predictor import PM2Lat
+    pm = PM2Lat(calibration_store, calibrate.device_name())
+    cfg = cr.reduced("qwen2-0.5b")
+    specs = [og.ParallelismSpec(), og.ParallelismSpec(pp=2, microbatches=2)]
+    sw = S.sweep_strategies(pm, cfg, 4, 32, specs)
+    sched = S.schedule_graph(pm, S.build_parallel_graph(cfg, 4, 32,
+                                                        specs[1]))
+    assert sw.seconds[1] == pytest.approx(sched.makespan, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# exposed-comm accounting (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+def test_exposed_comm_pinned_pp2_example():
+    """The docs/parallelism.md exposed-comm worked example: two 40 ms
+    stages, 15 ms per-microbatch hand-off, mb=4.  Stage 1 idles 15 ms
+    waiting for the first hand-off, then 5 ms between chunks twice — but
+    only the leading 10 ms (0..10 relative to stage-1's window) is
+    uncovered by stage-0 compute.  The OLD definition
+    ``max(makespan - compute_seconds, 0)`` read ``max(80 - 80, 0) = 0``
+    here — per-stage busy sums exceeding the makespan floored the signal
+    to zero exactly where overlap planning needs it."""
+    sched = S.pipeline_stage_schedule([40e-3, 40e-3], 15e-3, microbatches=4)
+    assert sched.makespan == pytest.approx(80e-3, rel=1e-12)
+    assert sched.compute_seconds == pytest.approx(80e-3, rel=1e-12)
+    assert sched.comm_seconds == pytest.approx(60e-3, rel=1e-12)
+    assert sched.exposed_comm_seconds == pytest.approx(10e-3, rel=1e-9)
+    assert sched.exposed_comm_seconds <= sched.comm_seconds
+
+
+def test_exposed_comm_nonzero_op_level_pp(bp):
+    """On a real op graph with pp>1 and tp collectives inside each stage,
+    part of the comm is provably exposed (nonzero) — precisely the case
+    the old per-stage-busy-sum definition floored to 0.0 — and the sweep
+    agrees with the scalar schedule."""
+    cfg = cr.reduced("qwen2-0.5b")
+    spec = og.ParallelismSpec(dp=2, tp=4, pp=2, microbatches=4)
+    sched = bp.schedule_parallel(cfg, 8, 32, spec)
+    assert sched.exposed_comm_seconds > 0
+    assert sched.exposed_comm_seconds <= sched.comm_seconds * (1 + 1e-9)
+    sw = bp.sweep_strategies(cfg, 8, 32, [spec])
+    assert sw.exposed_comm_seconds[0] == pytest.approx(
+        sched.exposed_comm_seconds, rel=1e-6)
+
+
+def test_exposed_comm_single_stream_unchanged(bp):
+    """With one compute stream the union equals summed busy time, so the
+    corrected definition reproduces the old ``makespan - compute``."""
+    cfg = cr.reduced("qwen2-0.5b")
+    sched = bp.schedule_parallel(cfg, 8, 32, og.ParallelismSpec(tp=4))
+    assert sched.exposed_comm_seconds == pytest.approx(
+        max(sched.makespan - sched.compute_seconds, 0.0), rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# degenerate-stage bucket anchoring (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+def test_bucket_anchors_with_empty_stages():
+    """pp > layer count leaves middle stages empty; the old
+    ``(len(g) - n_fwd) // mb`` node arithmetic then anchored gradient
+    buckets to non-backward nodes.  Anchors must be backward COMPUTE
+    nodes, and the optimizer must depend on the last bucket."""
+    cfg = cr.reduced("qwen2-0.5b", n_layers=2)
+    spec = og.ParallelismSpec(dp=2, pp=6, microbatches=2)
+    train = S.TrainingStepSpec(bucket_mb=5.0)
+    g = S.build_training_graph(cfg, 8, 32, spec, train)
+    bucket_ids = [i for i, n in enumerate(g.nodes)
+                  if getattr(n.op, "name", "").startswith("grad.bucket")]
+    assert bucket_ids, "dp=2 must emit gradient buckets"
+    for i in bucket_ids:
+        (dep,) = g.nodes[i].deps
+        anchor = g.nodes[dep]
+        assert not isinstance(anchor.op, CC.CollectiveOp)
+        assert anchor.op.name.startswith("bwd."), anchor.op.name
+        assert anchor.stream.startswith("compute")
+    opt = next(n for n in g.nodes
+               if getattr(n.op, "name", "") == "opt.update")
+    assert bucket_ids[-1] in opt.deps
+    # and the schedule still respects its bounds
+    sched = S.schedule_graph(_Zero(), g)
+    assert sched.bounds_ok()
+
+
+class _Zero:
+    """Minimal predictor stub: prices every op at a fixed 1us."""
+    def predict_ops(self, ops):
+        from repro.core.predictor import PredictionRow
+        rows = [PredictionRow(getattr(o, "name", "?"),
+                              getattr(o, "kind", "compute"), 1e-6, "stub")
+                for o in ops]
+        return sum(r.seconds for r in rows), rows
+
+
+# ---------------------------------------------------------------------------
+# service layer: sweep_parallel / sweep_train caching
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def svc(calibration_store, tmp_path):
+    from repro.serving.latency_service import LatencyService
+    return LatencyService(calibration_store, calibrate.device_name(),
+                          cache_path=str(tmp_path / "cache.json"))
+
+
+def test_service_sweep_parallel_round_trip(svc):
+    cfg = cr.reduced("qwen2-0.5b")
+    specs = S.strategy_grid(dp=(1, 2), pp=(1, 2), microbatches=(1, 2))
+    sw = svc.sweep_parallel(cfg, 4, 32, specs)
+    assert not sw.cached.any()
+    sw2 = svc.sweep_parallel(cfg, 4, 32, specs)
+    assert sw2.cached.all()
+    assert np.array_equal(sw.seconds, sw2.seconds)
+    assert np.array_equal(sw.exposed_comm_seconds, sw2.exposed_comm_seconds)
+    # scalar endpoint hits the sweep-written entry, with identical fields
+    r = svc.latency_parallel(cfg, 4, 32, dp=2, pp=2, microbatches=2)
+    assert r.cached
+    i = specs.index(og.ParallelismSpec(dp=2, pp=2, microbatches=2))
+    assert r.seconds == sw.seconds[i]
+    assert r.exposed_comm_seconds == sw.exposed_comm_seconds[i]
+
+
+def test_service_sweep_train_round_trip(svc):
+    cfg = cr.reduced("qwen2-0.5b")
+    specs = S.strategy_grid(dp=(1, 2), microbatches=(1, 2))
+    sw = svc.sweep_train(cfg, 4, 32, specs,
+                         train=S.TrainingStepSpec(bucket_mb=5.0))
+    assert not sw.cached.any() and sw.fwd_seconds is not None
+    sw2 = svc.sweep_train(cfg, 4, 32, specs,
+                          train=S.TrainingStepSpec(bucket_mb=5.0))
+    assert sw2.cached.all() and np.array_equal(sw.seconds, sw2.seconds)
+    # scalar train endpoint round-trips against sweep-written entries
+    t = svc.latency_train(cfg, 4, 32, dp=2, bucket_mb=5.0)
+    assert t.cached and t.seconds == sw.seconds[specs.index(
+        og.ParallelismSpec(dp=2))]
+    # and a scalar-written entry satisfies a later sweep
+    svc.latency_train(cfg, 4, 32, dp=2, microbatches=4, bucket_mb=5.0)
+    sw3 = svc.sweep_train(cfg, 4, 32,
+                          [og.ParallelismSpec(dp=2, microbatches=4)],
+                          train=S.TrainingStepSpec(bucket_mb=5.0))
+    assert sw3.cached.all()
+
+
+def test_service_sweep_partial_cache(svc):
+    cfg = cr.reduced("qwen2-0.5b")
+    svc.latency_parallel(cfg, 4, 32, tp=4)
+    specs = [og.ParallelismSpec(tp=4), og.ParallelismSpec(tp=4, pp=2)]
+    sw = svc.sweep_parallel(cfg, 4, 32, specs)
+    assert list(sw.cached) == [True, False]
+    loop = svc.latency_parallel(cfg, 4, 32, tp=4, pp=2)
+    assert loop.cached and loop.seconds == sw.seconds[1]
