@@ -21,12 +21,16 @@ Two timed sections:
   PYTHONPATH=src python -m benchmarks.strategy_sweep [--arch qwen3-mini]
       [--device a100_80g] [--batch 8] [--seq 128] [--dp 1,2,4,8]
       [--tp 1,2,4,8] [--pp 1,2,4,8] [--microbatches 1,2,4,8]
-      [--buckets 1,5,25,100] [--loop-limit 64]
+      [--buckets 1,5,25,100] [--schedules gpipe,1f1b,interleaved]
+      [--loop-limit 64] [--plan] [--devices 64]
       [--json artifacts/BENCH_strategy_sweep.json] [--dry-run]
 
-``--dry-run`` prices a small grid on the reduced arch and asserts the
-golden equivalence over EVERY point, so CI (scripts/test.sh --smoke)
-exercises the full sweep path cheaply.
+``--dry-run`` prices a small grid on the reduced arch — all three
+schedule kinds — and asserts the golden equivalence over EVERY point
+plus the 1F1B-never-loses-to-GPipe invariant, so CI (scripts/test.sh
+--smoke) exercises the full sweep path cheaply.  ``--plan`` additionally
+runs the ``LatencyService.plan_training`` auto-search for ``--devices``
+and records the winning feasible plan in the JSON.
 """
 from __future__ import annotations
 
@@ -39,6 +43,7 @@ import numpy as np
 from benchmarks import common
 from repro.configs import registry as cr
 from repro.core import calibrate
+from repro.core import devices as D
 from repro.core.batch_predict import BatchPredictor
 from repro.core.schedule import TrainingStepSpec, strategy_grid
 
@@ -57,23 +62,25 @@ def _cross_buckets(specs, buckets):
 def run(arch="qwen3-mini", device="a100_80g", batch=8, seq=128,
         dp=(1, 2, 4, 8), tp=(1, 2, 4, 8), pp=(1, 2, 4, 8),
         microbatches=(1, 2, 4, 8), buckets=(1.0, 5.0, 25.0, 100.0),
-        loop_limit=64, dtype=None, verbose=True):
+        schedules=("gpipe",), loop_limit=64, dtype=None, verbose=True):
     store = common.get_calibration()
     bp = BatchPredictor(store, calibrate.device_name())
     bp.host_profile()
     cfg = cr.get_any(arch)
     pred = bp.for_device(device)
 
-    specs = strategy_grid(dp=dp, tp=tp, pp=pp, microbatches=microbatches)
+    specs = strategy_grid(dp=dp, tp=tp, pp=pp, microbatches=microbatches,
+                          schedules=schedules)
     tspecs, trains = _cross_buckets(specs, buckets)
     n = len(tspecs)
+    cap = float(D.get_profile(device).hbm_bytes)
 
     # Warm the predictor's per-shape caches once so the timed comparison is
     # warm-vs-warm (the per-spec loop below reuses the same warmed tables).
     pred.sweep_strategies(cfg, batch, seq, tspecs, train=trains, dtype=dtype)
     with common.timer() as t_sweep:
         sw = pred.sweep_strategies(cfg, batch, seq, tspecs, train=trains,
-                                   dtype=dtype)
+                                   dtype=dtype, hbm_bytes=cap)
     assert bool(sw.bounds_ok().all()), "sweep violated schedule bounds"
     sweep_sps = n / t_sweep.s
 
@@ -88,6 +95,24 @@ def run(arch="qwen3-mini", device="a100_80g", batch=8, seq=128,
     speedup = sweep_sps / loop_sps if loop_sps else float("inf")
     max_rel = max(abs(sw.seconds[i] - s) / s
                   for i, s in zip(idx, loop_secs)) if loop_n else 0.0
+
+    # Schedule-kind comparison: for every (dp, tp, pp>1, mb, bucket) point
+    # swept under more than one schedule, the 1F1B/interleaved makespan
+    # ratio vs the GPipe baseline (1F1B must never lose: its wiring ties
+    # GPipe's bubble and overlaps grad p2p on full-duplex links).
+    by_point = {}
+    for i, (sp, tr) in enumerate(zip(tspecs, trains)):
+        k = (sp.dp, sp.tp, sp.pp, sp.microbatches, sp.act_mode, tr.bucket_mb)
+        by_point.setdefault(k, {})[sp.schedule] = float(sw.seconds[i])
+    ratios = {"1f1b": [], "interleaved": []}
+    for k, per in by_point.items():
+        if "gpipe" not in per or k[2] == 1:
+            continue
+        for sch in ("1f1b", "interleaved"):
+            if sch in per:
+                ratios[sch].append(per[sch] / per["gpipe"])
+    sched_cmp = {sch: {"n": len(r), "max_ratio": max(r), "min_ratio": min(r)}
+                 for sch, r in ratios.items() if r}
 
     # Forward-only comparison on the bare spec grid.
     pred.sweep_strategies(cfg, batch, seq, specs, dtype=dtype)
@@ -111,6 +136,8 @@ def run(arch="qwen3-mini", device="a100_80g", batch=8, seq=128,
         "loop_n": int(loop_n), "loop_seconds": t_loop.s,
         "loop_specs_per_sec": loop_sps,
         "speedup": speedup, "max_rel_err": float(max_rel),
+        "schedule_vs_gpipe": sched_cmp,
+        "n_feasible": int(sw.feasible.sum()), "hbm_bytes": cap,
         "forward": {"n_specs": len(specs), "sweep_seconds": t_fwd.s,
                     "specs_per_sec": fwd_sps, "loop_n": int(fwd_n),
                     "loop_specs_per_sec": floop_sps,
@@ -148,8 +175,16 @@ def main():
     ap.add_argument("--microbatches", default="1,2,4,8")
     ap.add_argument("--buckets", default="1,5,25,100",
                     help="comma-separated gradient-bucket sizes (MiB)")
+    ap.add_argument("--schedules", default="gpipe",
+                    help="comma-separated pipeline schedule kinds "
+                         "(gpipe,1f1b,interleaved)")
     ap.add_argument("--loop-limit", type=int, default=64,
                     help="per-spec loop subset size (golden + timing)")
+    ap.add_argument("--plan", action="store_true",
+                    help="run LatencyService.plan_training on the same "
+                         "arch/device and report the winning feasible plan")
+    ap.add_argument("--devices", type=int, default=64,
+                    help="device budget for --plan")
     ap.add_argument("--dtype", default=None)
     ap.add_argument("--json", default=None,
                     help="output path (default artifacts/"
@@ -165,16 +200,37 @@ def main():
         res = run(arch="qwen2-0.5b-reduced", device=args.device,
                   batch=4, seq=64, dp=(1, 2), tp=(1,), pp=(1, 2),
                   microbatches=(1, 2), buckets=(1.0, 25.0),
+                  schedules=("gpipe", "1f1b", "interleaved"),
                   loop_limit=0, dtype=args.dtype)
         assert res["max_rel_err"] <= 1e-9, res["max_rel_err"]
         assert res["forward"]["max_rel_err"] <= 1e-9, res["forward"]
-        print("dry-run golden check ok (every point <= 1e-9 rel)")
+        cmp = res["schedule_vs_gpipe"]
+        assert cmp["1f1b"]["n"] > 0 and cmp["interleaved"]["n"] > 0, cmp
+        # 1F1B must never lose to GPipe on any swept pipeline point
+        assert cmp["1f1b"]["max_ratio"] <= 1 + 1e-9, cmp["1f1b"]
+        print("dry-run golden check ok (every point <= 1e-9 rel; "
+              f"1f1b/gpipe max ratio {cmp['1f1b']['max_ratio']:.6f})")
     else:
         res = run(arch=args.arch, device=args.device, batch=args.batch,
                   seq=args.seq, dp=ints(args.dp), tp=ints(args.tp),
                   pp=ints(args.pp), microbatches=ints(args.microbatches),
                   buckets=tuple(float(x) for x in args.buckets.split(",")),
+                  schedules=tuple(args.schedules.split(",")),
                   loop_limit=args.loop_limit, dtype=args.dtype)
+    if args.plan:
+        from repro.serving.latency_service import LatencyService
+        svc = LatencyService(common.get_calibration(),
+                             calibrate.device_name())
+        arch = "qwen2-0.5b-reduced" if args.dry_run else args.arch
+        plan = svc.plan_training(
+            arch, args.batch, args.seq, devices=args.devices,
+            bucket_mbs=tuple(float(x) for x in args.buckets.split(",")),
+            dtype=args.dtype, device=args.device)
+        res["plan"] = plan.to_json()
+        print(f"plan[{args.devices} devices]: {plan.breakdown['spec']}  "
+              f"{plan.seconds*1e3:.3f}ms  "
+              f"peak {plan.peak_bytes/2**30:.2f}GiB  "
+              f"feasible {plan.n_feasible}/{plan.n_candidates}")
     res["dry_run"] = bool(args.dry_run)
     path = args.json or os.path.join(
         common.ARTIFACTS, "BENCH_strategy_sweep_dry.json" if args.dry_run

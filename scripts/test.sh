@@ -4,6 +4,8 @@
 #   scripts/test.sh                 tier-1 suite (pytest -x -q)
 #   scripts/test.sh --smoke         suite + vectorized NAS benchmark, small limit
 #   scripts/test.sh --docs          suite + quickstart smoke-run + doc link check
+#   scripts/test.sh --props         suite + schedule property suite at a higher
+#                                   example count (SCHEDULE_PROP_EXAMPLES=50)
 #   scripts/test.sh -k batch        extra args forwarded to pytest
 #
 # TEST_TIMEOUT_S bounds each stage (default 1800s).
@@ -13,11 +15,13 @@ cd "$(dirname "$0")/.."
 TIMEOUT="${TEST_TIMEOUT_S:-1800}"
 SMOKE=0
 DOCS=0
+PROPS=0
 ARGS=()
 for a in "$@"; do
   case "$a" in
     --smoke) SMOKE=1 ;;
     --docs) DOCS=1 ;;
+    --props) PROPS=1 ;;
     *) ARGS+=("$a") ;;
   esac
 done
@@ -72,9 +76,37 @@ PY
   echo "--- smoke: overlap-scaling benchmark (--dry-run) ---"
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TIMEOUT" \
     python -m benchmarks.overlap_scaling --dry-run
-  echo "--- smoke: vectorized strategy-sweep benchmark (--dry-run) ---"
+  echo "--- smoke: vectorized strategy-sweep benchmark (--dry-run, 1F1B/interleaved + plan) ---"
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TIMEOUT" \
-    python -m benchmarks.strategy_sweep --dry-run
+    python -m benchmarks.strategy_sweep --dry-run --plan --devices 16 \
+      --batch 8 --seq 64
+  echo "--- smoke: plan_training round-trip (memory-constrained auto-search) ---"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TIMEOUT" \
+    python - <<'PY'
+from repro.serving.latency_service import LatencyService
+svc = LatencyService()
+plan = svc.plan_training("qwen3-mini", 16, 128, devices=8, memory_gb=80.0,
+                         bucket_mbs=(5.0,))
+assert plan.world == plan.dp * plan.tp * plan.pp <= 8
+assert 0 < plan.n_feasible <= plan.n_candidates
+assert plan.peak_bytes <= 80.0 * 2**30
+t = svc.latency_train("qwen3-mini", 16, 128, dp=plan.dp,
+                      tp=plan.tp, pp=plan.pp,
+                      microbatches=plan.microbatches,
+                      schedule=plan.schedule, optimizer=plan.optimizer,
+                      bucket_mb=plan.bucket_mb)
+assert t.cached and t.seconds == plan.seconds, (t.seconds, plan.seconds)
+print(f"plan_training ok: dp{plan.dp}.tp{plan.tp}.pp{plan.pp}"
+      f".mb{plan.microbatches}.{plan.schedule} step={plan.seconds*1e3:.3f}ms "
+      f"peak={plan.peak_bytes/2**20:.1f}MiB "
+      f"({plan.n_feasible}/{plan.n_candidates} feasible); cached-hit ok")
+PY
+fi
+
+if [[ "$PROPS" == 1 ]]; then
+  echo "--- props: schedule-invariant property suite (50 examples/property) ---"
+  SCHEDULE_PROP_EXAMPLES="${SCHEDULE_PROP_EXAMPLES:-50}" \
+    timeout "$TIMEOUT" python -m pytest -q tests/test_schedule_properties.py
 fi
 
 if [[ "$DOCS" == 1 ]]; then

@@ -609,6 +609,7 @@ class BatchPredictor:
     def sweep_strategies(self, cfg: C.ModelConfig, batch: int, seq: int,
                          specs: Sequence["og.ParallelismSpec"], *,
                          train=None, dtype: Optional[str] = None,
+                         hbm_bytes: Optional[float] = None,
                          device: Optional[str] = None):
         """Price MANY parallelism strategies in one vectorized pass
         (``schedule.sweep_strategies``): unique op components are
@@ -616,13 +617,16 @@ class BatchPredictor:
         and simulated per structural template by the batched list-schedule
         kernel.  Returns a ``schedule.StrategySweep`` with arrays aligned
         to ``specs``; ``train`` (None | TrainingStepSpec | per-spec
-        sequence) switches forward sweeps to full training steps."""
+        sequence) switches forward sweeps to full training steps, and
+        ``hbm_bytes`` adds the per-spec ``feasible`` mask against the
+        peak-memory column."""
         if device is not None and device != self.device:
             return self.for_device(device).sweep_strategies(
-                cfg, batch, seq, specs, train=train, dtype=dtype)
+                cfg, batch, seq, specs, train=train, dtype=dtype,
+                hbm_bytes=hbm_bytes)
         from repro.core import schedule as S
         return S.sweep_strategies(self, cfg, batch, seq, specs, train=train,
-                                  dtype=dtype)
+                                  dtype=dtype, hbm_bytes=hbm_bytes)
 
     def predict_blocks(self, cfg: C.ModelConfig, batch: int, seq: int,
                        dtype: Optional[str] = None,
@@ -770,7 +774,11 @@ class PredictionCache:
     #    compute busy intervals (nonzero under pp > 1; old entries floored
     #    it to 0), and parallel/train entries extended with the sweep
     #    field set (sequential/bubble/max-stream-busy)
-    SCHEMA = 4
+    # 5: schedule-kind tag component (``.1f1b`` / ``.interleaved``) in spec
+    #    keys, ``bubble_share`` made schedule-kind-aware (1F1B reports
+    #    idle over ideal compute), and parallel/train entries extended
+    #    with ``peak_bytes``
+    SCHEMA = 5
 
     def __init__(self, maxsize: int = 65536, path: Optional[str] = None):
         self.maxsize = int(maxsize)

@@ -49,6 +49,15 @@ class DeviceProfile:
         """Attainable FLOP/s at arithmetic intensity ``ai`` (FLOP/byte)."""
         return min(self.peak(dtype), ai * self.hbm_bw)
 
+    def usable_hbm(self, reserve: float = 0.1) -> float:
+        """Memory available to model state + activations: capacity minus a
+        ``reserve`` fraction held back for the framework (CUDA context,
+        allocator fragmentation, NCCL buffers).  The feasibility capacity
+        planners should pass to ``sweep_strategies`` / ``plan_training``."""
+        if not 0.0 <= reserve < 1.0:
+            raise ValueError(f"reserve must be in [0, 1), got {reserve}")
+        return self.hbm_bytes * (1.0 - reserve)
+
 
 GiB = 1024 ** 3
 MiB = 1024 ** 2

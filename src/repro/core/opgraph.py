@@ -90,6 +90,33 @@ def stream_of(op: Op) -> str:
     return COMM_STREAM if isinstance(op, CollectiveOp) else COMPUTE_STREAM
 
 
+def activation_bytes(op: Op) -> float:
+    """Bytes of output activation a backward pass must keep live for ``op``
+    (output elements × dtype size × count).
+
+    This is the per-op term of the peak-memory estimator
+    (``schedule.peak_memory_bytes``): a pipeline stage's stored-activation
+    footprint is the sum over its forward ops, multiplied by the schedule's
+    in-flight microbatch count.  Collectives produce no *new* tensor (their
+    output aliases the reduced/gathered activation already counted by the
+    producing op), and the ``embed_gather`` snippet's shape is the embedding
+    *table* — its (T, d) output is the hidden state the first ``ln`` /
+    ``residual`` ops already count — so both contribute 0."""
+    esz = dtype_bytes(op.dtype) if not isinstance(op, CollectiveOp) else 0
+    if isinstance(op, MatmulOp):
+        return float(op.batch) * op.m * op.n * esz * op.count
+    if isinstance(op, AttentionOp):
+        return float(op.batch) * op.heads * op.sq * op.hd * esz * op.count
+    if isinstance(op, MemoryOp):
+        if op.snippet == "embed_gather":
+            return 0.0
+        n = 1.0
+        for d in op.shape:
+            n *= d
+        return n * esz * op.count
+    return 0.0
+
+
 @dataclasses.dataclass
 class OpNode:
     """One node of the schedule-aware IR: an op, the stream it executes on,
@@ -428,6 +455,9 @@ def total_flops(ops: List[Op]) -> float:
 # through every rule below with the paper mapping and a worked example.
 
 
+SCHEDULE_KINDS = ("gpipe", "1f1b", "interleaved")
+
+
 @dataclasses.dataclass(frozen=True)
 class ParallelismSpec:
     """(dp, tp, pp) degrees + activation-sharding mode at block boundaries
@@ -440,12 +470,21 @@ class ParallelismSpec:
     emerges from the schedule in ``core/schedule.py``); under ``pp == 1``
     they model gradient-accumulation-style chunked execution.  The flat
     ``enumerate_parallel_ops`` view ignores it — only the schedule builders
-    and cache keys see it."""
+    and cache keys see it.
+
+    ``schedule`` picks the pipeline schedule the builders wire: ``'gpipe'``
+    (all forwards, then all backwards), ``'1f1b'`` (one-forward-one-backward
+    steady state — same makespan under uniform stages, ≤ ``pp`` in-flight
+    activations instead of ``mb``), or ``'interleaved'`` (virtual-stage
+    interleaving over ``schedule.VIRTUAL_STAGES`` chunks per device —
+    shrinks the fill/drain bubble).  Forward-only graphs under ``'1f1b'``
+    are GPipe by definition (there is no backward to interleave)."""
     dp: int = 1
     tp: int = 1
     pp: int = 1
     act_mode: str = "tp"          # 'tp' | 'sp', as distributed/sharding.py
     microbatches: int = 1
+    schedule: str = "gpipe"       # 'gpipe' | '1f1b' | 'interleaved'
 
     def __post_init__(self):
         if min(self.dp, self.tp, self.pp) < 1:
@@ -454,6 +493,9 @@ class ParallelismSpec:
             raise ValueError(f"act_mode must be 'tp' or 'sp': {self.act_mode!r}")
         if self.microbatches < 1:
             raise ValueError(f"microbatches must be >= 1: {self.microbatches}")
+        if self.schedule not in SCHEDULE_KINDS:
+            raise ValueError(f"schedule must be one of {SCHEDULE_KINDS}: "
+                             f"{self.schedule!r}")
 
     @property
     def world(self) -> int:
@@ -465,11 +507,13 @@ class ParallelismSpec:
 
     def tag(self) -> str:
         """Stable fingerprint for cache keys / report rows.  The microbatch
-        degree is appended only when non-default, so pre-schedule tags (and
-        everything keyed on them) are unchanged."""
+        degree and schedule kind are appended only when non-default, so
+        pre-schedule tags (and everything keyed on them) are unchanged."""
         base = f"dp{self.dp}.tp{self.tp}.pp{self.pp}.{self.act_mode}"
         if self.microbatches != 1:
             base += f".mb{self.microbatches}"
+        if self.schedule != "gpipe":
+            base += f".{self.schedule}"
         return base
 
 

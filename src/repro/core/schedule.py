@@ -17,6 +17,13 @@ Three schedule families are built here:
    ``pp > 1``) — per-stage, per-microbatch op segments with p2p activation
    hand-offs; the classic ``(pp-1)/(pp+mb-1)`` GPipe bubble *emerges* from
    the schedule rather than being a closed-form correction.
+   ``ParallelismSpec.schedule`` selects the pipeline flavour: GPipe flush,
+   1F1B (one-forward-one-backward steady state — same makespan under
+   uniform stages but only ``min(pp - s, mb)`` in-flight activations per
+   stage, and the steady-state bubble ``(pp-1)/mb`` relative to ideal
+   compute), or interleaved virtual stages (``VIRTUAL_STAGES`` chunks per
+   device — the fill/drain bubble shrinks to ``(pp-1)/v`` microbatch
+   slots, a strict makespan win over GPipe).
 2. **Bucketed gradient all-reduce** — a ``TrainingStepSpec`` prices one
    optimizer step: forward + backward (≈ ``bwd_fwd_ratio`` × forward
    compute, collectives mirrored at 1×), with the data-parallel gradient
@@ -82,6 +89,19 @@ class TrainingStepSpec:
 # read + one write of the parameter tensor, while a real update streams
 # param+grad+moments in and param+moments out (~3x that for AdamW).
 _OPT_SNIPPET = {"adamw": ("adamw_update", 3), "sgd": ("sgd_update", 1)}
+
+# Optimizer state bytes per parameter held resident on each rank (fp32
+# moment tensors: AdamW keeps two, SGD none) — the peak-memory estimator's
+# optimizer term.
+_OPT_STATE_BYTES = {"adamw": 8.0, "sgd": 0.0}
+
+# Virtual-stage interleave degree for ``schedule='interleaved'``: each
+# device runs this many non-contiguous layer chunks (Megatron's
+# virtual-pipeline "model chunks"), shrinking the fill/drain bubble from
+# ``pp-1`` to ``(pp-1)/v`` microbatch slots at the cost of ``v×`` the p2p
+# hand-offs.  A module constant (not a spec field) keeps the strategy
+# space — and the cache-tag surface — small.
+VIRTUAL_STAGES = 2
 
 
 # ---------------------------------------------------------------------------
@@ -176,6 +196,7 @@ class Schedule:
     starts: np.ndarray
     ends: np.ndarray
     makespan: float
+    kind: str = "gpipe"           # schedule kind: bubble accounting rule
 
     @property
     def sequential_seconds(self) -> float:
@@ -224,16 +245,25 @@ class Schedule:
 
     @property
     def bubble_share(self) -> float:
-        """Idle fraction of the compute executors:
-        ``1 - total compute busy / (n_compute_streams · makespan)``.
-        For a balanced micro-batched pipeline this is the classic
-        ``(pp-1)/(pp+mb-1)`` GPipe bubble — emerging from the schedule, not
-        a formula — and it shrinks monotonically as microbatches grow even
-        when smaller per-chunk shapes make the absolute makespan worse
-        (fixed per-op overheads).  Only the per-stage ``compute.s<i>``
-        executors count when present — the bare ``compute`` stream (e.g.
-        the optimizer node in training schedules) is not a pipeline
-        stage."""
+        """Idle share of the compute executors, under the accounting rule
+        of the schedule ``kind`` the graph was wired with.
+
+        * ``'gpipe'`` / ``'interleaved'`` — idle fraction of the makespan:
+          ``1 - total compute busy / (n_compute_streams · makespan)``.  For
+          a balanced micro-batched GPipe pipeline this is the classic
+          ``(pp-1)/(pp+mb-1)`` bubble — emerging from the schedule, not a
+          formula — and it shrinks monotonically as microbatches grow even
+          when smaller per-chunk shapes make the absolute makespan worse
+          (fixed per-op overheads).
+        * ``'1f1b'`` — idle time relative to IDEAL compute,
+          ``(n_streams · makespan - busy) / busy``: the convention the
+          1F1B literature quotes, whose balanced-pipeline value is the
+          steady-state ``(pp-1)/mb``.  Same idle time, different
+          denominator — the two rules coincide only as the bubble → 0.
+
+        Only the per-stage ``compute.s<i>`` executors count when present —
+        the bare ``compute`` stream (e.g. the optimizer node in training
+        schedules) is not a pipeline stage."""
         busy = self.busy()
         comp = {s: b for s, b in busy.items() if s.startswith("compute.s")}
         if not comp:
@@ -241,8 +271,11 @@ class Schedule:
                     if s.startswith(og.COMPUTE_STREAM)}
         if not comp or self.makespan <= 0:
             return 0.0
-        return max(1.0 - sum(comp.values())
-                   / (len(comp) * self.makespan), 0.0)
+        total = sum(comp.values())
+        idle = max(len(comp) * self.makespan - total, 0.0)
+        if self.kind == "1f1b":
+            return idle / total if total > 0 else 0.0
+        return idle / (len(comp) * self.makespan)
 
     def bounds_ok(self, rel: float = 1e-9) -> bool:
         """The acceptance invariant: busiest stream <= makespan <= the
@@ -253,16 +286,19 @@ class Schedule:
                 and self.makespan <= hi * (1 + rel))
 
 
-def schedule_graph(predictor, graph: og.OpGraph) -> Schedule:
+def schedule_graph(predictor, graph: og.OpGraph,
+                   kind: str = "gpipe") -> Schedule:
     """Price every node through ``predictor`` (scalar ``PM2Lat`` or the
     vectorized ``BatchPredictor`` — both expose ``predict_ops``) and
-    simulate the two-stream list schedule."""
+    simulate the two-stream list schedule.  ``kind`` tags the result with
+    the schedule flavour so ``Schedule.bubble_share`` applies the right
+    accounting rule."""
     _, rows = predictor.predict_ops(graph.ops())
     streams = [n.stream for n in graph.nodes]
     deps = [n.deps for n in graph.nodes]
     starts, ends, makespan = simulate([r.seconds for r in rows],
                                       streams, deps)
-    return Schedule(rows, streams, starts, ends, makespan)
+    return Schedule(rows, streams, starts, ends, makespan, kind=kind)
 
 
 # ---------------------------------------------------------------------------
@@ -274,12 +310,15 @@ _ceil_div = og._ceil_div
 
 def _stage_ops(cfg: C.ModelConfig, bmb: int, seq: int,
                spec: og.ParallelismSpec, dt: str,
-               segments: Optional[Tuple] = None
+               segments: Optional[Tuple] = None,
+               n_stages: Optional[int] = None
                ) -> Tuple[List[List[og.Op]], float]:
     """One microbatch's ops per pipeline stage (tp-sharded, per-layer tp
     collectives inline), plus the stage-boundary activation payload.
 
-    Layers split contiguously and near-evenly over ``pp`` stages; the
+    Layers split contiguously and near-evenly over ``n_stages`` segments
+    (default ``spec.pp``; the interleaved builders pass
+    ``pp · VIRTUAL_STAGES`` to get per-virtual-chunk op lists); the
     embedding (+ encoder) lands on stage 0, final norm + unembed on the
     last stage, with their vocab-parallel collectives.  ``segments`` lets a
     sweep pass a precomputed ``og.layer_segments(cfg, bmb, seq)`` so the
@@ -291,7 +330,7 @@ def _stage_ops(cfg: C.ModelConfig, bmb: int, seq: int,
     esz = dtype_bytes(dt)
     T = bmb * seq
     hid_bytes = float(T * cfg.d_model * esz)
-    pp, tp = spec.pp, spec.tp
+    pp, tp = int(n_stages) if n_stages else spec.pp, spec.tp
     n_layers = len(per_layer)
     bounds = [round(i * n_layers / pp) for i in range(pp + 1)]
     stages: List[List[og.Op]] = []
@@ -354,6 +393,138 @@ def _wire_pipeline_grid(pp: int, mb: int, add_stage, add_p2p,
             prev_last = nid if nid is not None else (deps[0] if deps
                                                      else None)
             last_in_stage[s] = prev_last
+
+
+def _1f1b_stage_order(pp: int, mb: int, s: int) -> List[Tuple[str, int]]:
+    """Stage ``s``'s static op order under 1F1B: warmup of
+    ``W = min(pp - s, mb)`` forwards, then strict one-backward-one-forward
+    alternation, then the remaining backwards (cooldown).  The warmup depth
+    is exactly what bounds the in-flight activations at ``min(pp - s, mb)``
+    — the schedule's memory win over GPipe's ``mb``."""
+    warm = min(pp - s, mb)
+    seq: List[Tuple[str, int]] = [("F", m) for m in range(warm)]
+    nf, nb = warm, 0
+    while nb < mb:
+        seq.append(("B", nb))
+        nb += 1
+        if nf < mb:
+            seq.append(("F", nf))
+            nf += 1
+    return seq
+
+
+def _wire_1f1b(pp: int, mb: int, add_fwd, add_bwd, add_act_p2p,
+               add_grad_p2p) -> None:
+    """One-forward-one-backward pipeline wiring (Megatron/PipeDream-flush).
+
+    Each stage executes its ``_1f1b_stage_order`` sequence, serialized on
+    its own ``compute.s<s>`` stream; ``F_m@s`` waits on the activation p2p
+    from ``F_m@(s-1)``, ``B_m@s`` on the gradient p2p from ``B_m@(s+1)``
+    (and, on the last stage, on its own ``F_m`` via stage serialization).
+    Nodes are emitted by a round-robin readiness sweep over the per-stage
+    sequences — 1F1B's warmup depths make that deadlock-free — so the node
+    list stays topological for the list scheduler.
+
+    The wiring callbacks mirror ``_wire_pipeline_grid``'s: ``add_fwd`` /
+    ``add_bwd(m, s, deps)`` append one stage chain and return its last node
+    id (None for an empty stage); ``add_act_p2p`` / ``add_grad_p2p(m, s,
+    dep)`` append one hand-off.  Empty stages (pp > layer count) propagate
+    their feeding p2p id — or the sentinel -1 when there is nothing
+    upstream — exactly like the GPipe grid's ``prev_last`` fallback."""
+    orders = [_1f1b_stage_order(pp, mb, s) for s in range(pp)]
+    # None = not emitted yet; -1 = emitted but empty (no node to depend
+    # on); >= 0 = last node id of that (stage, microbatch) chain.
+    fwd_done: List[List[Optional[int]]] = [[None] * mb for _ in range(pp)]
+    bwd_done: List[List[Optional[int]]] = [[None] * mb for _ in range(pp)]
+    last: List[Optional[int]] = [None] * pp
+    ptr = [0] * pp
+    remaining = 2 * pp * mb
+    while remaining:
+        progressed = False
+        for s in range(pp):
+            while ptr[s] < len(orders[s]):
+                what, m = orders[s][ptr[s]]
+                if what == "F":
+                    up = fwd_done[s - 1][m] if s > 0 else -1
+                    if up is None:
+                        break                   # upstream F not emitted yet
+                    deps: List[int] = []
+                    pid: Optional[int] = None
+                    if up >= 0:
+                        pid = add_act_p2p(m, s, up)
+                        deps.append(pid)
+                    if last[s] is not None:
+                        deps.append(last[s])
+                    nid = add_fwd(m, s, tuple(deps))
+                    done, src = fwd_done, nid
+                else:
+                    dn = bwd_done[s + 1][m] if s < pp - 1 else -1
+                    if dn is None:
+                        break                   # downstream B not emitted
+                    deps = []
+                    pid = None
+                    if s < pp - 1 and dn >= 0:
+                        pid = add_grad_p2p(m, s, dn)
+                        deps.append(pid)
+                    if last[s] is not None:
+                        deps.append(last[s])
+                    nid = add_bwd(m, s, tuple(deps))
+                    done, src = bwd_done, nid
+                eff = src if src is not None else (
+                    pid if pid is not None else -1)
+                done[s][m] = eff
+                if eff >= 0:
+                    last[s] = eff
+                ptr[s] += 1
+                remaining -= 1
+                progressed = True
+        if remaining and not progressed:        # pragma: no cover
+            raise RuntimeError("1F1B wiring deadlocked — stage orders "
+                               "inconsistent with p2p dependencies")
+
+
+def _wire_interleaved(pp: int, v: int, mb: int, add_chunk, add_p2p,
+                      last: List[Optional[int]], *,
+                      reverse: bool = False) -> None:
+    """Interleaved-virtual-stage wiring (Megatron virtual pipeline): the
+    layer stack splits into ``v·pp`` chunks, chunk ``c`` living on device
+    ``c mod pp`` (stream ``compute.s<c mod pp>``).  Insertion order is the
+    Megatron grouping — chunk group ``g``'s microbatches before group
+    ``g+1``'s, i.e. global order ``(g, m, d)`` with ``c = g·pp + d`` —
+    which is what shrinks the fill to ``(pp-1)/v`` microbatch slots: a
+    device starts group 0's chunk after only ``d`` upstream chunk times,
+    not ``d`` full stage times.  ``reverse`` emits the mirrored backward
+    order ``(g desc, m, d desc)`` with gradient hand-offs flowing chunk
+    ``c+1 → c``.
+
+    ``add_chunk(c, m, deps)`` appends one chunk chain and returns its last
+    id (None when empty); ``add_p2p(c, m, dep)`` appends the hand-off INTO
+    chunk ``c``.  ``last`` (per device) is read and updated in place so a
+    forward and a backward grid chain on the device streams, exactly like
+    ``_wire_pipeline_grid``'s ``last_in_stage``."""
+    nchunks = pp * v
+    done: List[List[Optional[int]]] = [[None] * mb for _ in range(nchunks)]
+    for g in (range(v - 1, -1, -1) if reverse else range(v)):
+        for m in range(mb):
+            for d in (range(pp - 1, -1, -1) if reverse else range(pp)):
+                c = g * pp + d
+                up = c + 1 if reverse else c - 1
+                deps: List[int] = []
+                pid: Optional[int] = None
+                if 0 <= up < nchunks:
+                    u = done[up][m]
+                    assert u is not None, (c, m, "wired before upstream")
+                    if u >= 0:
+                        pid = add_p2p(c, m, u)
+                        deps.append(pid)
+                if last[d] is not None:
+                    deps.append(last[d])
+                nid = add_chunk(c, m, tuple(deps))
+                eff = nid if nid is not None else (
+                    pid if pid is not None else -1)
+                done[c][m] = eff
+                if eff >= 0:
+                    last[d] = eff
 
 
 # ---------------------------------------------------------------------------
@@ -439,6 +610,10 @@ class GraphTemplate:
     def __post_init__(self):
         n = len(self.slots)
         self.n_nodes = n
+        # 1F1B quotes its bubble relative to ideal compute (idle/busy),
+        # every other kind relative to the makespan — same rule as
+        # Schedule.bubble_share's ``kind`` switch.
+        self.bubble_ideal = bool(self.key) and self.key[0] == "trainpp1f1b"
         node_is_comm = np.array([st.startswith("comm")
                                  for st in self.streams], dtype=bool)
         self.slot_is_comm = np.zeros(self.n_slots, dtype=bool)
@@ -499,11 +674,15 @@ class GraphTemplate:
         if self.comp_cols.size:
             comp_busy = busy[:, self.comp_cols].sum(axis=1)
             k = len(self.comp_cols)
+            idle = np.maximum(k * mk - comp_busy, 0.0)
             with np.errstate(divide="ignore", invalid="ignore"):
-                bubble = np.where(
-                    mk > 0,
-                    np.maximum(1.0 - comp_busy / (k * np.maximum(mk, 1e-300)),
-                               0.0), 0.0)
+                if self.bubble_ideal:
+                    bubble = np.where(comp_busy > 0,
+                                      idle / np.maximum(comp_busy, 1e-300),
+                                      0.0)
+                else:
+                    bubble = np.where(
+                        mk > 0, idle / (k * np.maximum(mk, 1e-300)), 0.0)
         else:
             bubble = np.zeros(len(D))
         return {
@@ -564,6 +743,40 @@ def _grid_template(tb: _TemplateBuilder,
                         last_in_stage, reverse=reverse)
 
 
+def _interleaved_template(tb: _TemplateBuilder,
+                          chunk_masks: Sequence[Sequence[bool]],
+                          pp: int, v: int, mb: int,
+                          chunk_slot0: Sequence[int], p2p_slot0: int,
+                          last: List[Optional[int]], *,
+                          reverse: bool = False,
+                          record: Optional[List[List[int]]] = None) -> None:
+    """Append a symbolic interleaved (virtual-chunk × microbatch) grid over
+    ``_wire_interleaved``: chunk ``c``'s chain binds slots
+    ``chunk_slot0[c] + j`` on its device stream ``compute.s<c mod pp>``;
+    the hand-off into chunk ``c`` binds ``p2p_slot0 + c - 1`` (forward) /
+    ``p2p_slot0 + c`` (backward) on the boundary's link stream — with
+    ``v == 1`` both reduce to ``_grid_template``'s layout.  Boundaries
+    ``c`` and ``c + pp`` connect the same device pair, so they share a
+    stream (the physical link serializes both virtual chunks' traffic)."""
+
+    def add_chunk(c, m, deps):
+        ids = tb.add_chain(chunk_slot0[c], chunk_masks[c], deps,
+                           f"compute.s{c % pp}")
+        if record is not None:
+            record[m].extend(ids)
+        return ids[-1] if ids else None
+
+    def add_p2p(c, m, dep):
+        slot = p2p_slot0 + (c if reverse else c - 1)
+        link = (c + 1) % pp if reverse else c % pp
+        i = tb.add(slot, f"comm.pp{link}", (dep,))
+        if record is not None:
+            record[m].append(i)
+        return i
+
+    _wire_interleaved(pp, v, mb, add_chunk, add_p2p, last, reverse=reverse)
+
+
 def _bucket_anchors(bwd_ids: Sequence[int], n_buckets: int) -> List[int]:
     """DDP-style reverse-registration bucketing: bucket ``i`` becomes ready
     once the first ``(i+1)/n`` of the (reverse-order) backward nodes
@@ -596,6 +809,13 @@ def _build_template(key: Tuple, masks: Sequence[Tuple[bool, ...]],
         last: List[Optional[int]] = [None] * pp
         _grid_template(tb, masks[:pp], mb, [int(o) for o in offs[:pp]],
                        int(offs[pp]), last)
+    elif kind == "gridil":
+        pp, mb, v = key[1], key[2], key[3]
+        nch = pp * v
+        last = [None] * pp
+        _interleaved_template(tb, masks[:nch], pp, v, mb,
+                              [int(o) for o in offs[:nch]], int(offs[nch]),
+                              last)
     elif kind == "train1":
         mb = key[1]
         b_ids: List[int] = []
@@ -623,10 +843,55 @@ def _build_template(key: Tuple, masks: Sequence[Tuple[bool, ...]],
         # the wiring itself so empty stages can't skew the selection
         last_bwd = [i for i in per_mb[mb - 1]
                     if not tb.streams[i].startswith("comm")]
+    elif kind == "trainpp1f1b":
+        pp, mb = key[1], key[2]
+        per_mb = [[] for _ in range(mb)]
+        foffs = [int(o) for o in offs[:pp]]
+        boffs = [int(o) for o in offs[pp:2 * pp]]
+        fp2p0, bp2p0 = int(offs[2 * pp]), int(offs[2 * pp + 1])
+
+        def add_fwd(m, s, deps):
+            ids = tb.add_chain(foffs[s], masks[s], deps, f"compute.s{s}")
+            return ids[-1] if ids else None
+
+        def add_bwd(m, s, deps):
+            ids = tb.add_chain(boffs[s], masks[pp + s], deps,
+                               f"compute.s{s}")
+            per_mb[m].extend(ids)
+            return ids[-1] if ids else None
+
+        # Hand-offs keep the GPipe slot layout (act p2p over link s = slot
+        # s-1, grad p2p into stage s = slot s) but gradient hand-offs get
+        # their own ``.g`` streams: under 1F1B forward and backward p2p
+        # genuinely overlap in steady state, and NVLink/PCIe links are
+        # full-duplex — sharing the stream would charge phantom contention.
+        def add_act_p2p(m, s, dep):
+            return tb.add(fp2p0 + s - 1, f"comm.pp{s}", (dep,))
+
+        def add_grad_p2p(m, s, dep):
+            return tb.add(bp2p0 + s, f"comm.pp{s + 1}.g", (dep,))
+
+        _wire_1f1b(pp, mb, add_fwd, add_bwd, add_act_p2p, add_grad_p2p)
+        last_bwd = [i for i in per_mb[mb - 1]
+                    if not tb.streams[i].startswith("comm")]
+    elif kind == "trainppil":
+        pp, mb, v = key[1], key[2], key[3]
+        nch = pp * v
+        last = [None] * pp
+        per_mb = [[] for _ in range(mb)]
+        _interleaved_template(tb, masks[:nch], pp, v, mb,
+                              [int(o) for o in offs[:nch]],
+                              int(offs[2 * nch]), last)
+        _interleaved_template(tb, masks[nch:2 * nch], pp, v, mb,
+                              [int(o) for o in offs[nch:2 * nch]],
+                              int(offs[2 * nch + 1]), last, reverse=True,
+                              record=per_mb)
+        last_bwd = [i for i in per_mb[mb - 1]
+                    if not tb.streams[i].startswith("comm")]
     else:
         raise ValueError(f"unknown template kind {kind!r}")
-    if kind in ("train1", "trainpp"):
-        n_buckets = key[3] if kind == "train1" else key[4]
+    if kind in ("train1", "trainpp", "trainpp1f1b", "trainppil"):
+        n_buckets = key[-1]           # every training key ends with it
         opt_deps: List[int] = list(tb.tail())
         if n_buckets and last_bwd:
             boff = int(offs[-3])          # bucket component precedes opt
@@ -679,9 +944,11 @@ class _SweepBuilder:
             lambda: og.enumerate_parallel_ops(self.cfg, batch, self.seq,
                                               spec, dtype=self.dt))
 
-    def _stages(self, bmb: int, spec: og.ParallelismSpec
+    def _stages(self, bmb: int, spec: og.ParallelismSpec,
+                n_stages: Optional[int] = None
                 ) -> Tuple[List[int], Tuple, float]:
-        key = ("stages", bmb, spec.tp, spec.pp, spec.act_mode)
+        ns = int(n_stages) if n_stages else spec.pp
+        key = ("stages", bmb, spec.tp, ns, spec.act_mode)
         hit = self._stage_sets.get(key)
         if hit is None:
             segs = self._segments.get(bmb)
@@ -690,7 +957,8 @@ class _SweepBuilder:
                                          dtype=self.dt)
                 self._segments[bmb] = segs
             stages, hid_bytes = _stage_ops(self.cfg, bmb, self.seq, spec,
-                                           self.dt, segments=segs)
+                                           self.dt, segments=segs,
+                                           n_stages=ns)
             idxs = [self._component(key + (s,), lambda ops=ops: ops)
                     for s, ops in enumerate(stages)]
             hit = (idxs, tuple(self.uniq_masks[i] for i in idxs), hid_bytes)
@@ -740,6 +1008,12 @@ class _SweepBuilder:
         concatenate (in order) into the template's slot vector."""
         dp, tp, pp, mb = spec.dp, spec.tp, spec.pp, spec.microbatches
         bmb = _ceil_div(_ceil_div(self.batch, dp), mb)
+        # Interleaving only exists for a multi-microbatch pipeline; a
+        # forward-only pass under '1f1b' is GPipe by definition (nothing
+        # to interleave), so it shares the plain grid template — and its
+        # metrics — exactly.
+        il = spec.schedule == "interleaved" and pp > 1 and mb > 1
+        nch = pp * VIRTUAL_STAGES
         if train is None:
             if mb == 1:
                 ci = self._flat(spec, self.batch)
@@ -750,6 +1024,12 @@ class _SweepBuilder:
                 ci = self._flat(chunk, bmb * dp)
                 return self._template(("chunks", mb, self.uniq_masks[ci]),
                                       [ci], [_CLS_FWD])
+            if il:
+                idxs, masks, hid = self._stages(bmb, spec, n_stages=nch)
+                pi = self._p2p("pp.act_p2p", nch, hid, reverse=False)
+                return self._template(
+                    ("gridil", pp, mb, VIRTUAL_STAGES, masks), idxs + [pi],
+                    [_CLS_FWD] * (nch + 1))
             idxs, masks, hid = self._stages(bmb, spec)
             pi = self._p2p("pp.act_p2p", pp, hid, reverse=False)
             return self._template(("grid", pp, mb, masks), idxs + [pi],
@@ -762,6 +1042,15 @@ class _SweepBuilder:
             comps = [fi, bi]
             classes = [_CLS_FWD, _CLS_BWD]
             key: Tuple = ("train1", mb, self.uniq_masks[fi], n_buckets)
+        elif il:
+            idxs, masks, hid = self._stages(bmb, spec, n_stages=nch)
+            bidxs = [self._bwd(i, train.bwd_fwd_ratio) for i in idxs]
+            fpi = self._p2p("pp.act_p2p", nch, hid, reverse=False)
+            bpi = self._p2p("pp.grad_p2p", nch, hid, reverse=True)
+            comps = idxs + bidxs + [fpi, bpi]
+            classes = ([_CLS_FWD] * nch + [_CLS_BWD] * nch
+                       + [_CLS_FWD, _CLS_BWD])
+            key = ("trainppil", pp, mb, VIRTUAL_STAGES, masks, n_buckets)
         else:
             idxs, masks, hid = self._stages(bmb, spec)
             bidxs = [self._bwd(i, train.bwd_fwd_ratio) for i in idxs]
@@ -770,7 +1059,8 @@ class _SweepBuilder:
             comps = idxs + bidxs + [fpi, bpi]
             classes = ([_CLS_FWD] * pp + [_CLS_BWD] * pp
                        + [_CLS_FWD, _CLS_BWD])
-            key = ("trainpp", pp, mb, masks, n_buckets)
+            kind = "trainpp1f1b" if spec.schedule == "1f1b" else "trainpp"
+            key = (kind, pp, mb, masks, n_buckets)
         if n_buckets:
             comps.append(self._buckets(grad_bytes, bucket_bytes, dp))
             classes.append(_CLS_BWD)
@@ -871,8 +1161,126 @@ def build_training_graph(cfg: C.ModelConfig, batch: int, seq: int,
 
 
 # ---------------------------------------------------------------------------
+# peak-memory estimation (feasibility)
+# ---------------------------------------------------------------------------
+
+def schedule_inflight(kind: str, pp: int, mb: int, stage: int) -> int:
+    """How many microbatches' stored activations stage ``stage`` holds at
+    its peak, per schedule kind — the factor that separates the schedules
+    memory-wise:
+
+    * GPipe flush (and the interleaved flush) completes every forward
+      before any backward, so each stage stores all ``mb``;
+    * 1F1B's warmup depth caps stage ``s`` at ``min(pp - s, mb)`` — never
+      more than ``pp`` regardless of microbatch count;
+    * a single stage (``pp == 1``) alternates fwd/bwd per chunk, holding
+      one microbatch.
+    """
+    if pp == 1:
+        return 1
+    if kind == "1f1b":
+        return min(pp - stage, mb)
+    return mb
+
+
+def _static_state_bytes(cfg: C.ModelConfig, spec: og.ParallelismSpec,
+                        train: Optional[TrainingStepSpec], dt: str) -> float:
+    """Per-device resident state: the parameter shard (params divide over
+    tp · pp), plus — when training — the same-shaped gradient shard and
+    the optimizer's fp32 moment state (``_OPT_STATE_BYTES``/param)."""
+    shard = cfg.param_count() / (spec.tp * spec.pp)
+    out = shard * dtype_bytes(dt)
+    if train is not None:
+        out += shard * dtype_bytes(dt)
+        out += shard * _OPT_STATE_BYTES[train.optimizer]
+    return out
+
+
+def _component_act_bytes(uniq_ops: Sequence[Sequence[og.Op]]
+                         ) -> Tuple[List[float], List[float]]:
+    """(sum, max) of ``og.activation_bytes`` per unique component: the sum
+    is a stage's stored-for-backward footprint per microbatch, the max its
+    transient forward working set."""
+    sums, maxs = [], []
+    for ops in uniq_ops:
+        acts = [og.activation_bytes(op) for op in ops]
+        sums.append(float(sum(acts)))
+        maxs.append(float(max(acts, default=0.0)))
+    return sums, maxs
+
+
+def _peak_stage_bytes(cfg: C.ModelConfig, spec: og.ParallelismSpec,
+                      train: Optional[TrainingStepSpec], kind: str,
+                      comps: Sequence[int], act_sum: Sequence[float],
+                      act_max: Sequence[float], dt: str) -> List[float]:
+    """Per-device peak bytes for one planned spec (one entry per pipeline
+    stage / device; tp ranks are symmetric).  Forward-only schedules charge
+    the transient working set (inference keeps no activations); training
+    schedules charge the stored per-microbatch activation sum times the
+    schedule's in-flight count (``schedule_inflight``), on top of the
+    static param/grad/optimizer state."""
+    stat = _static_state_bytes(cfg, spec, train, dt)
+    pp, mb, v = spec.pp, spec.microbatches, VIRTUAL_STAGES
+    if kind in ("chain", "chunks", "grid", "gridil"):
+        if kind in ("chain", "chunks"):
+            return [stat + act_max[comps[0]]]
+        if kind == "grid":
+            return [stat + act_max[c] for c in comps[:pp]]
+        A = [act_max[c] for c in comps[:pp * v]]
+        return [stat + max(A[g * pp + d] for g in range(v))
+                for d in range(pp)]
+    if kind == "train1":
+        return [stat + act_sum[comps[0]]]
+    if kind in ("trainpp", "trainpp1f1b"):
+        sk = "1f1b" if kind == "trainpp1f1b" else "gpipe"
+        return [stat + act_sum[c] * schedule_inflight(sk, pp, mb, s)
+                for s, c in enumerate(comps[:pp])]
+    if kind == "trainppil":
+        A = [act_sum[c] for c in comps[:pp * v]]
+        return [stat + mb * sum(A[g * pp + d] for g in range(v))
+                for d in range(pp)]
+    raise ValueError(f"unknown template kind {kind!r}")
+
+
+def peak_memory_bytes(cfg: C.ModelConfig, batch: int, seq: int,
+                      spec: og.ParallelismSpec,
+                      train: Optional[TrainingStepSpec] = None,
+                      dtype: Optional[str] = None, *,
+                      per_stage: bool = False):
+    """Estimated peak device memory for running ``cfg`` under ``spec``:
+    parameter/gradient/optimizer shards plus schedule-dependent in-flight
+    activations.  Returns the worst device's bytes (float), or the
+    per-stage list with ``per_stage=True``.
+
+    Built from the same ``_SweepBuilder`` plan as the schedule itself, so
+    the scalar answer and ``sweep_strategies``' vectorized ``peak_bytes``
+    column agree by construction."""
+    b = _SweepBuilder(cfg, batch, seq, dtype or "float32")
+    tpl, comps = b.spec_plan(spec, train)
+    act_sum, act_max = _component_act_bytes(b.uniq_ops)
+    per = _peak_stage_bytes(cfg, spec, train, tpl.key[0], comps,
+                            act_sum, act_max, b.dt)
+    return per if per_stage else float(max(per))
+
+
+# ---------------------------------------------------------------------------
 # high-level entry points (predictor-agnostic)
 # ---------------------------------------------------------------------------
+
+def _effective_kind(spec: og.ParallelismSpec,
+                    train: Optional[TrainingStepSpec]) -> str:
+    """The schedule flavour a (spec, train) pair actually wires — the
+    value ``Schedule.kind`` must carry so scalar bubble accounting matches
+    the template the sweep path picks.  '1f1b' only materializes for a
+    training pipeline (forward-only or single-stage graphs degenerate to
+    GPipe)."""
+    if spec.pp > 1 and train is not None and spec.schedule == "1f1b":
+        return "1f1b"
+    if spec.pp > 1 and spec.microbatches > 1 \
+            and spec.schedule == "interleaved":
+        return "interleaved"
+    return "gpipe"
+
 
 def schedule_parallel(predictor, cfg: C.ModelConfig, batch: int, seq: int,
                       spec: og.ParallelismSpec,
@@ -880,7 +1288,8 @@ def schedule_parallel(predictor, cfg: C.ModelConfig, batch: int, seq: int,
     """Forward-pass schedule under ``spec``, priced by ``predictor``."""
     return schedule_graph(predictor,
                           build_parallel_graph(cfg, batch, seq, spec,
-                                               dtype=dtype))
+                                               dtype=dtype),
+                          kind=_effective_kind(spec, None))
 
 
 def schedule_step(predictor, cfg: C.ModelConfig, batch: int, seq: int,
@@ -889,9 +1298,12 @@ def schedule_step(predictor, cfg: C.ModelConfig, batch: int, seq: int,
                   dtype: Optional[str] = None) -> Schedule:
     """Training-step schedule (fwd + bwd + grad comm + optimizer), priced
     by ``predictor``."""
+    spec = spec or og.ParallelismSpec()
     return schedule_graph(predictor,
                           build_training_graph(cfg, batch, seq, spec=spec,
-                                               train=train, dtype=dtype))
+                                               train=train, dtype=dtype),
+                          kind=_effective_kind(spec, train
+                                               or TrainingStepSpec()))
 
 
 # ---------------------------------------------------------------------------
@@ -922,6 +1334,8 @@ class StrategySweep:
     bwd_seconds: Optional[np.ndarray] = None
     optimizer_seconds: Optional[np.ndarray] = None
     cached: Optional[np.ndarray] = None
+    peak_bytes: Optional[np.ndarray] = None   # worst-device peak memory
+    feasible: Optional[np.ndarray] = None     # peak_bytes <= capacity mask
 
     def __len__(self) -> int:
         return len(self.specs)
@@ -932,8 +1346,14 @@ class StrategySweep:
         return ((self.max_stream_busy <= self.seconds * (1 + rel))
                 & (self.seconds <= self.sequential_seconds * (1 + rel)))
 
-    def best(self) -> int:
-        """Index of the fastest spec."""
+    def best(self, feasible_only: bool = True) -> int:
+        """Index of the fastest spec.  When a ``feasible`` mask is present
+        (the sweep was given a memory capacity) only feasible specs
+        compete, unless none is or ``feasible_only=False``."""
+        if (feasible_only and self.feasible is not None
+                and bool(self.feasible.any())):
+            idx = np.flatnonzero(self.feasible)
+            return int(idx[np.argmin(self.seconds[idx])])
         return int(np.argmin(self.seconds))
 
     def tag(self, i: int) -> str:
@@ -956,6 +1376,10 @@ class StrategySweep:
             out.update(fwd_seconds=float(self.fwd_seconds[i]),
                        bwd_seconds=float(self.bwd_seconds[i]),
                        optimizer_seconds=float(self.optimizer_seconds[i]))
+        if self.peak_bytes is not None:
+            out["peak_bytes"] = float(self.peak_bytes[i])
+        if self.feasible is not None:
+            out["feasible"] = bool(self.feasible[i])
         if self.cached is not None:
             out["cached"] = bool(self.cached[i])
         return out
@@ -969,11 +1393,13 @@ SWEEP_METRICS = ("seconds", "compute_seconds", "comm_seconds",
                  "exposed_comm_seconds", "sequential_seconds",
                  "bubble_share", "max_stream_busy")
 TRAIN_METRICS = ("fwd_seconds", "bwd_seconds", "optimizer_seconds")
+MEM_METRICS = ("peak_bytes",)     # predictor-free; feasible is derived
 
 
 def sweep_strategies(predictor, cfg: C.ModelConfig, batch: int, seq: int,
                      specs: Sequence[og.ParallelismSpec], *,
-                     train=None, dtype: Optional[str] = None
+                     train=None, dtype: Optional[str] = None,
+                     hbm_bytes: Optional[float] = None
                      ) -> StrategySweep:
     """Price many parallelism strategies in one vectorized pass.
 
@@ -996,7 +1422,12 @@ def sweep_strategies(predictor, cfg: C.ModelConfig, batch: int, seq: int,
 
     ``train`` is ``None`` (forward sweep), one shared ``TrainingStepSpec``,
     or a per-spec sequence aligned with ``specs`` (so a (spec × bucket_mb)
-    grid is a single call)."""
+    grid is a single call).
+
+    Every sweep also carries the predictor-free ``peak_bytes`` column
+    (worst-device peak memory per spec, ``peak_memory_bytes``'s estimate
+    from the same plans); passing ``hbm_bytes`` additionally sets the
+    ``feasible`` mask, which ``StrategySweep.best`` then respects."""
     dt = dtype or "float32"
     specs = list(specs)
     if train is None:
@@ -1041,30 +1472,46 @@ def sweep_strategies(predictor, cfg: C.ModelConfig, batch: int, seq: int,
     train_kw = {name: out.pop(name) for name in TRAIN_METRICS}
     if trains is None:
         train_kw = {name: None for name in TRAIN_METRICS}
-    return StrategySweep(specs=specs, trains=trains, **out, **train_kw)
+    act_sum, act_max = _component_act_bytes(b.uniq_ops)
+    peak = np.array([max(_peak_stage_bytes(
+        cfg, sp, trains[i] if trains is not None else None,
+        plans[i][0].key[0], plans[i][1], act_sum, act_max, dt))
+        for i, sp in enumerate(specs)])
+    feasible = (peak <= float(hbm_bytes)) if hbm_bytes is not None else None
+    return StrategySweep(specs=specs, trains=trains, peak_bytes=peak,
+                         feasible=feasible, **out, **train_kw)
 
 
 def strategy_grid(*, dp: Sequence[int] = (1,), tp: Sequence[int] = (1,),
                   pp: Sequence[int] = (1,),
                   microbatches: Sequence[int] = (1,),
                   act_modes: Sequence[str] = ("tp",),
+                  schedules: Sequence[str] = ("gpipe",),
                   max_world: Optional[int] = None
                   ) -> List[og.ParallelismSpec]:
     """Cartesian ``ParallelismSpec`` grid for sweeps, in deterministic
-    (act_mode, dp, tp, pp, microbatches) nesting order.  ``max_world``
-    drops specs needing more devices than the fleet has."""
+    (act_mode, dp, tp, pp, microbatches, schedule) nesting order.
+    ``max_world`` drops specs needing more devices than the fleet has;
+    non-GPipe schedules are skipped at ``pp == 1`` (without a pipeline
+    every schedule kind prices identically — keeping them would only
+    duplicate grid points under different tags)."""
     out: List[og.ParallelismSpec] = []
     for a in act_modes:
         for d in dp:
             for t in tp:
                 for p in pp:
                     for m in microbatches:
-                        s = og.ParallelismSpec(dp=int(d), tp=int(t),
-                                               pp=int(p), act_mode=a,
-                                               microbatches=int(m))
-                        if max_world is not None and s.world > max_world:
-                            continue
-                        out.append(s)
+                        for sch in schedules:
+                            if sch != "gpipe" and int(p) == 1:
+                                continue
+                            s = og.ParallelismSpec(dp=int(d), tp=int(t),
+                                                   pp=int(p), act_mode=a,
+                                                   microbatches=int(m),
+                                                   schedule=sch)
+                            if (max_world is not None
+                                    and s.world > max_world):
+                                continue
+                            out.append(s)
     return out
 
 

@@ -13,6 +13,12 @@ answer every query from cache.
 kernel id the selection oracle (``core/oracle.py``) actually picked, and
 ``explain_kernels`` exposes the oracle's scored candidate list for one op
 shape — "which profiled kernel would the library run here, and why".
+
+``plan_training`` is the fleet-planning endpoint: one call enumerates the
+(dp, tp, pp, microbatches, schedule, bucket_mb) grid for an N-device
+budget, filters it by estimated peak memory, and returns the fastest
+feasible ``TrainingPlan`` — cached point-by-point under the same keys as
+``latency_train`` / ``sweep_train``.
 """
 from __future__ import annotations
 
@@ -79,6 +85,8 @@ class ParallelLatencyResult(_CommShareMixin):
     exposed_comm_seconds: float = 0.0
     microbatches: int = 1
     cached: bool = False
+    schedule: str = "gpipe"
+    peak_bytes: float = 0.0
 
 
 @dataclasses.dataclass
@@ -107,6 +115,45 @@ class TrainLatencyResult(_CommShareMixin):
     optimizer_seconds: float
     exposed_comm_seconds: float
     cached: bool = False
+    schedule: str = "gpipe"
+    peak_bytes: float = 0.0
+
+
+@dataclasses.dataclass
+class TrainingPlan:
+    """The answer to "what is the fastest *feasible* way to train this
+    model on N devices": the min-makespan point of the swept
+    (dp, tp, pp, microbatches, schedule, bucket_mb) grid that fits in
+    device memory.  ``breakdown`` is the winning spec's full sweep row
+    (fwd/bwd/comm/optimizer splits, bubble share, exposed comm,
+    peak bytes); ``alternatives`` holds the next-fastest feasible rows —
+    the runner-ups a capacity- or topology-constrained deployment would
+    fall back to."""
+    model: str
+    device: str
+    dtype: str
+    global_batch: int
+    seq: int
+    devices: int
+    memory_bytes: Optional[float]
+    dp: int
+    tp: int
+    pp: int
+    microbatches: int
+    schedule: str
+    act_mode: str
+    optimizer: str
+    bucket_mb: float
+    world: int
+    seconds: float
+    peak_bytes: float
+    breakdown: dict
+    n_candidates: int
+    n_feasible: int
+    alternatives: list
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
 
 
 def _sched_entry(sched) -> dict:
@@ -183,6 +230,7 @@ class LatencyService:
     def latency_parallel(self, model: Union[str, ModelConfig], batch: int,
                          seq: int, dp: int = 1, tp: int = 1, pp: int = 1,
                          act_mode: str = "tp", microbatches: int = 1,
+                         schedule: str = "gpipe",
                          dtype: Optional[str] = None,
                          device: Optional[str] = None
                          ) -> ParallelLatencyResult:
@@ -194,11 +242,12 @@ class LatencyService:
         the answer is bit-identical to ``latency_query`` (same op list,
         same accumulation).  Cached on the spec tag, like ``latency_query``
         — planners sweeping strategy grids hit the cache on repeats."""
+        from repro.core import schedule as S
         from repro.core.opgraph import ParallelismSpec
         cfg = self._resolve(model)
         pred = self.predictor.for_device(device)
         spec = ParallelismSpec(dp=dp, tp=tp, pp=pp, act_mode=act_mode,
-                               microbatches=microbatches)
+                               microbatches=microbatches, schedule=schedule)
 
         def result(d, cached):
             return ParallelLatencyResult(
@@ -208,7 +257,8 @@ class LatencyService:
                 seconds=d["seconds"], compute_seconds=d["compute_seconds"],
                 comm_seconds=d["comm_seconds"],
                 exposed_comm_seconds=d["exposed_comm_seconds"],
-                microbatches=int(microbatches), cached=cached)
+                microbatches=int(microbatches), cached=cached,
+                schedule=schedule, peak_bytes=d.get("peak_bytes", 0.0))
 
         key = PredictionCache.make_key(config_key(cfg), pred.device, dtype,
                                        batch, seq, spec=spec.tag())
@@ -216,17 +266,20 @@ class LatencyService:
         # a persisted entry missing expected fields (foreign writer,
         # hand-edited file) is treated as a miss, not a crash
         if isinstance(hit, dict) and {"seconds", "compute_seconds",
-                                      "comm_seconds",
-                                      "exposed_comm_seconds"} <= hit.keys():
+                                      "comm_seconds", "exposed_comm_seconds",
+                                      "peak_bytes"} <= hit.keys():
             return result(hit, True)
         sched = pred.schedule_parallel(cfg, batch, seq, spec, dtype=dtype)
         d = _sched_entry(sched)
+        d["peak_bytes"] = S.peak_memory_bytes(cfg, batch, seq, spec,
+                                              dtype=dtype)
         self.cache.put(key, d)
         return result(d, False)
 
     def latency_train(self, model: Union[str, ModelConfig], batch: int,
                       seq: int, dp: int = 1, tp: int = 1, pp: int = 1,
                       act_mode: str = "tp", microbatches: int = 1,
+                      schedule: str = "gpipe",
                       optimizer: str = "adamw", bucket_mb: float = 25.0,
                       dtype: Optional[str] = None,
                       device: Optional[str] = None) -> TrainLatencyResult:
@@ -235,12 +288,13 @@ class LatencyService:
         with backward, pipeline microbatching, and the optimizer update —
         all priced as the two-stream schedule makespan
         (``core/schedule.py``).  Cached on the spec + training tags."""
+        from repro.core import schedule as S
         from repro.core.opgraph import ParallelismSpec
         from repro.core.schedule import TrainingStepSpec
         cfg = self._resolve(model)
         pred = self.predictor.for_device(device)
         spec = ParallelismSpec(dp=dp, tp=tp, pp=pp, act_mode=act_mode,
-                               microbatches=microbatches)
+                               microbatches=microbatches, schedule=schedule)
         train = TrainingStepSpec(optimizer=optimizer, bucket_mb=bucket_mb)
 
         def result(d, cached):
@@ -254,13 +308,14 @@ class LatencyService:
                 bwd_seconds=d["bwd_seconds"], comm_seconds=d["comm_seconds"],
                 optimizer_seconds=d["optimizer_seconds"],
                 exposed_comm_seconds=d["exposed_comm_seconds"],
-                cached=cached)
+                cached=cached, schedule=schedule,
+                peak_bytes=d.get("peak_bytes", 0.0))
 
         key = PredictionCache.make_key(
             config_key(cfg), pred.device, dtype, batch, seq,
             spec=f"{spec.tag()}+{train.tag()}+train")
         _FIELDS = {"seconds", "fwd_seconds", "bwd_seconds", "comm_seconds",
-                   "optimizer_seconds", "exposed_comm_seconds"}
+                   "optimizer_seconds", "exposed_comm_seconds", "peak_bytes"}
         hit = self.cache.get(key)
         # tolerate persisted entries missing expected fields: miss, recompute
         if isinstance(hit, dict) and _FIELDS <= hit.keys():
@@ -278,12 +333,15 @@ class LatencyService:
             else:
                 fwd += r.seconds
         d = _sched_entry(sched)
-        d.update(fwd_seconds=fwd, bwd_seconds=bwd, optimizer_seconds=opt)
+        d.update(fwd_seconds=fwd, bwd_seconds=bwd, optimizer_seconds=opt,
+                 peak_bytes=S.peak_memory_bytes(cfg, batch, seq, spec,
+                                                train=train, dtype=dtype))
         self.cache.put(key, d)
         return result(d, False)
 
     def sweep_parallel(self, model: Union[str, ModelConfig], batch: int,
                        seq: int, specs, dtype: Optional[str] = None,
+                       hbm_bytes: Optional[float] = None,
                        device: Optional[str] = None):
         """Price MANY forward parallelism strategies in one vectorized
         pass (``schedule.sweep_strategies``): cached specs are answered
@@ -291,7 +349,8 @@ class LatencyService:
         single template/bind/simulate-batch call, and every fresh result
         is written back under its spec-tagged key — so a follow-up
         ``latency_parallel`` on any swept spec is a cache hit.  Returns a
-        ``schedule.StrategySweep`` with the per-spec ``cached`` mask."""
+        ``schedule.StrategySweep`` with the per-spec ``cached`` mask (and
+        the ``feasible`` mask when ``hbm_bytes`` is given)."""
         from repro.core import schedule as S
         cfg = self._resolve(model)
         pred = self.predictor.for_device(device)
@@ -300,11 +359,13 @@ class LatencyService:
                                          dtype, batch, seq, spec=sp.tag())
                 for sp in specs]
         return self._sweep(pred, cfg, batch, seq, specs, keys,
-                           S.SWEEP_METRICS, dtype, trains=None)
+                           S.SWEEP_METRICS + S.MEM_METRICS, dtype,
+                           trains=None, hbm_bytes=hbm_bytes)
 
     def sweep_train(self, model: Union[str, ModelConfig], batch: int,
                     seq: int, specs, train=None,
                     dtype: Optional[str] = None,
+                    hbm_bytes: Optional[float] = None,
                     device: Optional[str] = None):
         """``sweep_parallel`` for TRAINING steps: each spec priced as one
         optimizer step (fwd + bwd + bucketed gradient all-reduce +
@@ -330,14 +391,16 @@ class LatencyService:
                     spec=f"{sp.tag()}+{tr.tag()}+train")
                 for sp, tr in zip(specs, trains)]
         return self._sweep(pred, cfg, batch, seq, specs, keys,
-                           S.SWEEP_METRICS + S.TRAIN_METRICS, dtype,
-                           trains=trains)
+                           S.SWEEP_METRICS + S.TRAIN_METRICS + S.MEM_METRICS,
+                           dtype, trains=trains, hbm_bytes=hbm_bytes)
 
     def _sweep(self, pred, cfg, batch, seq, specs, keys, fields, dtype,
-               trains):
+               trains, hbm_bytes=None):
         """Shared cache-or-compute core of ``sweep_parallel`` /
         ``sweep_train``: answer hits from the cache, vector-price the
-        misses in ONE ``sweep_strategies`` call, persist them."""
+        misses in ONE ``sweep_strategies`` call, persist them.  The
+        ``feasible`` mask is derived locally (``peak_bytes`` is part of
+        every entry; capacity is a query parameter, not cache state)."""
         from repro.core import schedule as S
         need = set(fields)
         hits = [self.cache.get(k) for k in keys]
@@ -360,8 +423,97 @@ class LatencyService:
                 self.cache.put(keys[i], entry)
                 for name in fields:
                     out[name][i] = entry[name]
+        feasible = (out["peak_bytes"] <= float(hbm_bytes)
+                    if hbm_bytes is not None else None)
         return S.StrategySweep(specs=specs, trains=trains, cached=cached,
-                               **out)
+                               feasible=feasible, **out)
+
+    def plan_training(self, model: Union[str, ModelConfig],
+                      global_batch: int, seq: int, *, devices: int,
+                      memory_gb: Optional[float] = None,
+                      optimizer: str = "adamw",
+                      bucket_mbs: Sequence[float] = (25.0,),
+                      schedules: Sequence[str] = ("gpipe", "1f1b",
+                                                  "interleaved"),
+                      act_mode: str = "tp", top_k: int = 3,
+                      dtype: Optional[str] = None,
+                      device: Optional[str] = None) -> TrainingPlan:
+        """Strategy auto-search under a memory constraint: enumerate the
+        power-of-two (dp, tp, pp) grid with ``dp*tp*pp <= devices``,
+        crossed with microbatch counts dividing the per-replica batch,
+        every schedule kind, and every gradient-bucket size; price the
+        whole grid in one ``sweep_train`` call; reject points whose
+        estimated peak memory (``schedule.peak_memory_bytes``) exceeds
+        the capacity; return the min-makespan survivor.
+
+        Capacity is ``memory_gb`` (GiB per device) when given, else the
+        target device profile's ``hbm_bytes``, else unconstrained.  Every
+        priced point is cached under the same spec-tagged keys as
+        ``latency_train`` / ``sweep_train`` — replanning with a different
+        capacity or device count re-answers from cache."""
+        from repro.core import schedule as S
+        cfg = self._resolve(model)
+        pred = self.predictor.for_device(device)
+        devices = int(devices)
+        if devices < 1:
+            raise ValueError("devices must be >= 1")
+
+        cap: Optional[float] = None
+        if memory_gb is not None:
+            cap = float(memory_gb) * 2**30
+        else:
+            from repro.core import devices as D
+            self.predictor.host_profile()   # register host in the fleet
+            try:
+                cap = float(D.get_profile(pred.device).hbm_bytes)
+            except KeyError:
+                cap = None                  # unknown device: unconstrained
+
+        pows2 = [1 << i for i in range(devices.bit_length())
+                 if 1 << i <= devices]
+        grid = S.strategy_grid(
+            dp=[d for d in pows2 if global_batch % d == 0],
+            tp=pows2, pp=[p for p in pows2 if p <= cfg.n_layers],
+            microbatches=pows2, act_modes=(act_mode,),
+            schedules=schedules, max_world=devices)
+        grid = [sp for sp in grid
+                if global_batch % (sp.dp * sp.microbatches) == 0]
+        if not grid:
+            raise ValueError(f"no candidate strategy fits {devices} "
+                             f"device(s) at global batch {global_batch}")
+        specs, trains = [], []
+        for bkt in bucket_mbs:
+            tr = S.TrainingStepSpec(optimizer=optimizer,
+                                    bucket_mb=float(bkt))
+            specs.extend(grid)
+            trains.extend([tr] * len(grid))
+        sw = self.sweep_train(cfg, global_batch, seq, specs, train=trains,
+                              dtype=dtype, hbm_bytes=cap, device=device)
+        if sw.feasible is not None and not sw.feasible.any():
+            raise ValueError(
+                f"no strategy fits in {cap / 2**30:.1f} GiB: smallest "
+                f"footprint is {float(sw.peak_bytes.min()) / 2**30:.2f} "
+                f"GiB — lower the batch or raise devices/memory")
+        best = sw.best()
+        order = np.argsort(sw.seconds, kind="stable")
+        runners = [int(i) for i in order
+                   if i != best
+                   and (sw.feasible is None or sw.feasible[i])]
+        sp = specs[best]
+        return TrainingPlan(
+            model=cfg.name, device=pred.device, dtype=dtype or "float32",
+            global_batch=int(global_batch), seq=int(seq), devices=devices,
+            memory_bytes=cap, dp=sp.dp, tp=sp.tp, pp=sp.pp,
+            microbatches=sp.microbatches, schedule=sp.schedule,
+            act_mode=sp.act_mode, optimizer=optimizer,
+            bucket_mb=trains[best].bucket_mb, world=sp.world,
+            seconds=float(sw.seconds[best]),
+            peak_bytes=float(sw.peak_bytes[best]),
+            breakdown=sw.row(best),
+            n_candidates=len(specs),
+            n_feasible=int(sw.feasible.sum()) if sw.feasible is not None
+            else len(specs),
+            alternatives=[sw.row(i) for i in runners[:max(top_k - 1, 0)]])
 
     def latency_breakdown(self, model: Union[str, ModelConfig], batch: int,
                           seq: int, dtype: Optional[str] = None,

@@ -1,0 +1,161 @@
+"""Golden tests for ``LatencyService.plan_training`` — the memory-
+constrained strategy auto-search: plan == brute-force minimum over the
+same candidate grid, the device budget is enforced, memory pressure
+rejects the unconstrained winner and promotes the feasible runner-up
+(hand-worked pinned example), infeasible-everywhere raises, and every
+priced point round-trips through the ``sweep_train``/``latency_train``
+shared cache."""
+import numpy as np
+import pytest
+
+from repro.configs import registry as cr
+from repro.core import calibrate
+from repro.core import opgraph as og
+from repro.core import schedule as S
+
+
+@pytest.fixture(scope="module")
+def svc(calibration_store, tmp_path_factory):
+    from repro.serving.latency_service import LatencyService
+    return LatencyService(
+        calibration_store, calibrate.device_name(),
+        cache_path=str(tmp_path_factory.mktemp("plan") / "cache.json"))
+
+
+CFG = cr.reduced("qwen2-0.5b")
+
+
+def _candidates(devices, global_batch, bucket_mbs,
+                schedules=("gpipe", "1f1b", "interleaved")):
+    """The exact grid ``plan_training`` enumerates (kept in sync so the
+    brute-force check below walks the same candidate set)."""
+    pows2 = [1 << i for i in range(devices.bit_length())
+             if 1 << i <= devices]
+    grid = S.strategy_grid(
+        dp=[d for d in pows2 if global_batch % d == 0],
+        tp=pows2, pp=[p for p in pows2 if p <= CFG.n_layers],
+        microbatches=pows2, schedules=schedules, max_world=devices)
+    grid = [sp for sp in grid
+            if global_batch % (sp.dp * sp.microbatches) == 0]
+    return [(sp, S.TrainingStepSpec(bucket_mb=float(b)))
+            for b in bucket_mbs for sp in grid]
+
+
+def test_plan_matches_brute_force_min(svc):
+    """The one-call plan equals the minimum of per-candidate
+    ``schedule_step`` makespans over the same feasible grid."""
+    plan = svc.plan_training(CFG, 8, 32, devices=4, memory_gb=80.0,
+                             bucket_mbs=(5.0,))
+    cands = _candidates(4, 8, (5.0,))
+    assert plan.n_candidates == len(cands)
+    best = None
+    for sp, tr in cands:
+        if S.peak_memory_bytes(CFG, 8, 32, sp, train=tr) > 80.0 * 2**30:
+            continue
+        mk = svc.predictor.schedule_step(CFG, 8, 32, spec=sp,
+                                         train=tr).makespan
+        if best is None or mk < best:
+            best = mk
+    assert plan.seconds == pytest.approx(best, rel=1e-9)
+    assert plan.dp * plan.tp * plan.pp <= 4
+    assert plan.world <= 4
+
+
+def test_plan_enforces_device_budget(svc):
+    plan = svc.plan_training(CFG, 16, 32, devices=8, memory_gb=80.0)
+    assert plan.world == plan.dp * plan.tp * plan.pp <= 8
+    for alt in plan.alternatives:
+        # every runner-up row is a swept candidate: world <= devices by
+        # grid construction (max_world) — spot-check via the tag
+        assert alt["seconds"] >= plan.seconds * (1 - 1e-12)
+
+
+def test_plan_memory_rejects_winner_promotes_runner_up(svc):
+    """Hand-worked feasibility pin: capacity set strictly between the
+    unconstrained winner's footprint and the smallest footprint rejects
+    the winner on memory alone and returns the fastest spec that fits."""
+    unconstrained = svc.plan_training(CFG, 8, 32, devices=4,
+                                      memory_gb=1024.0, bucket_mbs=(5.0,))
+    cands = _candidates(4, 8, (5.0,))
+    peaks = np.array([S.peak_memory_bytes(CFG, 8, 32, sp, train=tr)
+                      for sp, tr in cands])
+    cap = float(unconstrained.peak_bytes) - 1.0   # winner no longer fits
+    assert peaks.min() < cap, "pinned example needs a smaller-footprint spec"
+    plan = svc.plan_training(CFG, 8, 32, devices=4,
+                             memory_gb=cap / 2**30, bucket_mbs=(5.0,))
+    assert plan.peak_bytes <= cap
+    assert plan.breakdown["spec"] != unconstrained.breakdown["spec"]
+    assert plan.seconds >= unconstrained.seconds * (1 - 1e-12)
+    assert plan.n_feasible < plan.n_candidates
+    # the constrained plan is the brute-force min over specs that fit
+    best = None
+    for (sp, tr), pk in zip(cands, peaks):
+        if pk > cap:
+            continue
+        mk = svc.predictor.schedule_step(CFG, 8, 32, spec=sp,
+                                         train=tr).makespan
+        if best is None or mk < best:
+            best = mk
+    assert plan.seconds == pytest.approx(best, rel=1e-9)
+
+
+def test_plan_infeasible_everywhere_raises(svc):
+    with pytest.raises(ValueError, match="no strategy fits"):
+        svc.plan_training(CFG, 8, 32, devices=2, memory_gb=1e-6)
+
+
+def test_plan_cache_round_trip_shared_with_sweep_train(svc):
+    """Replanning answers every point from cache, and the winning entry
+    is the same one ``latency_train`` / ``sweep_train`` read and write."""
+    plan = svc.plan_training(CFG, 8, 32, devices=2, memory_gb=80.0,
+                             bucket_mbs=(5.0, 25.0))
+    again = svc.plan_training(CFG, 8, 32, devices=2, memory_gb=80.0,
+                              bucket_mbs=(5.0, 25.0))
+    assert again.seconds == plan.seconds
+    assert again.breakdown["spec"] == plan.breakdown["spec"]
+    assert again.breakdown["cached"]
+    t = svc.latency_train(CFG, 8, 32, dp=plan.dp, tp=plan.tp, pp=plan.pp,
+                          microbatches=plan.microbatches,
+                          schedule=plan.schedule, optimizer=plan.optimizer,
+                          bucket_mb=plan.bucket_mb)
+    assert t.cached and t.seconds == plan.seconds
+    assert t.peak_bytes == plan.peak_bytes
+    # the full swept candidate list is now cached for sweep_train too
+    cands = _candidates(2, 8, (5.0,))
+    sw = svc.sweep_train(CFG, 8, 32, [sp for sp, _ in cands],
+                         train=[tr for _, tr in cands])
+    assert sw.cached.all()
+
+
+def test_plan_64_devices_single_call(svc):
+    """The acceptance query: a 64-device budget answered in one call,
+    with a schedule breakdown and feasible alternatives."""
+    plan = svc.plan_training(CFG, 64, 32, devices=64, memory_gb=80.0,
+                             bucket_mbs=(5.0,), top_k=3)
+    assert plan.world <= 64
+    assert plan.n_candidates > 100          # a real grid, not a stub
+    assert plan.n_feasible > 0
+    assert {"seconds", "fwd_seconds", "bwd_seconds", "optimizer_seconds",
+            "bubble_share", "peak_bytes", "feasible"} <= plan.breakdown.keys()
+    assert plan.breakdown["feasible"]
+    assert len(plan.alternatives) == 2
+    assert all(a["seconds"] >= plan.seconds * (1 - 1e-12)
+               for a in plan.alternatives)
+
+
+def test_plan_memory_pressure_prefers_1f1b(svc):
+    """Under memory pressure 1F1B's smaller footprint becomes decisive:
+    with pipeline-only candidates (dp=tp=1 via devices < 2... ) — pinned
+    directly: for pp=2, mb=4 the 1F1B footprint is strictly below GPipe's
+    and a capacity between them keeps only 1F1B feasible."""
+    sp_g = og.ParallelismSpec(pp=2, microbatches=4)
+    sp_1 = og.ParallelismSpec(pp=2, microbatches=4, schedule="1f1b")
+    tr = S.TrainingStepSpec(bucket_mb=5.0)
+    pk_g = S.peak_memory_bytes(CFG, 8, 32, sp_g, train=tr)
+    pk_1 = S.peak_memory_bytes(CFG, 8, 32, sp_1, train=tr)
+    assert pk_1 < pk_g
+    cap = (pk_1 + pk_g) / 2
+    sw = svc.sweep_train(CFG, 8, 32, [sp_g, sp_1], train=tr,
+                         hbm_bytes=cap)
+    assert list(sw.feasible) == [False, True]
+    assert sw.best() == 1                   # the only feasible point wins

@@ -367,6 +367,40 @@ def test_bubble_share_ignores_non_stage_compute(bp):
     assert sched.bubble_share == pytest.approx(want, rel=1e-12)
 
 
+def test_bubble_share_schedule_kind_aware(bp):
+    """Regression: ``Schedule.bubble_share`` used to hard-code the GPipe
+    executor-column rule (idle / (k · makespan)) for EVERY graph.  A
+    1F1B-wired schedule must instead report idle over ideal compute —
+    the convention whose balanced-pipeline value is ``(pp-1)/mb`` — so
+    the same timeline yields two different (documented) shares."""
+    rows = [S.PredictionRow(f"stage{i}", "compute", 1.0, "t")
+            for i in range(2)]
+    streams = ["compute.s0", "compute.s1"]
+    st = np.array([0.0, 0.5])
+    sched = S.Schedule(rows, streams, st, st + 1.0, makespan=1.5)
+    assert sched.kind == "gpipe"
+    assert sched.bubble_share == pytest.approx(1.0 / 3.0, rel=1e-12)
+    as_1f1b = dataclasses.replace(sched, kind="1f1b")
+    assert as_1f1b.bubble_share == pytest.approx(0.5, rel=1e-12)
+    # and the builders thread the kind: a 1f1b spec's scalar schedule
+    # reports the ideal-relative share, its gpipe twin the makespan one
+    cfg = cr.reduced("qwen2-0.5b")
+    one = bp.schedule_step(cfg, 8, 32,
+                           spec=og.ParallelismSpec(pp=2, microbatches=4,
+                                                   schedule="1f1b"))
+    gp = bp.schedule_step(cfg, 8, 32,
+                          spec=og.ParallelismSpec(pp=2, microbatches=4))
+    assert one.kind == "1f1b" and gp.kind == "gpipe"
+    busy = one.busy()
+    comp = sum(b for s, b in busy.items() if s.startswith("compute.s"))
+    assert one.bubble_share == pytest.approx(
+        (2 * one.makespan - comp) / comp, rel=1e-9)
+    busy_g = gp.busy()
+    comp_g = sum(b for s, b in busy_g.items() if s.startswith("compute.s"))
+    assert gp.bubble_share == pytest.approx(
+        (2 * gp.makespan - comp_g) / (2 * gp.makespan), rel=1e-9)
+
+
 def test_latency_train_splits_consistent(bp):
     from repro.serving.latency_service import LatencyService
     svc = LatencyService(bp.store, bp.device)
