@@ -59,6 +59,24 @@ def get_neusight(store, *, n_samples=40, steps=800, seed=0):
     return model
 
 
+def write_bench(name: str, payload: dict, dry: bool = False) -> str:
+    """Persist one benchmark record as ``BENCH_<name>[_dry].json`` under
+    ``artifacts/`` AND — for real (non-dry) runs — mirrored at the repo
+    root, where the perf-trajectory tooling reads ``BENCH_*.json``.  Dry
+    runs stay under ``artifacts/`` so CI smoke never perturbs the tracked
+    trajectory.  Returns the last written path."""
+    import json
+    fname = f"BENCH_{name}{'_dry' if dry else ''}.json"
+    blob = json.dumps(payload, indent=2)
+    paths = [os.path.join(ARTIFACTS, fname)]
+    if not dry:
+        paths.append(os.path.join(ROOT, fname))
+    for path in paths:
+        with open(path, "w") as f:
+            f.write(blob)
+    return paths[-1]
+
+
 class timer:
     def __enter__(self):
         self.t0 = time.perf_counter()

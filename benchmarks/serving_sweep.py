@@ -1,0 +1,149 @@
+"""Serving-prediction benchmark: phase-aware latency_serve over a capacity
+sweep.
+
+``LatencyService.latency_serve`` prices a whole continuous-batching serving
+point — prefill forwards through the cached scalar endpoints, decode steps
+through ONE ``predict_decode_grid`` call (sq=1 KV-cache-read attention
+priced memory-bound), then the slot-refill occupancy simulation
+(``schedule.simulate_serving``).  This benchmark times the sweep over a
+(capacity, tp) grid cold (predictions computed) and warm (every point a
+cache hit), records tokens/sec + TTFT/TPOT percentiles per point, and
+writes the machine-readable ``BENCH_serving_sweep.json`` (artifacts/ + repo
+root) so the serving-prediction perf trajectory is tracked from PR 8 on.
+
+  PYTHONPATH=src python -m benchmarks.serving_sweep [--arch qwen3-mini]
+      [--device a100_80g] [--capacities 1,2,4,8,16] [--tps 1,2,4]
+      [--prompts 128,512] [--outputs 32,128] [--requests 64]
+      [--json artifacts/BENCH_serving_sweep.json] [--dry-run]
+
+``--dry-run`` sweeps a small grid on the reduced arch and asserts the
+goldens: the zero-decode degenerate mix is bit-identical to
+``latency_query``, a repeated sweep answers every point from cache with
+identical numbers, and decode attention carries the ``kv_read@gqaN``
+kernel attribution — so CI (scripts/test.sh --smoke) exercises the full
+serving path cheaply.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks import common
+from repro.core import calibrate
+from repro.core.schedule import TrafficMix
+from repro.serving.latency_service import LatencyService
+
+
+def run(arch="qwen3-mini", device="a100_80g", capacities=(1, 2, 4, 8, 16),
+        tps=(1, 2, 4), prompts=(128, 512), outputs=(32, 128), requests=64,
+        dtype=None, verbose=True):
+    svc = LatencyService(common.get_calibration(), calibrate.device_name())
+    mix = TrafficMix(prompt_lens=tuple(prompts), output_lens=tuple(outputs),
+                     n_requests=int(requests))
+    n = len(capacities) * len(tps)
+
+    with common.timer() as t_cold:
+        results = svc.sweep_serve(arch, mix, capacities, tps=tps,
+                                  dtype=dtype, device=device)
+    with common.timer() as t_warm:
+        warm = svc.sweep_serve(arch, mix, capacities, tps=tps,
+                               dtype=dtype, device=device)
+    assert all(w.cached for w in warm), "warm sweep missed the cache"
+    assert all(w.tokens_per_sec == r.tokens_per_sec
+               for w, r in zip(warm, results)), "cache changed the answer"
+
+    cold_pps = n / t_cold.s
+    warm_pps = n / t_warm.s
+    best = max(results, key=lambda r: r.tokens_per_sec)
+    res = {
+        "arch": results[0].model, "device": results[0].device,
+        "dtype": dtype or "float32", "mix": {
+            "prompt_lens": list(prompts), "output_lens": list(outputs),
+            "n_requests": int(requests), "tag": mix.tag(),
+            "max_ctx": mix.max_ctx},
+        "n_points": n, "cold_seconds": t_cold.s,
+        "cold_points_per_sec": cold_pps,
+        "warm_seconds": t_warm.s, "warm_points_per_sec": warm_pps,
+        "warm_speedup": warm_pps / cold_pps,
+        "points": [r.to_json() for r in results],
+        "best": best.to_json(),
+    }
+    if verbose:
+        print(f"serve grid: {n} points  cold {t_cold.s*1e3:.1f}ms "
+              f"({cold_pps:,.1f}/s)  warm {t_warm.s*1e3:.1f}ms "
+              f"({warm_pps:,.0f}/s)")
+        print(f"best point: cap{best.capacity}.tp{best.tp}  "
+              f"{best.tokens_per_sec:,.0f} tok/s  "
+              f"ttft_p95 {best.ttft_p95*1e3:.2f}ms  "
+              f"tpot_p95 {best.tpot_p95*1e3:.3f}ms  "
+              f"gqa {best.gqa_ratio:.0f}")
+    common.emit("serving_sweep/cold_points_per_sec", 1e6 / cold_pps,
+                f"{cold_pps:.1f}/s over {n} points")
+    common.emit("serving_sweep/warm_points_per_sec", 1e6 / warm_pps,
+                f"{warm_pps:.0f}/s (speedup {warm_pps / cold_pps:.0f}x)")
+    return res, svc, mix
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-mini")
+    ap.add_argument("--device", default="a100_80g")
+    ap.add_argument("--capacities", default="1,2,4,8,16")
+    ap.add_argument("--tps", default="1,2,4")
+    ap.add_argument("--prompts", default="128,512")
+    ap.add_argument("--outputs", default="32,128")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--dtype", default=None)
+    ap.add_argument("--json", default=None,
+                    help="output path override (default: "
+                         "BENCH_serving_sweep[_dry].json at artifacts/ AND "
+                         "the repo root; dry runs write ..._dry.json so CI "
+                         "never clobbers the tracked perf trajectory)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="small grid on the reduced arch + golden checks "
+                         "(CI smoke)")
+    args = ap.parse_args()
+    ints = lambda s: tuple(int(x) for x in s.split(","))
+    if args.dry_run:
+        res, svc, mix = run(arch="qwen2-0.5b-reduced", device=args.device,
+                            capacities=(1, 2, 4), tps=(1, 2),
+                            prompts=(16, 32), outputs=(4, 8), requests=16,
+                            dtype=args.dtype)
+        # golden 1: zero-decode degenerate == latency_query, bit for bit
+        dmix = TrafficMix(prompt_lens=(32,), output_lens=(1,), n_requests=1)
+        rd = svc.latency_serve("qwen2-0.5b-reduced", dmix, capacity=1,
+                               dtype=args.dtype, device=args.device)
+        q = svc.latency_query("qwen2-0.5b-reduced", 1, 32, dtype=args.dtype,
+                              device=args.device)
+        assert rd.ttft_p50 == q.seconds == rd.makespan, (rd.ttft_p50,
+                                                         q.seconds)
+        # golden 2: decode attention carries the GQA kernel attribution
+        from repro.configs import registry as cr
+        from repro.core import opgraph as og
+        cfg = cr.get_any("qwen2-0.5b-reduced")
+        _, rows = svc.predictor.predict_ops(
+            og.enumerate_decode_ops(cfg, 2, 48))
+        kres = {r.kernel for r in rows
+                if r.kind == "attention" and r.kernel.startswith("kv_read")}
+        assert kres, "no memory-bound decode-attention rows"
+        print(f"dry-run golden check ok (degenerate == latency_query; "
+              f"decode kernels {sorted(kres)})")
+    else:
+        res, _, _ = run(arch=args.arch, device=args.device,
+                        capacities=ints(args.capacities),
+                        tps=ints(args.tps), prompts=ints(args.prompts),
+                        outputs=ints(args.outputs), requests=args.requests,
+                        dtype=args.dtype)
+    res["dry_run"] = bool(args.dry_run)
+    if args.json:
+        path = args.json
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+    else:
+        path = common.write_bench("serving_sweep", res, dry=args.dry_run)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

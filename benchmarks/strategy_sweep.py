@@ -232,11 +232,15 @@ def main():
               f"peak {plan.peak_bytes/2**30:.2f}GiB  "
               f"feasible {plan.n_feasible}/{plan.n_candidates}")
     res["dry_run"] = bool(args.dry_run)
-    path = args.json or os.path.join(
-        common.ARTIFACTS, "BENCH_strategy_sweep_dry.json" if args.dry_run
-        else "BENCH_strategy_sweep.json")
-    with open(path, "w") as f:
-        json.dump(res, f, indent=1)
+    if args.json:
+        path = args.json
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+    else:
+        # artifacts/ + a root-level mirror (the perf-trajectory tooling
+        # reads root BENCH_*.json); dry runs write ..._dry.json so CI
+        # never clobbers the tracked trajectory
+        path = common.write_bench("strategy_sweep", res, dry=args.dry_run)
     print(f"wrote {path}")
 
 

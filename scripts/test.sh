@@ -101,6 +101,28 @@ print(f"plan_training ok: dp{plan.dp}.tp{plan.tp}.pp{plan.pp}"
       f"peak={plan.peak_bytes/2**20:.1f}MiB "
       f"({plan.n_feasible}/{plan.n_candidates} feasible); cached-hit ok")
 PY
+  echo "--- smoke: latency_serve round-trip (continuous-batching prediction) ---"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TIMEOUT" \
+    python - <<'PY'
+from repro.core import schedule as S
+from repro.serving.latency_service import LatencyService
+svc = LatencyService()
+mix = S.TrafficMix(prompt_lens=(16, 32), output_lens=(4, 8), n_requests=12)
+r = svc.latency_serve("qwen3-mini", mix, capacity=4)
+assert not r.cached and r.tokens_per_sec > 0
+assert r.ttft_p95 >= r.ttft_p50 > 0 and r.tpot_p95 > 0
+assert r.gqa_ratio >= 1 and r.kv_cache_bytes > 0
+r2 = svc.latency_serve("qwen3-mini", mix, capacity=4)
+assert r2.cached and r2.tokens_per_sec == r.tokens_per_sec
+assert r2.ttft_p95 == r.ttft_p95 and r2.tpot_p95 == r.tpot_p95
+print(f"latency_serve ok: cap{r.capacity}.tp{r.tp} "
+      f"{r.tokens_per_sec:.1f} tok/s ttft_p95={r.ttft_p95*1e3:.3f}ms "
+      f"tpot_p95={r.tpot_p95*1e3:.3f}ms occ={r.occupancy:.2f}; "
+      f"cached-hit ok")
+PY
+  echo "--- smoke: serving-sweep benchmark (--dry-run, degenerate + GQA goldens) ---"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TIMEOUT" \
+    python -m benchmarks.serving_sweep --dry-run
 fi
 
 if [[ "$PROPS" == 1 ]]; then

@@ -443,6 +443,29 @@ class BatchPredictor:
             return out, kernels.reshape(shape)
         return out
 
+    def predict_decode_attention_batch(self, ops: Sequence,
+                                       return_kernels: bool = False
+                                       ) -> np.ndarray:
+        """Seconds for a batch of DECODE-phase ``AttentionOp``s.  At sq=1 the
+        kernel streams the KV cache, so the op is memory-bound and flops-based
+        table pricing collapses — price through the memory model over the
+        analytic KV-read traffic instead (class ``softmax``), mirroring
+        ``PM2Lat.predict_decode_attention``.  The kernel id surfaces the GQA
+        ratio (``kv_read@gqaN``) that sets the byte traffic."""
+        if not ops:
+            out = np.zeros(0)
+            return (out, np.zeros(0, object)) if return_kernels else out
+        X = np.stack([feature_vector(og.decode_attention_features(op))
+                      for op in ops])
+        coef = self._memory_coef("softmax")
+        secs = (X * coef).sum(axis=1)
+        if return_kernels:
+            kernels = np.array(
+                [f"kv_read@gqa{max(1, op.heads // max(1, op.kv_heads))}"
+                 for op in ops], object)
+            return secs, kernels
+        return secs
+
     def _memory_coef(self, snippet: str) -> np.ndarray:
         mmod = self.memory_model
         cls = class_of(snippet)
@@ -510,7 +533,10 @@ class BatchPredictor:
             if isinstance(op, og.MatmulOp):
                 groups.setdefault(("mm", op.kind, op.dtype), []).append(i)
             elif isinstance(op, og.AttentionOp):
-                groups.setdefault(("attn", op.dtype), []).append(i)
+                if op.phase == og.DECODE:
+                    groups.setdefault(("dattn",), []).append(i)
+                else:
+                    groups.setdefault(("attn", op.dtype), []).append(i)
             elif isinstance(op, CC.CollectiveOp):
                 groups.setdefault(("coll", op.coll), []).append(i)
             else:
@@ -527,6 +553,9 @@ class BatchPredictor:
                 secs[idx], kernels[idx] = self.predict_attention_batch(
                     [o.skv for o in sub], [o.flops for o in sub],
                     [o.hd for o in sub], dtype=gkey[1], return_kernels=True)
+            elif gkey[0] == "dattn":
+                secs[idx], kernels[idx] = self.predict_decode_attention_batch(
+                    sub, return_kernels=True)
             elif gkey[0] == "coll":
                 secs[idx], kernels[idx] = self.predict_collective_batch(
                     sub, return_algos=True)
@@ -715,6 +744,53 @@ class BatchPredictor:
             out[dt or "float32"] = total.reshape(len(batches), len(seqs))
         return next(iter(out.values())) if single else out
 
+    def predict_decode_grid(self, cfg: C.ModelConfig,
+                            batches: Sequence[int], ctxs: Sequence[int],
+                            dtype: Optional[str] = None,
+                            device: Optional[str] = None,
+                            spec: Optional[og.ParallelismSpec] = None
+                            ) -> np.ndarray:
+        """Per-decode-step latency over the (batch, ctx) grid — the decode
+        twin of ``predict_model_grid``.  ONE decode enumeration per batch
+        with ``ctx`` passed as an array: only the KV-cache-read attention
+        ops vary with ctx (their skv/flops broadcast over the grid); every
+        other decode op — skinny matmuls, KV appends, recurrent steps,
+        induced collectives — is ctx-independent and priced once.  Returns
+        a ``(len(batches), len(ctxs))`` float array of per-step seconds;
+        ``spec`` shards the step (``enumerate_decode_parallel_ops``)."""
+        if device is not None and device != self.device:
+            return self.for_device(device).predict_decode_grid(
+                cfg, batches, ctxs, dtype=dtype, spec=spec)
+        batches = np.asarray(list(batches), np.int64)
+        ctx = np.asarray(list(ctxs), np.int64)
+        out = np.empty((batches.size, ctx.size))
+        coef = self._memory_coef("softmax")
+        for bi, b in enumerate(batches):
+            if spec is None:
+                ops = og.enumerate_decode_ops(cfg, int(b), ctx, dtype=dtype)
+            else:
+                ops = og.enumerate_decode_parallel_ops(cfg, int(b), ctx,
+                                                       spec, dtype=dtype)
+            varying = [op for op in ops
+                       if isinstance(op, og.AttentionOp)
+                       and isinstance(op.skv, np.ndarray)]
+            fixed = [op for op in ops
+                     if not (isinstance(op, og.AttentionOp)
+                             and isinstance(op.skv, np.ndarray))]
+            base = (float(self.predict_ops_seconds(fixed).sum())
+                    if fixed else 0.0)
+            var = np.zeros(ctx.size)
+            for op in varying:
+                f = og.decode_attention_features(op)
+                X = np.stack(
+                    [np.broadcast_to(_f64(f["bytes"]), ctx.shape),
+                     np.broadcast_to(_f64(f["flops"]), ctx.shape),
+                     np.broadcast_to(_f64(f["transcendentals"]), ctx.shape),
+                     np.ones(ctx.size)], axis=1)
+                var += (X * coef).sum(axis=1)
+            out[bi] = base + var
+        return out
+
     # ----- cached interface -----
     def predict_model_cached(self, cfg: C.ModelConfig, batch: int, seq: int,
                              dtype: Optional[str] = None,
@@ -778,7 +854,12 @@ class PredictionCache:
     #    keys, ``bubble_share`` made schedule-kind-aware (1F1B reports
     #    idle over ideal compute), and parallel/train entries extended
     #    with ``peak_bytes``
-    SCHEMA = 5
+    # 6: phase-aware serving entries — ``latency_serve`` results cached
+    #    under ``serve.capN.tpN.<mix-tag>`` spec keys (tokens/sec +
+    #    TTFT/TPOT percentiles + per-step decode latency), and decode-phase
+    #    attention priced memory-bound through the KV-read feature path.
+    #    Prefill keys and their values are unchanged from schema 5.
+    SCHEMA = 6
 
     def __init__(self, maxsize: int = 65536, path: Optional[str] = None):
         self.maxsize = int(maxsize)

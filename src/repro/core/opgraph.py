@@ -28,6 +28,13 @@ from repro.configs import base as C
 from repro.core.collectives import CollectiveOp, dtype_bytes
 from repro.models import layers as L
 
+# Execution phases of the serving loop (docs/serving.md): 'prefill' is the
+# full-sequence forward (the historical enumeration), 'decode' is one
+# iterative generation step over a KV cache.
+PREFILL = "prefill"
+DECODE = "decode"
+PHASES = (PREFILL, DECODE)
+
 
 @dataclasses.dataclass
 class MatmulOp:
@@ -58,9 +65,15 @@ class AttentionOp:
     count: int = 1
     dtype: str = "float32"
     kind: str = "attention"
+    # execution phase: 'prefill' attention is compute-bound and priced by
+    # the throughput tables; 'decode' attention (sq == 1, KV-cache read)
+    # is memory-bound and priced by the memory model over its analytic
+    # byte/flop features.  ``skv`` may be a numpy array on the decode-grid
+    # path (ctx swept symbolically, like enumerate_grid_ops over seq).
+    phase: str = PREFILL
 
     @property
-    def flops(self) -> float:
+    def flops(self):
         return 4.0 * self.batch * self.heads * self.sq * self.skv * self.hd * self.count
 
 
@@ -130,8 +143,14 @@ class OpNode:
 class OpGraph:
     """Dependency/stream-aware op IR.  Nodes are appended in topological
     order (every dep index is smaller than the node's own index), which is
-    what ``core/schedule.py``'s list scheduler consumes directly."""
+    what ``core/schedule.py``'s list scheduler consumes directly.
+
+    ``phase`` tags which serving phase the graph models: ``'prefill'`` (the
+    full-sequence forward every builder historically produced) or
+    ``'decode'`` (one iterative generation step, ``enumerate_decode_graph``).
+    """
     nodes: List[OpNode] = dataclasses.field(default_factory=list)
+    phase: str = PREFILL
 
     def __len__(self) -> int:
         return len(self.nodes)
@@ -208,6 +227,73 @@ SNIPPETS: Dict[str, Callable] = {
 }
 
 
+def kv_read_bytes(op: AttentionOp) -> float:
+    """KV-cache read traffic of one attention op: the K and V blocks the
+    kernel streams from HBM, ``2 · batch · kv_heads · skv · hd`` elements.
+    Scales with ``kv_heads`` (NOT ``heads``) — grouped-query attention cuts
+    decode-step memory traffic by the GQA ratio while the flops (which
+    scale with ``heads``) stay put.  Works elementwise when ``skv`` is an
+    array (the decode-grid path)."""
+    return (2.0 * op.batch * op.kv_heads * op.skv * op.hd
+            * dtype_bytes(op.dtype) * op.count)
+
+
+def decode_attention_features(op: AttentionOp) -> Dict[str, float]:
+    """Proxy features pricing a DECODE-phase attention op through the
+    memory model (``core/memory_model.py``), mirroring what
+    ``cost_analysis`` reports for memory-bound snippets:
+
+    * ``bytes`` — the KV-cache read (``kv_read_bytes``) plus the query
+      read and output write (``2 · batch · heads · sq · hd`` elements);
+    * ``flops`` — the op's own QK^T + PV flops;
+    * ``transcendentals`` — the softmax exponentials, one per score.
+
+    At sq = 1 the flops term is tiny and the KV bytes dominate — the
+    memory-bound regime the throughput tables (built around compute-bound
+    prefill kernels) cannot represent.  All terms are elementwise in
+    ``skv``, so the decode grid broadcasts them over a ctx array."""
+    esz = dtype_bytes(op.dtype)
+    qo = 2.0 * op.batch * op.heads * op.sq * op.hd * esz * op.count
+    return {"bytes": kv_read_bytes(op) + qo,
+            "flops": op.flops,
+            "transcendentals": (1.0 * op.batch * op.heads * op.sq * op.skv
+                                * op.count)}
+
+
+def kv_cache_bytes(cfg: C.ModelConfig, batch: int, ctx: int,
+                   dtype: Optional[str] = None) -> float:
+    """Bytes of per-request serving state at context length ``ctx``:
+    K + V cache for every attention layer (``2 · batch · kv_heads · ctx ·
+    hd`` elements each; sliding-window layers cap ``ctx`` at the window,
+    cross-attention adds its fixed encoder-context K/V), plus the O(1)
+    recurrent state of RG-LRU/xLSTM blocks.  This is the serving-planner's
+    memory term: capacity · kv_cache_bytes bounds the decode batch."""
+    dt = dtype or "float32"
+    esz = dtype_bytes(dt)
+    d, hkv, hd = cfg.d_model, cfg.n_kv_heads, cfg.head_dim
+    total = 0.0
+    for kind in cfg.layer_kinds:
+        if kind in (C.ATTN, C.ENC_ATTN):
+            total += 2.0 * batch * hkv * ctx * hd * esz
+        elif kind == C.LOCAL_ATTN:
+            total += 2.0 * batch * hkv * min(ctx, cfg.sliding_window) * hd * esz
+        elif kind == C.CROSS_ATTN:
+            Lx = cfg.cross_attn_context_len or (
+                cfg.encoder.n_frames if cfg.encoder else 0)
+            total += 2.0 * batch * hkv * (ctx + Lx) * hd * esz
+        elif kind == C.RGLRU:
+            dl = cfg.lru_dim or d
+            total += batch * (dl + 4 * dl) * esz      # h state + conv window
+        elif kind == C.MLSTM:
+            di = 2 * d
+            hdm = di // cfg.n_heads
+            # matrix memory C (hdm x hdm per head) + normalizer + conv window
+            total += batch * (cfg.n_heads * hdm * hdm + di + 4 * di) * esz
+        elif kind == C.SLSTM:
+            total += batch * 2 * 4 * d * esz          # c/h gate states
+    return total
+
+
 @functools.lru_cache(maxsize=4096)
 def _snippet_features(snippet: str, shape: tuple, dtype: str) -> Dict[str, float]:
     fn = SNIPPETS[snippet]
@@ -223,6 +309,63 @@ def _snippet_features(snippet: str, shape: tuple, dtype: str) -> Dict[str, float
 # ---------------------------------------------------------------------------
 # enumeration
 # ---------------------------------------------------------------------------
+
+def _mlp_ops(cfg: C.ModelConfig, T: int, dt: str, prefix: str,
+             n_layers: int, dff: int) -> List[Op]:
+    """Dense-MLP ops for ``T`` tokens — shared between the prefill and
+    decode enumerations (decode calls it with T = batch)."""
+    gated = L.is_gated(cfg.mlp_act)
+    d = cfg.d_model
+    return [MatmulOp(f"{prefix}.w_in", m=T, n=dff, k=d,
+                     count=n_layers * (2 if gated else 1), dtype=dt),
+            MemoryOp(f"{prefix}.act", "silu_mul" if gated else "gelu",
+                     (T, dff), count=n_layers, dtype=dt),
+            MatmulOp(f"{prefix}.w_out", m=T, n=d, k=dff, count=n_layers,
+                     dtype=dt),
+            MemoryOp(f"{prefix}.residual", "add", (T, d), count=n_layers,
+                     dtype=dt)]
+
+
+def _ffn_ops(cfg: C.ModelConfig, T: int, G: int, dt: str,
+             n_layers: int, prefix: str) -> List[Op]:
+    """FFN (dense or MoE) ops for ``T`` tokens routed in ``G`` groups —
+    shared between the prefill (G = batch, T = batch·seq) and decode
+    (G = T = batch, one token per group) enumerations."""
+    d, ff = cfg.d_model, cfg.d_ff
+    out: List[Op] = [MemoryOp(f"{prefix}.ln2", "rmsnorm", (T, d),
+                              count=n_layers, dtype=dt)]
+    if cfg.moe is not None:
+        m = cfg.moe
+        Sg = T // G
+        cap = max(int(m.capacity_factor * Sg * m.top_k / m.num_experts),
+                  m.top_k, 4)
+        gated = L.is_gated(cfg.mlp_act)
+        out += [
+            MatmulOp(f"{prefix}.router", m=T, n=m.num_experts, k=d,
+                     count=n_layers, dtype=dt),
+            MemoryOp(f"{prefix}.gate", "softmax", (T, m.num_experts),
+                     count=n_layers, dtype=dt),
+            MatmulOp(f"{prefix}.dispatch", m=m.num_experts * cap, n=d, k=Sg,
+                     batch=G, count=n_layers, dtype=dt, kind="bmm"),
+            MatmulOp(f"{prefix}.expert_in", m=cap, n=m.d_ff_expert, k=d,
+                     batch=G * m.num_experts,
+                     count=n_layers * (2 if gated else 1), dtype=dt, kind="bmm"),
+            MemoryOp(f"{prefix}.expert_act", "silu_mul",
+                     (G * m.num_experts * cap, m.d_ff_expert),
+                     count=n_layers, dtype=dt),
+            MatmulOp(f"{prefix}.expert_out", m=cap, n=d, k=m.d_ff_expert,
+                     batch=G * m.num_experts, count=n_layers, dtype=dt,
+                     kind="bmm"),
+            MatmulOp(f"{prefix}.combine", m=Sg, n=d, k=m.num_experts * cap,
+                     batch=G, count=n_layers, dtype=dt, kind="bmm"),
+        ]
+        for i in range(m.num_shared_experts):
+            out += _mlp_ops(cfg, T, dt, f"{prefix}.shared{i}", n_layers,
+                            m.d_ff_expert)
+    elif ff > 0:
+        out += _mlp_ops(cfg, T, dt, prefix, n_layers, ff)
+    return out
+
 
 def _forward_segments(cfg: C.ModelConfig, batch: int, seq: int,
                       dtype: Optional[str] = None
@@ -263,48 +406,10 @@ def _forward_segments(cfg: C.ModelConfig, batch: int, seq: int,
         return out
 
     def ffn_ops(n_layers: int, prefix: str):
-        out = [MemoryOp(f"{prefix}.ln2", "rmsnorm", (T, d), count=n_layers, dtype=dt)]
-        if cfg.moe is not None:
-            m = cfg.moe
-            G = batch
-            Sg = T // G
-            cap = max(int(m.capacity_factor * Sg * m.top_k / m.num_experts),
-                      m.top_k, 4)
-            gated = L.is_gated(cfg.mlp_act)
-            out += [
-                MatmulOp(f"{prefix}.router", m=T, n=m.num_experts, k=d,
-                         count=n_layers, dtype=dt),
-                MemoryOp(f"{prefix}.gate", "softmax", (T, m.num_experts),
-                         count=n_layers, dtype=dt),
-                MatmulOp(f"{prefix}.dispatch", m=m.num_experts * cap, n=d, k=Sg,
-                         batch=G, count=n_layers, dtype=dt, kind="bmm"),
-                MatmulOp(f"{prefix}.expert_in", m=cap, n=m.d_ff_expert, k=d,
-                         batch=G * m.num_experts,
-                         count=n_layers * (2 if gated else 1), dtype=dt, kind="bmm"),
-                MemoryOp(f"{prefix}.expert_act", "silu_mul",
-                         (G * m.num_experts * cap, m.d_ff_expert),
-                         count=n_layers, dtype=dt),
-                MatmulOp(f"{prefix}.expert_out", m=cap, n=d, k=m.d_ff_expert,
-                         batch=G * m.num_experts, count=n_layers, dtype=dt,
-                         kind="bmm"),
-                MatmulOp(f"{prefix}.combine", m=Sg, n=d, k=m.num_experts * cap,
-                         batch=G, count=n_layers, dtype=dt, kind="bmm"),
-            ]
-            for i in range(m.num_shared_experts):
-                out += _mlp_ops(f"{prefix}.shared{i}", n_layers, m.d_ff_expert)
-        elif ff > 0:
-            out += _mlp_ops(prefix, n_layers, ff)
-        return out
+        return _ffn_ops(cfg, T, batch, dt, n_layers, prefix)
 
-    def _mlp_ops(prefix: str, n_layers: int, dff: int):
-        gated = L.is_gated(cfg.mlp_act)
-        o = [MatmulOp(f"{prefix}.w_in", m=T, n=dff, k=d,
-                      count=n_layers * (2 if gated else 1), dtype=dt),
-             MemoryOp(f"{prefix}.act", "silu_mul" if gated else "gelu",
-                      (T, dff), count=n_layers, dtype=dt),
-             MatmulOp(f"{prefix}.w_out", m=T, n=d, k=dff, count=n_layers, dtype=dt),
-             MemoryOp(f"{prefix}.residual", "add", (T, d), count=n_layers, dtype=dt)]
-        return o
+    def mlp_ops(prefix: str, n_layers: int, dff: int):
+        return _mlp_ops(cfg, T, dt, prefix, n_layers, dff)
 
     # --- main stack ---
     for kind, n in sorted(kind_counts.items()):
@@ -366,7 +471,7 @@ def _forward_segments(cfg: C.ModelConfig, batch: int, seq: int,
                          count=n, dtype=dt),
             ]
             from repro.models.recurrent import slstm_ff
-            ops += _mlp_ops("slstm.ff", n, slstm_ff(cfg))
+            ops += mlp_ops("slstm.ff", n, slstm_ff(cfg))
         elif kind == C.ENC_ATTN:
             ops += attn_ops(n, C.ENC_ATTN, "enc")
             ops += ffn_ops(n, "enc")
@@ -382,7 +487,7 @@ def _forward_segments(cfg: C.ModelConfig, batch: int, seq: int,
                         sq=cfg.encoder.n_frames, skv=cfg.encoder.n_frames,
                         hd=hd, causal=False, count=n, dtype=dt),
         ]
-        enc += _mlp_ops("enc.ff", n, ff)
+        enc += mlp_ops("enc.ff", n, ff)
         segments.append(("encoder", enc))
 
     segments.append(("tail", [
@@ -441,6 +546,183 @@ def layer_segments(cfg: C.ModelConfig, batch: int, seq: int,
 
 def total_flops(ops: List[Op]) -> float:
     return sum(getattr(o, "flops", 0.0) for o in ops)
+
+
+# ---------------------------------------------------------------------------
+# Decode-phase enumeration (serving; docs/serving.md)
+# ---------------------------------------------------------------------------
+
+def _clamp_ctx(ctx, window: Optional[int]):
+    """min(ctx, window), elementwise when ``ctx`` is an array (the decode
+    grid sweeps ctx symbolically, like enumerate_grid_ops sweeps seq)."""
+    if window is None:
+        return ctx
+    import numpy as np
+    if isinstance(ctx, np.ndarray):
+        return np.minimum(ctx, window)
+    return min(int(ctx), int(window))
+
+
+def _decode_segments(cfg: C.ModelConfig, batch: int, ctx,
+                     dtype: Optional[str] = None
+                     ) -> List[Tuple[str, List[Op]]]:
+    """One decode STEP for ``batch`` in-flight requests, each attending a
+    KV cache of ``ctx`` entries (the step's own K/V is appended first, so
+    ``ctx`` counts it): the phase-aware twin of ``_forward_segments``.
+
+    What changes versus prefill (sq == seq):
+
+    * every token-indexed matmul goes skinny — m = batch (one token per
+      request), the memory-bound GEMV regime;
+    * attention becomes a KV-cache READ: sq = 1, skv = ctx (window-clamped
+      for sliding-window layers, the fixed encoder context for
+      cross-attention), tagged ``phase='decode'`` so the predictors price
+      it memory-bound; a ``kv_append`` MemoryOp writes the step's K/V;
+    * recurrent blocks advance their O(1) state — one gate/scan step
+      whose cost is CONSTANT in ctx (the architectural selling point the
+      serving planner must see);
+    * the encoder segment disappears (it runs once, at prefill).
+
+    ``ctx`` may be a numpy array: only the decode-attention skv/flops
+    become arrays (everything else is ctx-independent), which is what
+    ``BatchPredictor.predict_decode_grid`` exploits."""
+    dt = dtype or "float32"
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    T = batch                               # sq = 1: one token per request
+    Vp = L.pad_vocab(cfg.vocab_size)
+    segments: List[Tuple[str, List[Op]]] = [
+        ("head", [MemoryOp("embed", "embed_gather", (Vp, d), dtype=dt)]),
+    ]
+    from collections import Counter
+    kind_counts = Counter(cfg.layer_kinds)
+
+    def attn_ops(n: int, kind: str, prefix: str):
+        window = cfg.sliding_window if kind == C.LOCAL_ATTN else None
+        skv = _clamp_ctx(ctx, window)
+        return [
+            MemoryOp(f"{prefix}.ln", "rmsnorm", (T, d), count=n, dtype=dt),
+            MatmulOp(f"{prefix}.wq", m=T, n=hq * hd, k=d, count=n, dtype=dt),
+            MatmulOp(f"{prefix}.wk", m=T, n=hkv * hd, k=d, count=n, dtype=dt),
+            MatmulOp(f"{prefix}.wv", m=T, n=hkv * hd, k=d, count=n, dtype=dt),
+            MemoryOp(f"{prefix}.rope", "rope", (T, hq, hd), count=n, dtype=dt),
+            MemoryOp(f"{prefix}.kv_append", "add", (batch, 2 * hkv * hd),
+                     count=n, dtype=dt),
+            AttentionOp(f"{prefix}.attn", batch=batch, heads=hq,
+                        kv_heads=hkv, sq=1, skv=skv, hd=hd,
+                        causal=kind != C.ENC_ATTN, count=n, dtype=dt,
+                        phase=DECODE),
+            MatmulOp(f"{prefix}.wo", m=T, n=d, k=hq * hd, count=n, dtype=dt),
+            MemoryOp(f"{prefix}.residual", "add", (T, d), count=n, dtype=dt),
+        ]
+
+    def ffn_ops(n: int, prefix: str):
+        return _ffn_ops(cfg, T, batch, dt, n, prefix)
+
+    for kind, n in sorted(kind_counts.items()):
+        ops: List[Op] = []
+        if kind in (C.ATTN, C.LOCAL_ATTN):
+            ops += attn_ops(n, kind, kind)
+            ops += ffn_ops(n, kind)
+        elif kind == C.CROSS_ATTN:
+            ops += attn_ops(n, C.ATTN, "self")
+            Lx = cfg.cross_attn_context_len or (
+                cfg.encoder.n_frames if cfg.encoder else 0)
+            # cross K/V were cached at prefill: decode computes q only and
+            # reads the fixed encoder context (skv = Lx, O(1) in ctx)
+            ops += [
+                MatmulOp("cross.wq", m=T, n=hq * hd, k=d, count=n, dtype=dt),
+                AttentionOp("cross.attn", batch=batch, heads=hq,
+                            kv_heads=hkv, sq=1, skv=Lx, hd=hd, causal=False,
+                            count=n, dtype=dt, phase=DECODE),
+                MatmulOp("cross.wo", m=T, n=d, k=hq * hd, count=n, dtype=dt),
+            ]
+            ops += ffn_ops(n, "decoder")
+        elif kind == C.RGLRU:
+            dl = cfg.lru_dim or d
+            ops += [
+                MemoryOp("rglru.ln", "rmsnorm", (T, d), count=n, dtype=dt),
+                MatmulOp("rglru.wx", m=T, n=dl, k=d, count=2 * n, dtype=dt),
+                MemoryOp("rglru.conv", "conv1d4", (batch, 4, dl), count=n,
+                         dtype=dt),
+                MatmulOp("rglru.gates", m=T, n=dl, k=dl, count=2 * n, dtype=dt),
+                MemoryOp("rglru.step", "gate_sigmoid", (T, dl), count=n,
+                         dtype=dt),
+                MemoryOp("rglru.gate_mul", "silu_mul", (T, dl), count=n,
+                         dtype=dt),
+                MatmulOp("rglru.w_out", m=T, n=d, k=dl, count=n, dtype=dt),
+            ]
+            ops += ffn_ops(n, "rglru")
+        elif kind == C.MLSTM:
+            di = 2 * d
+            hdm = di // hq
+            ops += [
+                MemoryOp("mlstm.ln", "rmsnorm", (T, d), count=n, dtype=dt),
+                MatmulOp("mlstm.up", m=T, n=2 * di, k=d, count=n, dtype=dt),
+                MemoryOp("mlstm.conv", "conv1d4", (batch, 4, di), count=n,
+                         dtype=dt),
+                MatmulOp("mlstm.qkv", m=T, n=di, k=di, count=3 * n, dtype=dt),
+                # matrix-memory update (k v^T outer product) + read (q C):
+                # per-head (1, hdm) x (hdm, hdm) steps, O(1) in ctx
+                MatmulOp("mlstm.state", m=1, n=hdm, k=hdm, batch=batch * hq,
+                         count=2 * n, dtype=dt, kind="bmm"),
+                MemoryOp("mlstm.gate", "silu_mul", (T, di), count=n, dtype=dt),
+                MatmulOp("mlstm.down", m=T, n=d, k=di, count=n, dtype=dt),
+            ]
+        elif kind == C.SLSTM:
+            ops += [
+                MemoryOp("slstm.ln", "rmsnorm", (T, d), count=n, dtype=dt),
+                MatmulOp("slstm.wx", m=T, n=4 * d, k=d, count=n, dtype=dt),
+                MatmulOp("slstm.rh", m=batch, n=4 * d, k=d, batch=1,
+                         count=n, dtype=dt),      # ONE recurrent step
+                MemoryOp("slstm.step", "gate_sigmoid", (batch, 4 * d),
+                         count=n, dtype=dt),
+            ]
+            from repro.models.recurrent import slstm_ff
+            ops += _mlp_ops(cfg, T, dt, "slstm.ff", n, slstm_ff(cfg))
+        elif kind == C.ENC_ATTN:
+            ops += attn_ops(n, C.ENC_ATTN, "enc")
+            ops += ffn_ops(n, "enc")
+        segments.append((f"group:{kind}", ops))
+
+    segments.append(("tail", [
+        MemoryOp("final_norm", "rmsnorm", (T, d), dtype=dt),
+        MatmulOp("unembed", m=T, n=Vp, k=d, dtype=dt),
+    ]))
+    return segments
+
+
+def enumerate_decode_graph(cfg: C.ModelConfig, batch: int, ctx: int,
+                           dtype: Optional[str] = None) -> OpGraph:
+    """One decode step as a phase-tagged ``OpGraph`` (serialized chain)."""
+    g = OpGraph(phase=DECODE)
+    for _, seg in _decode_segments(cfg, batch, ctx, dtype=dtype):
+        g.add_chain(seg, deps=g.tail())
+    return g
+
+
+def enumerate_decode_ops(cfg: C.ModelConfig, batch: int, ctx,
+                         dtype: Optional[str] = None) -> List[Op]:
+    """Op list for ONE decode step of ``batch`` requests at KV length
+    ``ctx`` — the flat view over ``enumerate_decode_graph``."""
+    return [op for _, seg in _decode_segments(cfg, batch, ctx, dtype=dtype)
+            for op in seg]
+
+
+def enumerate_decode_parallel_ops(cfg: C.ModelConfig, batch: int, ctx,
+                                  spec: "ParallelismSpec",
+                                  dtype: Optional[str] = None) -> List[Op]:
+    """ONE RANK's decode-step op list under ``spec``: the same name-pattern
+    tp sharding as ``enumerate_parallel_ops`` (decode ops reuse the prefill
+    op names, so the ``_shard_*`` rules apply unchanged) plus the induced
+    collectives for a one-token forward (``seq = 1``).  ``spec.trivial``
+    returns ``enumerate_decode_ops`` unchanged."""
+    if spec.trivial:
+        return enumerate_decode_ops(cfg, batch, ctx, dtype=dtype)
+    dt = dtype or "float32"
+    bsh = _ceil_div(batch, spec.dp)
+    ops = [_shard_op(op, spec)
+           for op in enumerate_decode_ops(cfg, bsh, ctx, dtype=dtype)]
+    return ops + _induced_collectives(cfg, bsh, 1, spec, dt)
 
 
 # ---------------------------------------------------------------------------
@@ -529,7 +811,8 @@ _COL_SUFFIXES = (".wq", ".wk", ".wv", ".w_in", ".w_gate", ".up", ".wx",
 _ROW_SUFFIXES = (".wo", ".w_out", ".down")
 _INNER_SUFFIXES = (".qkv", ".gates")      # square maps on the sharded width
 _SEQ_SUFFIXES = (".ln", ".ln2", ".residual")   # hidden (T, d) activations
-_ACT_SUFFIXES = (".act", ".expert_act", ".gate_mul", ".scan", ".conv")
+_ACT_SUFFIXES = (".act", ".expert_act", ".gate_mul", ".scan", ".conv",
+                 ".kv_append", ".step")   # decode-phase per-head/width state
 
 
 def _shard_matmul(op: MatmulOp, tp: int) -> MatmulOp:

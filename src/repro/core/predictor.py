@@ -66,9 +66,19 @@ class PM2Lat:
 
     def predict_attention(self, op: og.AttentionOp,
                           kernel: Optional[str] = None) -> float:
+        if op.phase == og.DECODE:
+            return self.predict_decode_attention(op)
         t = self._attention_table(op, kernel)
         thr = t.interpolate_throughput(op.skv)
         return op.flops / thr
+
+    def predict_decode_attention(self, op: og.AttentionOp) -> float:
+        """Decode-phase attention (sq=1): the kernel streams the KV cache, so
+        the op is memory-bound and flops-based table pricing collapses — price
+        it with the memory model over the analytic KV-read traffic instead
+        (class ``softmax``: same reduce-then-scale access pattern)."""
+        return self.memory_model.predict(og.decode_attention_features(op),
+                                         "softmax")
 
     def predict_memory(self, op: og.MemoryOp) -> float:
         from repro.core.memory_model import class_of
@@ -87,6 +97,11 @@ class PM2Lat:
             sec = t.predict(op.m, op.n, op.k, batch=op.batch) * op.count
             return PredictionRow(op.name, op.kind, sec, t.key.kernel)
         if op.kind == "attention":
+            if op.phase == og.DECODE:
+                sec = self.predict_decode_attention(op)
+                gqa = max(1, op.heads // max(1, op.kv_heads))
+                return PredictionRow(op.name, "attention", sec,
+                                     f"kv_read@gqa{gqa}")
             t = self._attention_table(op, None)
             sec = op.flops / t.interpolate_throughput(op.skv)
             return PredictionRow(op.name, "attention", sec, t.key.kernel)

@@ -1556,3 +1556,179 @@ def pipeline_stage_schedule(stage_seconds: Sequence[float],
     starts, ends, makespan = simulate([r.seconds for r in rows], streams,
                                       deps)
     return Schedule(rows, streams, starts, ends, makespan)
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching serving occupancy model (prefill/decode phases)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TrafficMix:
+    """A serving traffic mix: prompt/output length distributions plus an
+    arrival process.  ``sample()`` draws the deterministic request trace
+    (seeded), so the same mix always simulates the same workload and
+    ``tag()`` can serve as a cache-key component."""
+    prompt_lens: Tuple[int, ...]
+    output_lens: Tuple[int, ...]
+    prompt_weights: Optional[Tuple[float, ...]] = None
+    output_weights: Optional[Tuple[float, ...]] = None
+    arrival_rate: Optional[float] = None    # requests/sec; None = all at t=0
+    n_requests: int = 64
+    seed: int = 0
+
+    def __post_init__(self):
+        if not self.prompt_lens or min(self.prompt_lens) < 1:
+            raise ValueError(f"prompt_lens must be >=1: {self.prompt_lens}")
+        if not self.output_lens or min(self.output_lens) < 1:
+            raise ValueError(f"output_lens must be >=1: {self.output_lens}")
+        if self.n_requests < 1:
+            raise ValueError(f"n_requests must be >=1: {self.n_requests}")
+
+    @property
+    def max_ctx(self) -> int:
+        """Largest KV length any request reaches (prompt + all generated
+        tokens) — the decode-grid ctx axis upper bound."""
+        return int(max(self.prompt_lens) + max(self.output_lens))
+
+    def sample(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """The request trace: ``(prompt_lens, output_lens, arrivals)``
+        arrays of length ``n_requests`` (seeded, deterministic)."""
+        rng = np.random.default_rng(self.seed)
+
+        def draw(vals, weights):
+            v = np.asarray(vals, np.int64)
+            p = None
+            if weights is not None:
+                w = np.asarray(weights, np.float64)
+                p = w / w.sum()
+            return rng.choice(v, size=self.n_requests, p=p)
+
+        plens = draw(self.prompt_lens, self.prompt_weights)
+        olens = draw(self.output_lens, self.output_weights)
+        if self.arrival_rate is None:
+            arrivals = np.zeros(self.n_requests)
+        else:
+            gaps = rng.exponential(1.0 / float(self.arrival_rate),
+                                   self.n_requests)
+            arrivals = np.cumsum(gaps) - gaps[0]   # first request at t=0
+        return plens, olens, arrivals
+
+    def tag(self) -> str:
+        """8-hex fingerprint of the full mix (lengths, weights, arrival
+        process, trace seed) — the serving cache-key component."""
+        import zlib
+        return f"{zlib.crc32(repr(self).encode()):08x}"
+
+
+@dataclasses.dataclass
+class ServingStats:
+    """What ``simulate_serving`` reports for one (mix, capacity) point.
+    All fields are floats so the whole record round-trips through a flat
+    ``PredictionCache`` dict entry (``to_entry``/``from_entry``)."""
+    capacity: float
+    n_requests: float
+    makespan: float
+    tokens_out: float
+    tokens_per_sec: float
+    ttft_p50: float
+    ttft_p95: float
+    tpot_p50: float
+    tpot_p95: float
+    latency_p50: float
+    latency_p95: float
+    occupancy: float
+
+    FIELDS = ("capacity", "n_requests", "makespan", "tokens_out",
+              "tokens_per_sec", "ttft_p50", "ttft_p95", "tpot_p50",
+              "tpot_p95", "latency_p50", "latency_p95", "occupancy")
+
+    def to_entry(self) -> Dict[str, float]:
+        return {f: float(getattr(self, f)) for f in self.FIELDS}
+
+    @staticmethod
+    def from_entry(d: Dict[str, float]) -> "ServingStats":
+        return ServingStats(**{f: float(d[f]) for f in ServingStats.FIELDS})
+
+
+def simulate_serving(mix: TrafficMix, capacity: int,
+                     prefill_seconds, decode_step_seconds,
+                     return_detail: bool = False):
+    """Continuous-batching slot-refill loop over PREDICTED per-step
+    latencies.
+
+    ``prefill_seconds(plen)`` prices one prompt forward;
+    ``decode_step_seconds(batch, ctx)`` prices one decode step for
+    ``batch`` co-scheduled slots at KV length ``ctx`` (the longest slot's
+    post-append length — batched decode runs one kernel wave sized by the
+    longest cache).  Admission is prefill-priority: whenever a slot is
+    free and a request has arrived, the engine prefills it (stalling
+    in-flight decodes — the stall shows up in the admitted-earlier
+    requests' TPOT, as on a real engine); otherwise it runs one decode
+    step for every active slot.  The prefill's last forward samples the
+    FIRST output token, so TTFT is the prefill completion time minus the
+    submit time and a request with ``output_len == 1`` never enters the
+    decode batch.  TPOT is the per-token gap over the remaining
+    ``output_len - 1`` tokens; occupancy is the mean decode-batch fill
+    ``active / capacity`` over decode steps."""
+    if capacity < 1:
+        raise ValueError(f"capacity must be >=1: {capacity}")
+    plens, olens, arrivals = mix.sample()
+    n = len(plens)
+    order = np.argsort(arrivals, kind="stable")
+    tfirst = np.zeros(n)
+    tdone = np.zeros(n)
+    t = 0.0
+    nxt = 0
+    active: List[List[int]] = []    # [kv_len, remaining_tokens, request_idx]
+    occ_sum = 0.0
+    occ_steps = 0
+    while nxt < n or active:
+        while (len(active) < capacity and nxt < n
+               and float(arrivals[order[nxt]]) <= t):
+            i = int(order[nxt])
+            nxt += 1
+            t += float(prefill_seconds(int(plens[i])))
+            tfirst[i] = t
+            if int(olens[i]) > 1:
+                # KV holds plen prompt entries + the just-sampled token
+                active.append([int(plens[i]) + 1, int(olens[i]) - 1, i])
+            else:
+                tdone[i] = t
+        if active:
+            ctx = max(sl[0] + 1 for sl in active)
+            t += float(decode_step_seconds(len(active), ctx))
+            occ_sum += len(active) / float(capacity)
+            occ_steps += 1
+            still = []
+            for sl in active:
+                sl[0] += 1
+                sl[1] -= 1
+                if sl[1] <= 0:
+                    tdone[sl[2]] = t
+                else:
+                    still.append(sl)
+            active = still
+        elif nxt < n:
+            t = max(t, float(arrivals[order[nxt]]))
+    ttft = tfirst - arrivals
+    lat = tdone - arrivals
+    multi = olens > 1
+    tpot = np.zeros(n)
+    tpot[multi] = (tdone[multi] - tfirst[multi]) / (olens[multi] - 1)
+    tokens_out = float(olens.sum())
+    stats = ServingStats(
+        capacity=float(capacity), n_requests=float(n), makespan=float(t),
+        tokens_out=tokens_out,
+        tokens_per_sec=tokens_out / t if t > 0 else 0.0,
+        ttft_p50=float(np.percentile(ttft, 50)),
+        ttft_p95=float(np.percentile(ttft, 95)),
+        tpot_p50=float(np.percentile(tpot, 50)),
+        tpot_p95=float(np.percentile(tpot, 95)),
+        latency_p50=float(np.percentile(lat, 50)),
+        latency_p95=float(np.percentile(lat, 95)),
+        occupancy=occ_sum / occ_steps if occ_steps else 0.0)
+    if return_detail:
+        return stats, {"ttft": ttft, "tpot": tpot, "latency": lat,
+                       "prompt_lens": plens, "output_lens": olens,
+                       "arrivals": arrivals}
+    return stats

@@ -24,6 +24,7 @@ class Request:
     temperature: float = 0.0
     out_tokens: Optional[list] = None
     t_submit: float = 0.0
+    t_first_token: float = 0.0    # set at the prefill that seats the slot
     t_done: float = 0.0
 
 
@@ -32,24 +33,69 @@ class EngineStats:
     prefills: int = 0
     decode_steps: int = 0
     tokens_out: int = 0
+    ttfts: List[float] = dataclasses.field(default_factory=list)
+    tpots: List[float] = dataclasses.field(default_factory=list)
 
     def throughput(self, wall_s: float) -> float:
         return self.tokens_out / max(wall_s, 1e-9)
 
+    def _pct(self, xs: List[float], q: float) -> float:
+        return float(np.percentile(xs, q)) if xs else 0.0
+
+    @property
+    def ttft_p50(self) -> float:
+        return self._pct(self.ttfts, 50)
+
+    @property
+    def ttft_p95(self) -> float:
+        return self._pct(self.ttfts, 95)
+
+    @property
+    def tpot_p50(self) -> float:
+        return self._pct(self.tpots, 50)
+
+    @property
+    def tpot_p95(self) -> float:
+        return self._pct(self.tpots, 95)
+
 
 class ServingEngine:
     def __init__(self, model, params, *, max_batch: int = 4,
-                 max_len: int = 256, seed: int = 0):
+                 max_len: int = 256, seed: int = 0,
+                 admission_oracle=None, slo_tpot: Optional[float] = None):
+        """``admission_oracle`` is a ``(batch, ctx) -> seconds`` per-decode-
+        step latency predictor (``LatencyService.decode_oracle``); with an
+        ``slo_tpot`` bound the engine consults it BEFORE seating a wave and
+        shrinks the decode batch until the predicted per-token latency at
+        the wave's worst-case context meets the bound — prediction-driven
+        admission control, closing the predictor → engine loop."""
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.rng = np.random.default_rng(seed)
         self.stats = EngineStats()
+        self.admission_oracle = admission_oracle
+        self.slo_tpot = slo_tpot
         cfg = model.cfg
         self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(
             lambda p, t, c: model.prefill(p, t, ctx_embed=c, max_len=max_len))
+
+    def _admit(self, queue: List[Request]) -> List[Request]:
+        """Next wave under admission control: start from ``max_batch``
+        candidates and shrink while the oracle predicts the decode step at
+        the wave's worst-case context would violate ``slo_tpot``; a single
+        request is always admitted (shrinking to zero would starve)."""
+        k = min(self.max_batch, len(queue))
+        if self.admission_oracle is not None and self.slo_tpot is not None:
+            while k > 1:
+                ctx = max(len(r.prompt) + r.max_new_tokens
+                          for r in queue[:k])
+                if self.admission_oracle(k, ctx) <= self.slo_tpot:
+                    break
+                k -= 1
+        return queue[:k]
 
     def _sample(self, logits: np.ndarray, temperature: float) -> int:
         vocab = self.model.cfg.vocab_size
@@ -72,8 +118,8 @@ class ServingEngine:
         done: List[Request] = []
         # serve in waves of max_batch with identical prompt lengths per wave
         while queue:
-            wave = queue[: self.max_batch]
-            queue = queue[self.max_batch:]
+            wave = self._admit(queue)
+            queue = queue[len(wave):]
             S = max(len(r.prompt) for r in wave)
             toks = np.zeros((len(wave), S), np.int32)
             for i, r in enumerate(wave):
@@ -85,6 +131,9 @@ class ServingEngine:
             live = list(range(len(wave)))
             next_tok = np.array([self._sample(logits[i], wave[i].temperature)
                                  for i in range(len(wave))], np.int32)
+            t_first = time.perf_counter()   # first token sampled at prefill
+            for r in wave:
+                r.t_first_token = t_first
             steps = max(r.max_new_tokens for r in wave)
             for _ in range(steps):
                 for i in live:
@@ -102,6 +151,11 @@ class ServingEngine:
             for r in wave:
                 r.t_done = time.perf_counter()
                 self.stats.tokens_out += len(r.out_tokens)
+                self.stats.ttfts.append(r.t_first_token - r.t_submit)
+                if len(r.out_tokens) > 1:
+                    self.stats.tpots.append(
+                        (r.t_done - r.t_first_token)
+                        / (len(r.out_tokens) - 1))
                 done.append(r)
         self.wall_s = time.perf_counter() - t_start
         return done

@@ -156,6 +156,72 @@ class TrainingPlan:
         return dataclasses.asdict(self)
 
 
+@dataclasses.dataclass
+class ServeLatencyResult:
+    """One (model, traffic-mix, capacity, tp) serving prediction: the
+    continuous-batching occupancy simulation (``schedule.simulate_serving``)
+    run over PREDICTED per-phase latencies — prefill forwards priced like
+    ``latency_query`` / ``latency_parallel``, decode steps priced
+    memory-bound over the (batch, ctx) grid
+    (``BatchPredictor.predict_decode_grid``).  ``decode_step_seconds`` is
+    the worst-case step (full capacity, longest context);
+    ``gqa_ratio`` / ``kv_cache_bytes`` surface the KV-traffic drivers."""
+    model: str
+    device: str
+    dtype: str
+    capacity: int
+    tp: int
+    mix_tag: str
+    n_requests: float
+    makespan: float
+    tokens_out: float
+    tokens_per_sec: float
+    ttft_p50: float
+    ttft_p95: float
+    tpot_p50: float
+    tpot_p95: float
+    latency_p50: float
+    latency_p95: float
+    occupancy: float
+    decode_step_seconds: float
+    gqa_ratio: float
+    kv_cache_bytes: float
+    cached: bool = False
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class ServingPlan:
+    """The answer to "how should N devices serve this traffic": the
+    max-throughput point of the (capacity, tp) grid whose weights + KV
+    cache fit in device memory and whose predicted p95 TTFT/TPOT meet the
+    SLO.  ``breakdown`` is the winning point's full ``ServeLatencyResult``
+    record; ``alternatives`` the next-best feasible points."""
+    model: str
+    device: str
+    dtype: str
+    devices: int
+    memory_bytes: Optional[float]
+    slo_ttft: Optional[float]
+    slo_tpot: Optional[float]
+    capacity: int
+    tp: int
+    tokens_per_sec: float
+    ttft_p95: float
+    tpot_p95: float
+    weight_bytes: float
+    kv_cache_bytes: float
+    breakdown: dict
+    n_candidates: int
+    n_feasible: int
+    alternatives: list
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
 def _sched_entry(sched) -> dict:
     """One scalar ``Schedule`` as the full sweep-metric cache entry
     (``schedule.SWEEP_METRICS`` field set) — the same shape
@@ -514,6 +580,191 @@ class LatencyService:
             n_feasible=int(sw.feasible.sum()) if sw.feasible is not None
             else len(specs),
             alternatives=[sw.row(i) for i in runners[:max(top_k - 1, 0)]])
+
+    # ----- serving (prefill/decode) endpoints -----
+    _SERVE_EXTRAS = ("decode_step_seconds", "gqa_ratio", "kv_cache_bytes")
+
+    def latency_serve(self, model: Union[str, ModelConfig], mix, *,
+                      capacity: int = 8, tp: int = 1,
+                      dtype: Optional[str] = None,
+                      device: Optional[str] = None) -> ServeLatencyResult:
+        """Serving throughput + latency-distribution prediction for one
+        (model, ``schedule.TrafficMix``, decode capacity, tp) point, from
+        ONE cached call.  Prefill forwards are priced exactly like
+        ``latency_query`` (``latency_parallel`` under tp > 1) — the
+        zero-decode degenerate mix is bit-identical to ``latency_query``
+        — and decode steps come from ``predict_decode_grid``: sq=1
+        KV-cache-read attention priced memory-bound, the GQA ratio visible
+        in the breakdown (``kv_read@gqaN`` kernel rows, ``gqa_ratio``
+        here).  The full record is cached under a
+        ``serve.capN.tpN.<mix-tag>`` spec key (schema 6)."""
+        from repro.core import opgraph as og
+        from repro.core import schedule as S
+        cfg = self._resolve(model)
+        pred = self.predictor.for_device(device)
+        capacity, tp = int(capacity), int(tp)
+        if capacity < 1 or tp < 1:
+            raise ValueError(f"capacity/tp must be >=1: {capacity}, {tp}")
+        mix_tag = mix.tag()
+        key = PredictionCache.make_key(
+            config_key(cfg), pred.device, dtype, capacity, mix.max_ctx,
+            spec=f"serve.cap{capacity}.tp{tp}.{mix_tag}")
+        _FIELDS = set(S.ServingStats.FIELDS) | set(self._SERVE_EXTRAS)
+
+        def result(d, cached):
+            return ServeLatencyResult(
+                model=cfg.name, device=pred.device,
+                dtype=dtype or "float32", capacity=capacity, tp=tp,
+                mix_tag=mix_tag, cached=cached,
+                **{f: d[f] for f in S.ServingStats.FIELDS
+                   if f != "capacity"},
+                **{f: d[f] for f in self._SERVE_EXTRAS})
+
+        hit = self.cache.get(key)
+        # entries missing expected fields (foreign writer) are misses
+        if isinstance(hit, dict) and _FIELDS <= hit.keys():
+            return result(hit, True)
+        # prefill: one cached forward per distinct prompt length, the
+        # same keys/float path as the scalar endpoints
+        if tp == 1:
+            pre = {int(p): self.latency_query(cfg, 1, int(p), dtype=dtype,
+                                              device=device).seconds
+                   for p in set(mix.prompt_lens)}
+        else:
+            pre = {int(p): self.latency_parallel(cfg, 1, int(p), tp=tp,
+                                                 dtype=dtype,
+                                                 device=device).seconds
+                   for p in set(mix.prompt_lens)}
+        # decode: one (batch, ctx) grid, exact integer lookup in the loop
+        spec = None if tp == 1 else og.ParallelismSpec(tp=tp)
+        ctxs = np.arange(1, mix.max_ctx + 1)
+        grid = pred.predict_decode_grid(cfg, np.arange(1, capacity + 1),
+                                        ctxs, dtype=dtype, spec=spec)
+        stats = S.simulate_serving(
+            mix, capacity, lambda p: pre[int(p)],
+            lambda b, c: float(grid[b - 1, min(int(c), mix.max_ctx) - 1]))
+        d = stats.to_entry()
+        d.update(
+            decode_step_seconds=float(grid[capacity - 1, mix.max_ctx - 1]),
+            gqa_ratio=float(max(1, cfg.n_heads // max(1, cfg.n_kv_heads))),
+            kv_cache_bytes=float(og.kv_cache_bytes(cfg, capacity,
+                                                   mix.max_ctx,
+                                                   dtype=dtype)))
+        self.cache.put(key, d)
+        return result(d, False)
+
+    def sweep_serve(self, model: Union[str, ModelConfig], mix,
+                    capacities: Sequence[int], *,
+                    tps: Sequence[int] = (1,),
+                    dtype: Optional[str] = None,
+                    device: Optional[str] = None) -> list:
+        """``latency_serve`` over the (capacity, tp) product grid; every
+        point lands in (or answers from) the shared cache, so follow-up
+        scalar queries on any swept point are hits.  Returns the
+        ``ServeLatencyResult`` list in grid order (capacity-major)."""
+        return [self.latency_serve(model, mix, capacity=c, tp=t,
+                                   dtype=dtype, device=device)
+                for c in capacities for t in tps]
+
+    def plan_serving(self, model: Union[str, ModelConfig], mix, *,
+                     devices: int = 1,
+                     slo_ttft: Optional[float] = None,
+                     slo_tpot: Optional[float] = None,
+                     memory_gb: Optional[float] = None,
+                     max_capacity: int = 32, top_k: int = 3,
+                     dtype: Optional[str] = None,
+                     device: Optional[str] = None) -> ServingPlan:
+        """Serving auto-search, mirroring ``plan_training``: enumerate the
+        power-of-two (capacity, tp) grid with ``tp <= devices``, reject
+        points whose per-device weights + full KV cache
+        (``opgraph.kv_cache_bytes``, both sharded by tp) exceed capacity,
+        reject points whose predicted p95 TTFT/TPOT miss the SLO, and
+        return the max-tokens/sec survivor.  Every priced point shares
+        cache entries with ``latency_serve`` / ``sweep_serve``."""
+        from repro.core import opgraph as og
+        from repro.core.collectives import dtype_bytes
+        cfg = self._resolve(model)
+        pred = self.predictor.for_device(device)
+        devices = int(devices)
+        if devices < 1:
+            raise ValueError("devices must be >= 1")
+
+        cap: Optional[float] = None
+        if memory_gb is not None:
+            cap = float(memory_gb) * 2**30
+        else:
+            from repro.core import devices as D
+            self.predictor.host_profile()   # register host in the fleet
+            try:
+                cap = float(D.get_profile(pred.device).hbm_bytes)
+            except KeyError:
+                cap = None                  # unknown device: unconstrained
+
+        esz = dtype_bytes(dtype or "float32")
+        wbytes = float(cfg.param_count()) * esz
+        tps = [1 << i for i in range(devices.bit_length())
+               if 1 << i <= devices]
+        caps = [1 << i for i in range(int(max_capacity).bit_length())
+                if 1 << i <= max_capacity]
+        candidates = [(c, t) for c in caps for t in tps]
+        feasible = []
+        for c, t in candidates:
+            kvb = float(og.kv_cache_bytes(cfg, c, mix.max_ctx, dtype=dtype))
+            if cap is None or (wbytes + kvb) / t <= cap:
+                feasible.append((c, t, kvb))
+        if not feasible:
+            raise ValueError(
+                f"no (capacity, tp) point fits in {cap / 2**30:.1f} GiB: "
+                f"weights alone are {wbytes / 2**30:.2f} GiB — raise "
+                f"devices/memory or shorten the mix")
+        scored = []
+        for c, t, kvb in feasible:
+            r = self.latency_serve(cfg, mix, capacity=c, tp=t, dtype=dtype,
+                                   device=device)
+            ok = ((slo_ttft is None or r.ttft_p95 <= slo_ttft)
+                  and (slo_tpot is None or r.tpot_p95 <= slo_tpot))
+            scored.append((r, kvb, ok))
+        meeting = [s for s in scored if s[2]]
+        if not meeting:
+            best_ttft = min(r.ttft_p95 for r, _, _ in scored)
+            best_tpot = min(r.tpot_p95 for r, _, _ in scored)
+            raise ValueError(
+                f"no feasible point meets the SLO "
+                f"(ttft<={slo_ttft}, tpot<={slo_tpot}): best reachable "
+                f"p95 ttft={best_ttft:.4f}s tpot={best_tpot:.4f}s")
+        meeting.sort(key=lambda s: -s[0].tokens_per_sec)
+        win, win_kvb, _ = meeting[0]
+        return ServingPlan(
+            model=cfg.name, device=pred.device, dtype=dtype or "float32",
+            devices=devices, memory_bytes=cap, slo_ttft=slo_ttft,
+            slo_tpot=slo_tpot, capacity=win.capacity, tp=win.tp,
+            tokens_per_sec=win.tokens_per_sec, ttft_p95=win.ttft_p95,
+            tpot_p95=win.tpot_p95, weight_bytes=wbytes,
+            kv_cache_bytes=win_kvb, breakdown=win.to_json(),
+            n_candidates=len(candidates), n_feasible=len(feasible),
+            alternatives=[r.to_json()
+                          for r, _, _ in meeting[1:max(top_k, 1)]])
+
+    def decode_oracle(self, model: Union[str, ModelConfig],
+                      dtype: Optional[str] = None,
+                      device: Optional[str] = None):
+        """A memoized ``(batch, ctx) -> per-decode-step seconds`` callable
+        — the admission-control oracle ``serving/engine.py`` consults
+        before seating a request in the decode batch."""
+        cfg = self._resolve(model)
+        pred = self.predictor.for_device(device)
+        memo: dict = {}
+
+        def step_seconds(batch: int, ctx: int) -> float:
+            b, c = int(batch), max(int(ctx), 1)
+            val = memo.get((b, c))
+            if val is None:
+                val = float(pred.predict_decode_grid(
+                    cfg, [b], [c], dtype=dtype)[0, 0])
+                memo[(b, c)] = val
+            return val
+
+        return step_seconds
 
     def latency_breakdown(self, model: Union[str, ModelConfig], batch: int,
                           seq: int, dtype: Optional[str] = None,

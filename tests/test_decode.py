@@ -1,0 +1,189 @@
+"""Decode-phase op-graph invariants + memory-bound decode pricing.
+
+The phase-aware IR (``opgraph.enumerate_decode_ops``) must reproduce the
+physics the serving predictor relies on: per-token attention flops equal
+the causal-prefill increment, KV-read traffic scales with ``n_kv_heads``
+(not ``n_heads``), recurrent decode steps are O(1) in context, and the
+vectorized decode paths (``predict_ops_seconds`` over decode ops,
+``predict_decode_grid``) match the scalar predictor point for point.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import registry as cr
+from repro.core import opgraph as og
+from repro.core.batch_predict import BatchPredictor
+from tests.conftest import small_cfg
+
+ARCHS = ["qwen2-0.5b", "gemma-7b", "llama4-scout-17b-16e",
+         "recurrentgemma-2b", "xlstm-1.3b", "whisper-small"]
+
+
+@pytest.fixture(scope="module")
+def bp(calibration_store):
+    return BatchPredictor(calibration_store, "cpu_host")
+
+
+def _decode_attn(cfg, batch, ctx):
+    return [o for o in og.enumerate_decode_ops(cfg, batch, ctx)
+            if isinstance(o, og.AttentionOp) and o.phase == og.DECODE]
+
+
+# ----- graph invariants -----
+
+def test_decode_flops_equal_prefill_increment():
+    """Decode attention flops at ctx=t == causal prefill(t) - prefill(t-1):
+    generating token t reads exactly the KV the prefill of length t would
+    have attended to at its last position."""
+    cfg = small_cfg("qwen2-0.5b")
+    b, hq, hd = 4, cfg.n_heads, cfg.head_dim
+    n_attn = sum(1 for k in cfg.layer_kinds if k == "attn")
+
+    def causal_prefill_flops(s):
+        # masked flash attention: 4*b*h*hd * s(s+1)/2 per layer
+        return 4.0 * b * hq * hd * s * (s + 1) / 2 * n_attn
+
+    for t in (1, 7, 64, 300):
+        dec = sum(o.flops for o in _decode_attn(cfg, b, t))
+        inc = causal_prefill_flops(t) - causal_prefill_flops(t - 1)
+        assert dec == pytest.approx(inc, rel=1e-12), (t, dec, inc)
+
+
+def test_halving_kv_heads_halves_bytes_not_flops():
+    cfg = small_cfg("qwen2-0.5b")
+    assert cfg.n_kv_heads % 2 == 0
+    half = dataclasses.replace(cfg, n_kv_heads=cfg.n_kv_heads // 2)
+    a = _decode_attn(cfg, 4, 128)
+    b = _decode_attn(half, 4, 128)
+    assert sum(og.kv_read_bytes(o) for o in b) == pytest.approx(
+        0.5 * sum(og.kv_read_bytes(o) for o in a), rel=1e-12)
+    assert sum(o.flops for o in b) == sum(o.flops for o in a)
+
+
+def test_recurrent_decode_cost_constant_in_ctx(bp):
+    """RG-LRU / xLSTM decode steps carry fixed state — per-step cost must
+    not grow with context (only attention layers may)."""
+    for name in ("recurrentgemma-2b", "xlstm-1.3b"):
+        cfg = small_cfg(name)
+        for batch in (1, 4):
+            base = None
+            for ctx in (1, 64, 4096):
+                ops = [o for o in og.enumerate_decode_ops(cfg, batch, ctx)
+                       if not (isinstance(o, og.AttentionOp)
+                               and o.phase == og.DECODE)]
+                sec = float(bp.predict_ops_seconds(ops).sum())
+                if base is None:
+                    base = sec
+                assert sec == base, (name, batch, ctx)
+
+
+def test_local_attention_window_clamps_decode_ctx():
+    cfg = small_cfg("recurrentgemma-2b")
+    w = cfg.sliding_window
+    assert any(k == "local_attn" for k in cfg.layer_kinds)
+    local = [o for o in _decode_attn(cfg, 2, w * 4)
+             if o.name.startswith("local_attn")]
+    assert local and all(o.skv == w for o in local)
+
+
+def test_kv_cache_bytes_scaling():
+    cfg = small_cfg("qwen2-0.5b")
+    one = og.kv_cache_bytes(cfg, 1, 128)
+    # 2 (K+V) * n_kv_heads * hd * esz per token per attn layer
+    n_attn = sum(1 for k in cfg.layer_kinds if k == "attn")
+    expect = 2.0 * cfg.n_kv_heads * cfg.head_dim * 4 * 128 * n_attn
+    assert one == pytest.approx(expect, rel=1e-12)
+    assert og.kv_cache_bytes(cfg, 8, 128) == pytest.approx(8 * one)
+    assert og.kv_cache_bytes(cfg, 1, 256) == pytest.approx(2 * one)
+    # recurrent + sliding-window state: grows below the window, then O(1)
+    rg = small_cfg("recurrentgemma-2b")
+    w = rg.sliding_window
+    assert og.kv_cache_bytes(rg, 2, w // 2) < og.kv_cache_bytes(rg, 2, w)
+    assert og.kv_cache_bytes(rg, 2, w) == og.kv_cache_bytes(rg, 2, 64 * w)
+
+
+def test_decode_graph_shapes_and_phases():
+    cfg = small_cfg("qwen2-0.5b")
+    g = og.enumerate_decode_graph(cfg, 4, 77)
+    assert g.phase == og.DECODE
+    ops = og.enumerate_decode_ops(cfg, 4, 77)
+    mats = [o for o in ops if isinstance(o, og.MatmulOp)
+            and not o.name.startswith(("unembed",))]
+    assert all(o.m == 4 for o in mats if o.kind == "matmul"), \
+        [(o.name, o.m) for o in mats]     # skinny-M: m == batch
+    attn = [o for o in ops if isinstance(o, og.AttentionOp)]
+    assert all(o.sq == 1 and o.skv == 77 and o.phase == og.DECODE
+               for o in attn)
+    assert any(o.name.endswith(".kv_append") for o in ops
+               if isinstance(o, og.MemoryOp))
+
+
+# ----- pricing invariants -----
+
+def test_decode_attention_priced_memory_bound(bp):
+    """Table pricing collapses at sq=1 (flops ~ 0 relative to bytes); the
+    decode path must price through the memory model and attribute the GQA
+    ratio in the kernel id."""
+    cfg = small_cfg("qwen2-0.5b")
+    _, rows = bp.predict_ops(og.enumerate_decode_ops(cfg, 2, 64))
+    arows = [r for r in rows if r.kind == "attention"]
+    gqa = max(1, cfg.n_heads // cfg.n_kv_heads)
+    assert arows and all(r.kernel == f"kv_read@gqa{gqa}" for r in arows)
+    assert all(r.seconds > 0 for r in arows)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_scalar_batch_decode_equivalence(bp, arch):
+    cfg = small_cfg(arch)
+    ops = og.enumerate_decode_ops(cfg, 3, 100)
+    batch = bp.predict_ops_seconds(ops)
+    _, rows = bp.scalar.predict_ops(ops)
+    scalar = np.array([r.seconds for r in rows])
+    rel = np.abs(batch - scalar) / np.maximum(scalar, 1e-30)
+    assert rel.max() <= 1e-9, (arch, rel.max())
+
+
+def test_predict_decode_grid_matches_pointwise(bp):
+    cfg = small_cfg("qwen2-0.5b")
+    batches, ctxs = [1, 2, 8], [1, 16, 100, 700]
+    grid = bp.predict_decode_grid(cfg, batches, ctxs)
+    assert grid.shape == (3, 4)
+    for i, b in enumerate(batches):
+        for j, c in enumerate(ctxs):
+            pt = float(bp.predict_ops_seconds(
+                og.enumerate_decode_ops(cfg, b, c)).sum())
+            assert abs(grid[i, j] - pt) / pt <= 1e-9, (b, c)
+    # per-step latency grows with ctx (KV reads) and with batch
+    assert (np.diff(grid, axis=1) > 0).all()
+    assert (np.diff(grid, axis=0) > 0).all()
+
+
+def test_predict_decode_grid_sharded(bp):
+    """tp sharding cuts per-device decode attention traffic; collectives
+    appear; dp shards the decode batch."""
+    cfg = small_cfg("qwen2-0.5b")
+    spec = og.ParallelismSpec(tp=2)
+    ops = og.enumerate_decode_parallel_ops(cfg, 4, 64, spec)
+    assert any(o.name.endswith("all_reduce") for o in ops)
+    attn = [o for o in ops if isinstance(o, og.AttentionOp)
+            and o.phase == og.DECODE]
+    full = _decode_attn(cfg, 4, 64)
+    assert sum(og.kv_read_bytes(o) for o in attn) == pytest.approx(
+        0.5 * sum(og.kv_read_bytes(o) for o in full), rel=1e-12)
+    grid = bp.predict_decode_grid(cfg, [4], [64], spec=spec)
+    pt = float(bp.predict_ops_seconds(ops).sum())
+    assert abs(grid[0, 0] - pt) / pt <= 1e-9
+
+
+def test_prefill_enumeration_untouched():
+    """Phase refactor must not disturb the prefill op stream: every op
+    still carries phase='prefill' and the op list is unchanged in count
+    and names for a mixed-arch config."""
+    cfg = small_cfg("gemma-7b")
+    ops = og.enumerate_ops(cfg, 4, 96)
+    attn = [o for o in ops if isinstance(o, og.AttentionOp)]
+    assert attn and all(o.phase == og.PREFILL for o in attn)
+    g = og.enumerate_graph(cfg, 4, 96)
+    assert g.phase == og.PREFILL

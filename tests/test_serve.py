@@ -1,0 +1,193 @@
+"""Serving-prediction endpoints: occupancy simulation, latency_serve
+caching, degenerate bit-identity, and plan_serving SLO search.
+
+The hand-worked example pinned here is the one ``docs/serving.md`` walks
+through: capacity 2, three requests (prompt 4, output 2, all at t=0),
+prefill 1.0 s, decode step 0.1 s.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import schedule as S
+from repro.serving.latency_service import LatencyService
+
+
+@pytest.fixture(scope="module")
+def svc(calibration_store):
+    return LatencyService(calibration_store, "cpu_host")
+
+
+# ----- TrafficMix -----
+
+def test_traffic_mix_validation_and_tag():
+    with pytest.raises(ValueError):
+        S.TrafficMix(prompt_lens=(8,), output_lens=(0,))
+    with pytest.raises(ValueError):
+        S.TrafficMix(prompt_lens=(), output_lens=(4,))
+    m1 = S.TrafficMix(prompt_lens=(8, 16), output_lens=(4,), n_requests=8)
+    m2 = S.TrafficMix(prompt_lens=(8, 16), output_lens=(4,), n_requests=8)
+    assert m1.tag() == m2.tag()                      # stable fingerprint
+    assert m1.tag() != S.TrafficMix(prompt_lens=(8, 16), output_lens=(4,),
+                                    n_requests=8, seed=1).tag()
+    assert m1.max_ctx == 20
+    p, o, a = m1.sample()
+    p2, o2, a2 = m1.sample()                         # deterministic draw
+    assert (p == p2).all() and (o == o2).all() and (a == a2).all()
+    assert len(p) == 8 and set(p) <= {8, 16} and (o == 4).all()
+    assert (a == 0).all()                            # no arrival process
+
+
+def test_traffic_mix_arrival_process():
+    m = S.TrafficMix(prompt_lens=(8,), output_lens=(2,), arrival_rate=10.0,
+                     n_requests=32, seed=5)
+    _, _, a = m.sample()
+    assert a[0] == 0.0 and (np.diff(a) > 0).all()
+    # mean inter-arrival ~ 1/rate
+    assert 0.02 < np.diff(a).mean() < 0.5
+
+
+# ----- the hand-worked occupancy example (pinned by docs/serving.md) -----
+
+def test_simulate_serving_hand_example():
+    mix = S.TrafficMix(prompt_lens=(4,), output_lens=(2,), n_requests=3)
+    stats, det = S.simulate_serving(mix, 2, lambda p: 1.0,
+                                    lambda b, c: 0.1, return_detail=True)
+    assert np.allclose(det["ttft"], [1.0, 2.0, 3.1])
+    assert np.allclose(det["tpot"], [1.1, 0.1, 0.1])
+    assert np.allclose(det["latency"], [2.1, 2.1, 3.2])
+    assert stats.makespan == pytest.approx(3.2)
+    assert stats.tokens_out == 6.0
+    assert stats.tokens_per_sec == pytest.approx(6 / stats.makespan)
+    assert stats.occupancy == pytest.approx(0.75)    # steps at 2/2 and 1/2
+    assert stats.ttft_p50 == pytest.approx(2.0)
+    # round-trip through a flat cache entry
+    assert S.ServingStats.from_entry(stats.to_entry()) == stats
+
+
+def test_simulate_serving_single_token_requests():
+    """output_len == 1: the prefill samples the only token — no decode
+    steps, TPOT undefined (0.0), TTFT == request latency."""
+    mix = S.TrafficMix(prompt_lens=(4,), output_lens=(1,), n_requests=4)
+    stats, det = S.simulate_serving(mix, 2, lambda p: 0.5,
+                                    lambda b, c: 0.1, return_detail=True)
+    assert stats.occupancy == 0.0 and stats.tpot_p95 == 0.0
+    assert np.allclose(det["ttft"], det["latency"])
+    assert stats.makespan == pytest.approx(2.0)      # 4 sequential prefills
+
+
+def test_simulate_serving_idle_advance():
+    """With a sparse arrival process the clock must jump to the next
+    arrival instead of spinning."""
+    mix = S.TrafficMix(prompt_lens=(4,), output_lens=(2,),
+                       arrival_rate=0.25, n_requests=4, seed=2)
+    stats = S.simulate_serving(mix, 2, lambda p: 0.01, lambda b, c: 0.001)
+    _, _, arrivals = mix.sample()
+    assert stats.makespan >= arrivals.max()
+
+
+# ----- latency_serve -----
+
+MIX = S.TrafficMix(prompt_lens=(16, 32), output_lens=(4, 8), n_requests=12,
+                   seed=3)
+
+
+def test_latency_serve_cached_round_trip(svc):
+    r = svc.latency_serve("qwen3-mini", MIX, capacity=4)
+    assert not r.cached
+    assert r.tokens_per_sec > 0 and r.ttft_p95 >= r.ttft_p50 > 0
+    assert r.tpot_p95 > 0 and 0 < r.occupancy <= 1
+    assert r.gqa_ratio >= 1 and r.kv_cache_bytes > 0
+    assert r.decode_step_seconds > 0
+    r2 = svc.latency_serve("qwen3-mini", MIX, capacity=4)
+    assert r2.cached and r2.to_json() == {**r.to_json(), "cached": True}
+    # different capacity / tp / mix -> different keys
+    assert not svc.latency_serve("qwen3-mini", MIX, capacity=2).cached
+
+
+def test_latency_serve_persistence(svc, tmp_path, calibration_store):
+    path = os.path.join(tmp_path, "cache.json")
+    a = LatencyService(calibration_store, "cpu_host", cache_path=path)
+    r = a.latency_serve("qwen3-mini", MIX, capacity=2)
+    a.save_cache()
+    b = LatencyService(calibration_store, "cpu_host", cache_path=path)
+    r2 = b.latency_serve("qwen3-mini", MIX, capacity=2)
+    assert r2.cached and r2.tokens_per_sec == r.tokens_per_sec
+    assert r2.ttft_p95 == r.ttft_p95 and r2.tpot_p95 == r.tpot_p95
+
+
+def test_latency_serve_degenerate_bit_identical_to_latency_query(svc):
+    """Zero decode tokens + dp=tp=1: the serving prediction IS one prefill
+    — bit-identical to ``latency_query`` (same cache keys, same float
+    path)."""
+    mix = S.TrafficMix(prompt_lens=(32,), output_lens=(1,), n_requests=1)
+    r = svc.latency_serve("qwen3-mini", mix, capacity=1)
+    q = svc.latency_query("qwen3-mini", 1, 32)
+    assert r.ttft_p50 == q.seconds
+    assert r.ttft_p95 == q.seconds
+    assert r.makespan == q.seconds
+    assert r.latency_p95 == q.seconds
+
+
+def test_latency_serve_tp_and_fleet(svc):
+    r1 = svc.latency_serve("qwen3-mini", MIX, capacity=4,
+                           device="a100_80g")
+    r2 = svc.latency_serve("qwen3-mini", MIX, capacity=4, tp=4,
+                           device="a100_80g")
+    assert r1.device == r2.device == "a100_80g"
+    # tp=4 changes the step op set (sharded compute + all-reduces); on a
+    # model this small the collective latency can dominate the sharding
+    # win, so pin only that the prediction responds to tp
+    assert r2.decode_step_seconds > 0
+    assert r2.decode_step_seconds != r1.decode_step_seconds
+
+
+def test_sweep_serve_fills_cache(svc):
+    rs = svc.sweep_serve("qwen3-mini", MIX, (1, 2), tps=(1,))
+    assert len(rs) == 2
+    again = svc.sweep_serve("qwen3-mini", MIX, (1, 2), tps=(1,))
+    assert all(r.cached for r in again)
+    assert [r.tokens_per_sec for r in again] == [r.tokens_per_sec
+                                                for r in rs]
+
+
+# ----- plan_serving -----
+
+def test_plan_serving_basic(svc):
+    plan = svc.plan_serving("qwen3-mini", MIX, devices=2, max_capacity=4,
+                            device="a100_80g")
+    assert plan.capacity in (1, 2, 4) and plan.tp in (1, 2)
+    assert plan.n_feasible <= plan.n_candidates == 6
+    assert plan.tokens_per_sec > 0
+    # the winner maximizes tokens/sec over the feasible, SLO-meeting set
+    for alt in plan.alternatives:
+        assert alt["tokens_per_sec"] <= plan.tokens_per_sec
+    # consistency with the scalar endpoint (cache hit)
+    r = svc.latency_serve("qwen3-mini", MIX, capacity=plan.capacity,
+                          tp=plan.tp, device="a100_80g")
+    assert r.cached and r.tokens_per_sec == plan.tokens_per_sec
+
+
+def test_plan_serving_slo_filter(svc):
+    loose = svc.plan_serving("qwen3-mini", MIX, devices=2, max_capacity=4,
+                             device="a100_80g", slo_ttft=10.0,
+                             slo_tpot=10.0)
+    assert loose.tpot_p95 <= 10.0
+    with pytest.raises(ValueError, match="SLO"):
+        svc.plan_serving("qwen3-mini", MIX, devices=2, max_capacity=4,
+                         device="a100_80g", slo_tpot=1e-12)
+
+
+def test_plan_serving_memory_infeasible(svc):
+    with pytest.raises(ValueError, match="fits"):
+        svc.plan_serving("qwen3-mini", MIX, devices=1, max_capacity=2,
+                         memory_gb=1e-6)
+
+
+def test_decode_oracle_memoized(svc):
+    step = svc.decode_oracle("qwen3-mini")
+    a = step(4, 128)
+    assert a > 0 and step(4, 128) == a
+    assert step(8, 128) > a                 # bigger batch, slower step
+    assert step(4, 4096) > a                # longer ctx, slower step

@@ -39,3 +39,63 @@ def test_engine_batched_throughput_and_stats():
     assert engine.stats.tokens_out == 18
     assert engine.stats.throughput(engine.wall_s) > 0
     assert all(len(r.out_tokens) == 3 for r in done)
+
+
+def test_engine_records_ttft_and_tpot():
+    cfg = small_cfg("qwen2-0.5b", n_layers=2)
+    model = mr.build(cfg)
+    params = model.init(jax.random.key(0))
+    engine = ServingEngine(model, params, max_batch=2, max_len=48)
+    rng = np.random.default_rng(1)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                    max_new_tokens=3) for i in range(4)]
+    done = engine.run(reqs)
+    for r in done:
+        # first token sampled at the prefill that seats the slot
+        assert r.t_submit < r.t_first_token <= r.t_done
+    assert len(engine.stats.ttfts) == 4
+    assert len(engine.stats.tpots) == 4          # 3 tokens > 1 each
+    assert all(t > 0 for t in engine.stats.ttfts)
+    assert engine.stats.ttft_p95 >= engine.stats.ttft_p50 > 0
+    assert engine.stats.tpot_p95 >= engine.stats.tpot_p50 > 0
+    # single-token requests produce a TTFT but no TPOT sample
+    engine2 = ServingEngine(model, params, max_batch=2, max_len=48)
+    done2 = engine2.run([Request(rid=0, prompt=reqs[0].prompt,
+                                 max_new_tokens=1)])
+    assert len(engine2.stats.ttfts) == 1 and engine2.stats.tpots == []
+    assert engine2.stats.tpot_p95 == 0.0
+
+
+def test_engine_admission_oracle_shrinks_wave():
+    cfg = small_cfg("qwen2-0.5b", n_layers=2)
+    model = mr.build(cfg)
+    params = model.init(jax.random.key(0))
+    calls = []
+
+    def oracle(batch, ctx):
+        calls.append((batch, ctx))
+        return 0.1 * batch          # 2+ co-scheduled slots violate the SLO
+
+    engine = ServingEngine(model, params, max_batch=4, max_len=48,
+                           admission_oracle=oracle, slo_tpot=0.15)
+    rng = np.random.default_rng(2)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                    max_new_tokens=2) for i in range(3)]
+    done = engine.run(reqs)
+    assert len(done) == 3
+    assert engine.stats.prefills == 3            # one wave per request
+    assert calls and all(b >= 1 for b, _ in calls)
+    assert all(ctx == 8 + 2 for _, ctx in calls)  # worst-case kv length
+    # a permissive oracle admits the full wave
+    engine2 = ServingEngine(model, params, max_batch=4, max_len=48,
+                            admission_oracle=lambda b, c: 0.0,
+                            slo_tpot=0.15)
+    reqs2 = [Request(rid=i, prompt=r.prompt, max_new_tokens=2)
+             for i, r in enumerate(reqs)]
+    done2 = engine2.run(reqs2)
+    assert engine2.stats.prefills == 1
+    # admission control must not change the decoded tokens
+    assert [r.out_tokens for r in sorted(done, key=lambda r: r.rid)] == \
+           [r.out_tokens for r in sorted(done2, key=lambda r: r.rid)]
