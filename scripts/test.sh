@@ -6,6 +6,8 @@
 #   scripts/test.sh --docs          suite + quickstart smoke-run + doc link check
 #   scripts/test.sh --props         suite + schedule property suite at a higher
 #                                   example count (SCHEDULE_PROP_EXAMPLES=50)
+#   scripts/test.sh --calib         suite + comm-calibration fit round-trip +
+#                                   measured-vs-predicted trace replay (dry)
 #   scripts/test.sh -k batch        extra args forwarded to pytest
 #
 # TEST_TIMEOUT_S bounds each stage (default 1800s).
@@ -16,12 +18,14 @@ TIMEOUT="${TEST_TIMEOUT_S:-1800}"
 SMOKE=0
 DOCS=0
 PROPS=0
+CALIB=0
 ARGS=()
 for a in "$@"; do
   case "$a" in
     --smoke) SMOKE=1 ;;
     --docs) DOCS=1 ;;
     --props) PROPS=1 ;;
+    --calib) CALIB=1 ;;
     *) ARGS+=("$a") ;;
   esac
 done
@@ -123,6 +127,30 @@ PY
   echo "--- smoke: serving-sweep benchmark (--dry-run, degenerate + GQA goldens) ---"
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TIMEOUT" \
     python -m benchmarks.serving_sweep --dry-run
+  echo "--- smoke: comm-validation trace replay (--dry-run, budget + perturbed-fail) ---"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TIMEOUT" \
+    python -m benchmarks.comm_validation --dry-run
+fi
+
+if [[ "$CALIB" == 1 ]]; then
+  echo "--- calib: fitter round-trip (synthetic truth -> fit -> replay) ---"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TIMEOUT" \
+    python - <<'PY'
+from repro.core import collectives as C
+from repro.core import comm_calibrate as CC
+truth = C.Interconnect("nvlink-mesh", 23e9, 2.6e-6, 12, eff_gamma=0.045)
+recs = CC.synthesize_records(truth, noise=0.015, seed=7)
+fit = CC.fit_interconnect(recs, "nvlink-mesh", links_per_gpu=12)
+assert abs(fit.link_bw - 23e9) / 23e9 < 0.10, fit
+assert abs(fit.eff_gamma - 0.045) < 0.05, fit
+assert fit.rel_err < 0.05, fit
+print(f"fit round-trip ok: bw={fit.link_bw/1e9:.2f}GB/s "
+      f"alpha={fit.link_latency*1e6:.2f}us gamma={fit.eff_gamma:.3f} "
+      f"rel_err={fit.rel_err:.4f} ({fit.n_points} points)")
+PY
+  echo "--- calib: measured-vs-predicted trace replay (--dry-run) ---"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TIMEOUT" \
+    python -m benchmarks.comm_validation --dry-run
 fi
 
 if [[ "$PROPS" == 1 ]]; then

@@ -455,8 +455,9 @@ class BatchPredictor:
         if not ops:
             out = np.zeros(0)
             return (out, np.zeros(0, object)) if return_kernels else out
-        X = np.stack([feature_vector(og.decode_attention_features(op))
-                      for op in ops])
+        X = self.memory_model.apply_cache(
+            np.stack([feature_vector(og.decode_attention_features(op))
+                      for op in ops]))
         coef = self._memory_coef("softmax")
         secs = (X * coef).sum(axis=1)
         if return_kernels:
@@ -487,8 +488,9 @@ class BatchPredictor:
         product through the per-class linear coefficients."""
         if not ops:
             return np.zeros(0)
-        X = np.stack([self._feature_row(op.snippet, op.shape, op.dtype)
-                      for op in ops])
+        X = self.memory_model.apply_cache(
+            np.stack([self._feature_row(op.snippet, op.shape, op.dtype)
+                      for op in ops]))
         Cm = np.stack([self._memory_coef(op.snippet) for op in ops])
         counts = np.array([op.count for op in ops], np.float64)
         return (X * Cm).sum(axis=1) * counts
@@ -496,8 +498,23 @@ class BatchPredictor:
     @property
     def interconnect(self):
         """This device's α–β interconnect (``core/collectives.py``), shared
-        with the scalar path so both price collectives identically."""
+        with the scalar path so both price collectives identically — the
+        MEASURED fit when a comm-calibration artifact carries one
+        (``core/comm_calibrate.py``), the datasheet profile otherwise."""
         return self.scalar.interconnect
+
+    @property
+    def cache_device(self) -> str:
+        """The device field of every cache key this predictor writes: the
+        bare device name on the datasheet path (byte-identical to every
+        pre-calibration key), ``<device>+cc<fingerprint>`` once a
+        comm-calibration artifact changes this device's predictions — so
+        calibrated and datasheet entries never collide in the shared
+        ``PredictionCache``, and recalibration (a new fingerprint)
+        self-invalidates without a schema bump."""
+        from repro.core.comm_calibrate import calibration_tag
+        tag = calibration_tag(self.device)
+        return self.device if tag is None else f"{self.device}+cc{tag}"
 
     def predict_collective_batch(self, ops: Sequence,
                                  return_algos: bool = False) -> np.ndarray:
@@ -713,6 +730,7 @@ class BatchPredictor:
                     shape = tuple(int(x[g]) if isinstance(x, np.ndarray)
                                   else int(x) for x in op.shape)
                     X[i, g] = self._feature_row(op.snippet, shape, op.dtype)
+            X = self.memory_model.apply_cache(X)
             Cm = np.stack([self._memory_coef(op.snippet) for op in mem])
             counts = np.stack(
                 [np.broadcast_to(_f64(op.count), (G,)) for op in mem])
@@ -782,11 +800,11 @@ class BatchPredictor:
             var = np.zeros(ctx.size)
             for op in varying:
                 f = og.decode_attention_features(op)
-                X = np.stack(
+                X = self.memory_model.apply_cache(np.stack(
                     [np.broadcast_to(_f64(f["bytes"]), ctx.shape),
                      np.broadcast_to(_f64(f["flops"]), ctx.shape),
                      np.broadcast_to(_f64(f["transcendentals"]), ctx.shape),
-                     np.ones(ctx.size)], axis=1)
+                     np.ones(ctx.size)], axis=1))
                 var += (X * coef).sum(axis=1)
             out[bi] = base + var
         return out
@@ -803,8 +821,8 @@ class BatchPredictor:
         if cache is None:
             total, _ = self.predict_model(cfg, batch, seq, dtype=dtype)
             return total
-        key = PredictionCache.make_key(config_key(cfg), self.device, dtype,
-                                       batch, seq)
+        key = PredictionCache.make_key(config_key(cfg), self.cache_device,
+                                       dtype, batch, seq)
         hit = cache.get(key)
         if hit is not None:
             return hit
@@ -859,7 +877,13 @@ class PredictionCache:
     #    TTFT/TPOT percentiles + per-step decode latency), and decode-phase
     #    attention priced memory-bound through the KV-read feature path.
     #    Prefill keys and their values are unchanged from schema 5.
-    SCHEMA = 6
+    # 7: measured comm/cache calibration (``core/comm_calibrate.py``) — a
+    #    calibration artifact changes collective AND memory-bound entry
+    #    values, and calibrated keys carry a ``+cc<fingerprint>`` device
+    #    suffix (``BatchPredictor.cache_device``).  Without an artifact,
+    #    keys and values are byte-identical to schema 6; the bump guards
+    #    pre-calibration caches read by calibration-aware code.
+    SCHEMA = 7
 
     def __init__(self, maxsize: int = 65536, path: Optional[str] = None):
         self.maxsize = int(maxsize)

@@ -106,6 +106,11 @@ class Interconnect:
     link_bw: float           # bytes/s per link, per direction (1/β per link)
     link_latency: float      # α: seconds per message hop
     links_per_gpu: int = 1
+    # Measured efficiency decay γ, overriding the per-topology _EFF_GAMMA
+    # default.  None (the default, and what every datasheet profile carries)
+    # keeps the table value — so calibration-absent Interconnects stay
+    # dataclass-equal and numerically identical to pre-calibration ones.
+    eff_gamma: Optional[float] = None
 
     def __post_init__(self):
         if self.topology not in TOPOLOGIES:
@@ -113,6 +118,18 @@ class Interconnect:
                              f"expected one of {TOPOLOGIES}")
         if self.link_bw <= 0 or self.link_latency < 0 or self.links_per_gpu < 1:
             raise ValueError(f"invalid Interconnect: {self}")
+        if self.eff_gamma is not None and self.eff_gamma < 0:
+            raise ValueError(f"invalid Interconnect: {self}")
+
+    @classmethod
+    def from_fit(cls, fit) -> "Interconnect":
+        """Build from a measured fit record (``comm_calibrate.CommFit`` —
+        duck-typed so this module stays repo-import-free): the fitted α, β
+        and γ replace the datasheet constants wholesale."""
+        return cls(topology=str(fit.topology), link_bw=float(fit.link_bw),
+                   link_latency=float(fit.link_latency),
+                   links_per_gpu=int(fit.links_per_gpu),
+                   eff_gamma=float(fit.eff_gamma))
 
     def raw_bus_bw(self) -> float:
         """Aggregate per-GPU injection bandwidth, before the world-size
@@ -121,17 +138,30 @@ class Interconnect:
             return self.link_bw * self.links_per_gpu
         return self.link_bw   # tree/NIC: one shared upstream path
 
-    def efficiency(self, world) -> np.ndarray:
+    def gamma(self) -> float:
+        """The efficiency-decay constant in effect: the measured
+        ``eff_gamma`` when calibrated, the ``_EFF_GAMMA`` topology default
+        otherwise."""
+        if self.eff_gamma is not None:
+            return self.eff_gamma
+        return _EFF_GAMMA[self.topology]
+
+    def efficiency(self, world):
         """Achieved fraction of ``raw_bus_bw`` at world size ``world``
         (continuous in ``world`` so collective time is strictly monotone
-        even between power-of-two worlds)."""
-        g = _EFF_GAMMA[self.topology]
+        even between power-of-two worlds).  Scalar ``world`` returns a
+        ``float``, array ``world`` an ``np.ndarray``."""
+        g = self.gamma()
         p = np.maximum(np.asarray(world, np.float64), 1.0)
-        return 1.0 / (1.0 + g * np.log2(p))
+        eff = 1.0 / (1.0 + g * np.log2(p))
+        if np.ndim(world) == 0:
+            return float(eff)
+        return eff
 
-    def bus_bw(self, world) -> np.ndarray:
+    def bus_bw(self, world):
         """Effective bytes/s per GPU at world size ``world`` (the B in the
-        module formulas)."""
+        module formulas).  Same scalar-float / ndarray contract as
+        ``efficiency``."""
         return self.raw_bus_bw() * self.efficiency(world)
 
 

@@ -58,6 +58,15 @@ class DeviceProfile:
             raise ValueError(f"reserve must be in [0, 1), got {reserve}")
         return self.hbm_bytes * (1.0 - reserve)
 
+    def calibrated_interconnect(self) -> Interconnect:
+        """The interconnect PREDICTIONS should use for this device: the
+        measured fit from the comm-calibration artifact when one exists
+        (``core/comm_calibrate.py``), else the datasheet ``interconnect``
+        field, else ``DEFAULT_INTERCONNECT``.  The datasheet numbers above
+        stay what they are — the spec sheet; calibration overlays them."""
+        from repro.core.comm_calibrate import calibrated_interconnect
+        return calibrated_interconnect(self.name)
+
 
 GiB = 1024 ** 3
 MiB = 1024 ** 2

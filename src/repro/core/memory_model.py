@@ -59,28 +59,92 @@ def class_of(name: str) -> str:
     return "pointwise"
 
 
+@dataclasses.dataclass(frozen=True)
+class CacheCorrection:
+    """PPT-GPU-style measured L2 correction for memory-bound predictions.
+
+    The linear model's bytes coefficient is 1/effective-DRAM-bandwidth; it
+    overcharges working sets that fit (partly) in L2.  With a measured hit
+    rate ``hit_rate`` and an L2:DRAM speedup ``speedup``, the effective
+    bytes cost scales by
+
+        factor(w) = 1 - hit_rate · min(1, l2_bytes / w) · (1 - 1/speedup)
+
+    — full discount when the working set ``w`` fits in L2, fading as
+    ``l2_bytes / w`` once it spills (the resident fraction of a streaming
+    working set).  ``factor`` is 1.0 everywhere when ``hit_rate`` is 0.
+    """
+    l2_bytes: float
+    hit_rate: float       # measured fraction of accesses served by L2
+    speedup: float        # L2 : DRAM bandwidth ratio (>= 1)
+
+    def __post_init__(self):
+        if not (0.0 <= self.hit_rate <= 1.0):
+            raise ValueError(f"invalid hit_rate: {self}")
+        if self.speedup < 1.0 or self.l2_bytes <= 0:
+            raise ValueError(f"invalid CacheCorrection: {self}")
+
+    def factor(self, nbytes):
+        """Bytes-cost multiplier in (0, 1]; scalar in → float out, array in
+        → ndarray out (same contract as ``Interconnect.efficiency``)."""
+        w = np.maximum(np.asarray(nbytes, np.float64), 1.0)
+        resident = np.minimum(1.0, self.l2_bytes / w)
+        f = 1.0 - self.hit_rate * resident * (1.0 - 1.0 / self.speedup)
+        if np.ndim(nbytes) == 0:
+            return float(f)
+        return f
+
+    def to_json(self) -> dict:
+        return {"l2_bytes": self.l2_bytes, "hit_rate": self.hit_rate,
+                "speedup": self.speedup}
+
+    @staticmethod
+    def from_json(d: dict) -> "CacheCorrection":
+        return CacheCorrection(l2_bytes=float(d["l2_bytes"]),
+                               hit_rate=float(d["hit_rate"]),
+                               speedup=float(d["speedup"]))
+
+
 @dataclasses.dataclass
 class MemoryModel:
     coef: np.ndarray                         # global fallback (4,)
     train_rel_err: float = 0.0
     class_coef: Optional[dict] = None        # class -> (4,) coefficients
+    cache: Optional[CacheCorrection] = None  # measured L2 correction
+
+    def apply_cache(self, X: np.ndarray) -> np.ndarray:
+        """Scale the bytes feature (column 0) of an ``(..., 4)`` feature
+        array by the L2 factor.  Identity — same object, no copy — when no
+        cache correction is fit, so the calibration-absent path stays
+        bit-identical."""
+        if self.cache is None:
+            return X
+        X = np.array(X, dtype=np.float64, copy=True)
+        X[..., 0] = X[..., 0] * self.cache.factor(X[..., 0])
+        return X
 
     def predict(self, feats: Dict[str, float], kernel_class: str = None) -> float:
         coef = self.coef
         if self.class_coef and kernel_class in self.class_coef:
             coef = np.asarray(self.class_coef[kernel_class])
-        return float(feature_vector(feats) @ coef)
+        return float(self.apply_cache(feature_vector(feats)) @ coef)
 
     def to_json(self) -> dict:
-        return {"coef": self.coef.tolist(), "train_rel_err": self.train_rel_err,
-                "class_coef": {k: list(v) for k, v in (self.class_coef or {}).items()}}
+        d = {"coef": self.coef.tolist(), "train_rel_err": self.train_rel_err,
+             "class_coef": {k: list(v) for k, v in (self.class_coef or {}).items()}}
+        if self.cache is not None:
+            d["cache"] = self.cache.to_json()
+        return d
 
     @staticmethod
     def from_json(d: dict) -> "MemoryModel":
+        cache = d.get("cache")
         return MemoryModel(coef=np.asarray(d["coef"]),
                            train_rel_err=float(d["train_rel_err"]),
                            class_coef={k: np.asarray(v) for k, v in
-                                       d.get("class_coef", {}).items()} or None)
+                                       d.get("class_coef", {}).items()} or None,
+                           cache=CacheCorrection.from_json(cache)
+                           if cache else None)
 
 
 def _lstsq_rel(samples):
@@ -186,3 +250,68 @@ def collect_utility_samples(workloads=None) -> List[Dict]:
         feats = op_features(fn, *args)
         samples.append({"name": name, "features": feats, "duration": dur})
     return samples
+
+
+# ----- measured L2 / cache-hierarchy correction (PPT-GPU-style) -----
+
+def collect_cache_samples(sizes=None, *, min_reps: int = 5) -> List[Dict]:
+    """Measured streaming-copy durations across working-set sizes that
+    straddle the last-level cache: the raw material for
+    ``fit_cache_correction``.  Pure numpy (no jit) so the measurement is a
+    bandwidth probe, not a compiler benchmark; each sample is
+    ``{"bytes": accessed_bytes, "duration": seconds}``."""
+    import time as _time
+    if sizes is None:
+        sizes = tuple(1 << s for s in range(16, 29, 2))   # 64 KiB .. 256 MiB
+    samples = []
+    for size in sizes:
+        src = np.ones(int(size), np.uint8)
+        dst = np.empty_like(src)
+        np.copyto(dst, src)                                # warm-up
+        durs = []
+        for _ in range(min_reps):
+            t0 = _time.perf_counter()
+            np.copyto(dst, src)
+            durs.append(_time.perf_counter() - t0)
+        # bytes accessed = read + write of the working set
+        samples.append({"bytes": 2.0 * size,
+                        "duration": float(np.median(durs))})
+    return samples
+
+
+def fit_cache_correction(samples: List[Dict], coef: np.ndarray,
+                         l2_bytes: float) -> "tuple[CacheCorrection, float]":
+    """Fit (hit_rate, speedup) so ``coef``'s bytes term, scaled by
+    ``CacheCorrection.factor``, explains the measured size sweep.  Grid
+    search with one refinement pass — the surface is smooth and 2-D, no
+    gradient machinery needed.  Returns ``(correction, rel_err)``; the
+    correction degrades to the identity (hit_rate 0) when the data shows
+    no cache effect."""
+    w = np.array([s["bytes"] for s in samples], np.float64)
+    y = np.array([s["duration"] for s in samples], np.float64)
+    keep = (w > 0) & (y > 0)
+    w, y = w[keep], y[keep]
+    if len(w) < 3:
+        raise ValueError(f"fit_cache_correction: need >= 3 positive samples, "
+                         f"got {len(w)}")
+    c_bytes, c_const = float(coef[0]), float(coef[3])
+
+    def err(h, s):
+        cc = CacheCorrection(l2_bytes=l2_bytes, hit_rate=h, speedup=s)
+        pred = c_bytes * w * cc.factor(w) + c_const
+        return float(np.mean(np.abs(pred - y) / y))
+
+    hs = np.linspace(0.0, 1.0, 21)
+    ss = np.linspace(1.0, 8.0, 29)
+    _, h0, s0 = min(((err(h, s), h, s) for h in hs for s in ss),
+                    key=lambda t: t[0])
+    hs = np.clip(np.linspace(h0 - 0.05, h0 + 0.05, 11), 0.0, 1.0)
+    ss = np.clip(np.linspace(s0 - 0.25, s0 + 0.25, 11), 1.0, None)
+    e, h, s = min(((err(h, s), h, s) for h in hs for s in ss),
+                  key=lambda t: t[0])
+    e0 = err(0.0, 1.0)
+    if e0 <= e:       # no measurable cache effect: keep the identity factor
+        return CacheCorrection(l2_bytes=l2_bytes, hit_rate=0.0,
+                               speedup=1.0), e0
+    return CacheCorrection(l2_bytes=l2_bytes, hit_rate=float(h),
+                           speedup=float(s)), e

@@ -143,12 +143,15 @@ def activation_comm_cost(cfg, batch: int, seq: int,
                          device_b: Optional[str] = None) -> float:
     """Predicted seconds for one stage-boundary activation hand-off: a p2p
     transfer of the (batch, seq, d_model) hidden state over the BOTTLENECK
-    interconnect of the two endpoints (``core/collectives.py`` α–β model;
-    an unregistered/None device costs the conservative default NIC)."""
+    interconnect of the two endpoints (``core/collectives.py`` α–β model,
+    measured fits when a comm-calibration artifact carries them; an
+    unregistered/None device costs the conservative default NIC)."""
     from repro.core import collectives as CC
+    from repro.core.comm_calibrate import calibrated_interconnect
     nbytes = float(batch) * seq * cfg.d_model * CC.dtype_bytes(
         dtype or "float32")
-    return CC.p2p_time(nbytes, CC.slowest_interconnect(device_a, device_b))
+    ics = [calibrated_interconnect(d) for d in (device_a, device_b)]
+    return CC.p2p_time(nbytes, min(ics, key=lambda ic: ic.raw_bus_bw()))
 
 
 def plan_two_devices_model(predictor, cfg, batch: int, seq: int, *,

@@ -36,14 +36,24 @@ class PM2Lat:
         self.oracle = KernelOracle(store, device)
         mm = store.memory_model
         self.memory_model = MemoryModel.from_json(mm) if isinstance(mm, dict) else mm
+        # Measured L2 correction (comm_calibrate artifact): scales the
+        # memory model's bytes term.  None without a calibration artifact —
+        # the bit-identical datasheet path.
+        if self.memory_model is not None and self.memory_model.cache is None:
+            from repro.core.comm_calibrate import cache_correction_for
+            cc = cache_correction_for(device)
+            if cc is not None:
+                self.memory_model = dataclasses.replace(self.memory_model,
+                                                        cache=cc)
 
     @property
     def interconnect(self):
-        """This device's α–β interconnect spec (collective-op prediction);
-        falls back to ``collectives.DEFAULT_INTERCONNECT`` for hosts with no
-        registered profile."""
-        from repro.core.collectives import interconnect_for
-        return interconnect_for(self.device)
+        """This device's α–β interconnect spec (collective-op prediction):
+        the measured fit when a comm-calibration artifact carries one
+        (``core/comm_calibrate.py``), else the registered datasheet profile,
+        else ``collectives.DEFAULT_INTERCONNECT``."""
+        from repro.core.comm_calibrate import calibrated_interconnect
+        return calibrated_interconnect(self.device)
 
     # ----- per-op -----
     def _matmul_table(self, op: og.MatmulOp,

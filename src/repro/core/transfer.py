@@ -107,6 +107,15 @@ def transfer_memory_model(mm: Union[dict, MemoryModel], src: DeviceProfile,
     d["coef"] = _scale(d["coef"])
     if d.get("class_coef"):
         d["class_coef"] = {cls: _scale(c) for cls, c in d["class_coef"].items()}
+    if d.get("cache"):
+        # The measured L2 correction re-anchors structurally: hit rate and
+        # L2:DRAM speedup travel (they describe streaming access patterns),
+        # the capacity knee moves to the TARGET's L2 size.  A target with no
+        # (or unknown) L2 drops the correction — roofline only.
+        if dst.l2_bytes > 0:
+            d["cache"] = {**d["cache"], "l2_bytes": float(dst.l2_bytes)}
+        else:
+            d.pop("cache")
     return d
 
 

@@ -265,7 +265,7 @@ class LatencyService:
         service's cache under device-fingerprinted keys."""
         cfg = self._resolve(model)
         pred = self.predictor.for_device(device)
-        key = PredictionCache.make_key(config_key(cfg), pred.device,
+        key = PredictionCache.make_key(config_key(cfg), pred.cache_device,
                                        dtype, batch, seq)
         hit = self.cache.get(key)
         if hit is not None:
@@ -289,7 +289,8 @@ class LatencyService:
         for i, b in enumerate(batches):
             for j, s in enumerate(seqs):
                 self.cache.put(
-                    PredictionCache.make_key(config_key(cfg), pred.device,
+                    PredictionCache.make_key(config_key(cfg),
+                                             pred.cache_device,
                                              dtype, b, s), float(grid[i, j]))
         return grid
 
@@ -326,8 +327,8 @@ class LatencyService:
                 microbatches=int(microbatches), cached=cached,
                 schedule=schedule, peak_bytes=d.get("peak_bytes", 0.0))
 
-        key = PredictionCache.make_key(config_key(cfg), pred.device, dtype,
-                                       batch, seq, spec=spec.tag())
+        key = PredictionCache.make_key(config_key(cfg), pred.cache_device,
+                                       dtype, batch, seq, spec=spec.tag())
         hit = self.cache.get(key)
         # a persisted entry missing expected fields (foreign writer,
         # hand-edited file) is treated as a miss, not a crash
@@ -378,7 +379,7 @@ class LatencyService:
                 peak_bytes=d.get("peak_bytes", 0.0))
 
         key = PredictionCache.make_key(
-            config_key(cfg), pred.device, dtype, batch, seq,
+            config_key(cfg), pred.cache_device, dtype, batch, seq,
             spec=f"{spec.tag()}+{train.tag()}+train")
         _FIELDS = {"seconds", "fwd_seconds", "bwd_seconds", "comm_seconds",
                    "optimizer_seconds", "exposed_comm_seconds", "peak_bytes"}
@@ -421,7 +422,7 @@ class LatencyService:
         cfg = self._resolve(model)
         pred = self.predictor.for_device(device)
         specs = list(specs)
-        keys = [PredictionCache.make_key(config_key(cfg), pred.device,
+        keys = [PredictionCache.make_key(config_key(cfg), pred.cache_device,
                                          dtype, batch, seq, spec=sp.tag())
                 for sp in specs]
         return self._sweep(pred, cfg, batch, seq, specs, keys,
@@ -453,7 +454,7 @@ class LatencyService:
                 raise ValueError(f"train sequence length {len(trains)} != "
                                  f"{len(specs)} specs")
         keys = [PredictionCache.make_key(
-                    config_key(cfg), pred.device, dtype, batch, seq,
+                    config_key(cfg), pred.cache_device, dtype, batch, seq,
                     spec=f"{sp.tag()}+{tr.tag()}+train")
                 for sp, tr in zip(specs, trains)]
         return self._sweep(pred, cfg, batch, seq, specs, keys,
@@ -607,7 +608,7 @@ class LatencyService:
             raise ValueError(f"capacity/tp must be >=1: {capacity}, {tp}")
         mix_tag = mix.tag()
         key = PredictionCache.make_key(
-            config_key(cfg), pred.device, dtype, capacity, mix.max_ctx,
+            config_key(cfg), pred.cache_device, dtype, capacity, mix.max_ctx,
             spec=f"serve.cap{capacity}.tp{tp}.{mix_tag}")
         _FIELDS = set(S.ServingStats.FIELDS) | set(self._SERVE_EXTRAS)
 

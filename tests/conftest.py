@@ -9,6 +9,14 @@ import pytest
 assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), \
     "do not set the dry-run device-count flag for tests"
 
+# Tier-1 goldens are pinned against the DATASHEET interconnect/cache
+# constants: point the comm-calibration lookup at a path that never exists
+# so a developer's local artifacts/comm_calibration.json can't shift them.
+# Tests that exercise the calibrated path pass explicit paths/objects.
+os.environ.setdefault("PM2LAT_COMM_CALIBRATION",
+                      os.path.join(os.path.dirname(__file__),
+                                   "_no_comm_calibration.json"))
+
 
 @pytest.fixture(scope="session")
 def rng():

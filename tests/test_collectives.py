@@ -64,6 +64,68 @@ def test_monotone_in_bytes_and_world(coll):
             assert all(a < b for a, b in zip(ts, ts[1:])), (coll, n, ts)
 
 
+def test_zero_bytes_costs_alpha_only():
+    """A zero-byte collective still pays its latency rounds — exactly the
+    A·α term, no bandwidth component."""
+    for coll in CC.COLLECTIVES:
+        for world in (2, 3, 4, 8):
+            for algo in ("ring", "tree"):
+                t = float(CC.collective_time(coll, 0.0, world, A100_IC,
+                                             algorithm=algo)[0])
+                from repro.core.comm_calibrate import _algo_coeffs
+                A, V = _algo_coeffs(coll, algo, 0.0, world)
+                assert V == 0.0, (coll, algo)
+                assert t == A * A100_IC.link_latency, (coll, algo, world)
+                assert t > 0.0
+
+
+def test_non_pow2_worlds_monotone():
+    """Worlds 3 and 6 (non-powers-of-two) sit strictly between their pow2
+    neighbours for every collective — no rounding cliffs in the model."""
+    for coll in CC.COLLECTIVES:
+        if coll == "p2p":
+            continue
+        for ic in (A100_IC, PCIE_IC):
+            for n in (1e4, 1e7):
+                ts = {w: float(CC.collective_time(coll, n, w, ic)[0])
+                      for w in (2, 3, 4, 6, 8)}
+                assert ts[2] < ts[3] < ts[4] < ts[6] < ts[8], (coll, n, ts)
+
+
+def test_efficiency_scalar_and_array_types_consistent():
+    """``Interconnect.efficiency`` (and ``bus_bw``) return a builtin float
+    for scalar worlds and an ndarray for array worlds — callers never get a
+    0-d array from the scalar path."""
+    for ic in (A100_IC, PCIE_IC, CC.DEFAULT_INTERCONNECT):
+        assert type(ic.efficiency(4)) is float
+        assert type(ic.efficiency(np.int64(4))) is float
+        assert type(ic.bus_bw(4)) is float
+        arr = ic.efficiency(np.array([2, 4, 8]))
+        assert isinstance(arr, np.ndarray) and arr.shape == (3,)
+        # value equality across the two paths, element for element
+        assert [float(x) for x in arr] \
+            == [ic.efficiency(w) for w in (2, 4, 8)]
+        bw = ic.bus_bw(np.array([2, 4, 8]))
+        assert isinstance(bw, np.ndarray)
+        assert [float(x) for x in bw] == [ic.bus_bw(w) for w in (2, 4, 8)]
+
+
+def test_interconnect_eff_gamma_override():
+    """A fitted ``eff_gamma`` replaces the topology default in the decay;
+    ``None`` (the default) keeps the datasheet table — and keeps dataclass
+    equality with pre-calibration instances."""
+    base = CC.Interconnect("nvlink-mesh", 25e9, 2e-6, 12)
+    assert base == A100_IC                        # None default: equality
+    fitted = CC.Interconnect("nvlink-mesh", 25e9, 2e-6, 12, eff_gamma=0.3)
+    assert fitted.gamma() == 0.3
+    assert fitted.efficiency(8) < base.efficiency(8)
+    assert fitted.efficiency(1) == 1.0
+    flat = CC.Interconnect("nvlink-mesh", 25e9, 2e-6, 12, eff_gamma=0.0)
+    assert flat.efficiency(64) == 1.0             # γ=0: no decay at all
+    with pytest.raises(ValueError, match="eff_gamma"):
+        CC.Interconnect("nvlink-mesh", 25e9, 2e-6, 12, eff_gamma=-0.1)
+
+
 def test_ring_allreduce_equals_rs_plus_ag():
     for n in (1e4, 1e6, 1e8):
         for p in (2, 4, 8):

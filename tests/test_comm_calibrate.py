@@ -1,0 +1,436 @@
+"""Measured comm/cache calibration loop (``core/comm_calibrate.py``).
+
+Three layers:
+  * property tests — the fitter recovers synthetic ground-truth (α, β, γ)
+    from noisy generated busbw curves within tolerance (real ``hypothesis``
+    when installed, else ``tests/_propshim.py``);
+  * artifact plumbing — schema-stamped save/load, mtime memoization,
+    corrupt/mismatch policies, ``calibrated_interconnect`` /
+    ``calibration_tag`` fallbacks, cache-key tagging;
+  * golden regression — with NO calibration artifact, the prediction path
+    is bit-identical to the pre-calibration datasheet outputs across
+    ``latency_query``/``latency_parallel``/``sweep_train``/decode-grid
+    answers (exact floats pinned below, captured from the pre-calibration
+    tree over the checked-in ``calibration_cpu_host.json`` tables).
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                              # pragma: no cover
+    from tests._propshim import given, settings
+    from tests._propshim import strategies as st
+
+from repro.core import collectives as C
+from repro.core import comm_calibrate as CC
+
+
+# ---------------------------------------------------------------------------
+# fitter property tests
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(bw=st.floats(min_value=5e9, max_value=60e9),
+       alpha=st.floats(min_value=5e-7, max_value=2e-5),
+       gamma=st.floats(min_value=0.01, max_value=0.3),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_fit_recovers_noisy_truth(bw, alpha, gamma, seed):
+    """1.5%-noise sweeps pin bandwidth within 10%, γ within 0.05 absolute,
+    and the overall replay error near the noise floor."""
+    truth = C.Interconnect("pcie-tree", bw, alpha, 1, eff_gamma=gamma)
+    recs = CC.synthesize_records(truth, noise=0.015, seed=seed)
+    fit = CC.fit_interconnect(recs, "pcie-tree")
+    assert abs(fit.link_bw - bw) / bw < 0.10
+    assert abs(fit.eff_gamma - gamma) < 0.05
+    assert fit.rel_err < 0.05
+    assert fit.n_points == len(recs)
+
+
+@settings(max_examples=6, deadline=None)
+@given(bw=st.floats(min_value=10e9, max_value=40e9),
+       alpha=st.floats(min_value=1e-6, max_value=1e-5),
+       gamma=st.floats(min_value=0.02, max_value=0.2),
+       links=st.integers(min_value=2, max_value=16))
+def test_fit_recovers_exact_truth_mesh(bw, alpha, gamma, links):
+    """Zero noise: replay error collapses to the γ-grid resolution and the
+    per-link bandwidth split by ``links_per_gpu`` round-trips."""
+    truth = C.Interconnect("nvlink-mesh", bw, alpha, links, eff_gamma=gamma)
+    recs = CC.synthesize_records(truth, noise=0.0)
+    fit = CC.fit_interconnect(recs, "nvlink-mesh", links_per_gpu=links)
+    assert fit.rel_err < 5e-3
+    assert abs(fit.link_bw - bw) / bw < 0.02
+    assert abs(fit.link_latency - alpha) / alpha < 0.05
+    assert fit.links_per_gpu == links
+
+
+def test_fit_alpha_anchored_by_small_messages():
+    """The latency term is identified by the small-message points: a truth
+    with large α is recovered within 10% even under noise."""
+    truth = C.Interconnect("ethernet", 1.25e9, 25e-6, 1, eff_gamma=0.25)
+    recs = CC.synthesize_records(truth, noise=0.01, seed=3)
+    fit = CC.fit_interconnect(recs, "ethernet")
+    assert abs(fit.link_latency - 25e-6) / 25e-6 < 0.10
+
+
+def test_fit_rejects_underdetermined_sweeps():
+    with pytest.raises(ValueError, match="informative"):
+        CC.fit_interconnect([CC.CommRecord("all_reduce", 1024.0, 1, 1e-5)],
+                            "ethernet")
+
+
+def test_fit_worked_example_docs():
+    """The worked α–β fit example in docs/calibration.md: two exact points
+    of a ring all-reduce at world 2 identify α and B in closed form, and
+    ``fit_interconnect`` lands on the same constants.
+
+        t(1 KiB)  = 2·α + 2·1024·(1/2)/B = 20.1024 µs
+        t(16 MiB) = 2·α + 16 MiB/B       = 1.6977216 ms
+        ⇒ B = 10e9 B/s eff. at p=2, α = 10 µs          (γ = 0 here)
+    """
+    truth = C.Interconnect("pcie-tree", 10e9, 10e-6, 1, eff_gamma=0.0)
+    t_small = float(C.collective_time("all_reduce", 1024, 2, truth)[0])
+    t_big = float(C.collective_time("all_reduce", 16 * 2**20, 2, truth)[0])
+    assert t_small == pytest.approx(20.1024e-6, rel=1e-12)
+    assert t_big == pytest.approx(1.6977216e-3, rel=1e-12)
+    recs = CC.synthesize_records(truth, noise=0.0)
+    fit = CC.fit_interconnect(recs, "pcie-tree")
+    assert fit.link_bw == pytest.approx(10e9, rel=0.02)
+    assert fit.link_latency == pytest.approx(10e-6, rel=0.05)
+    assert fit.eff_gamma == pytest.approx(0.0, abs=0.01)
+
+
+def test_algo_coeffs_match_collective_time():
+    """The fitter's linear (A, V) coefficients and the vectorized
+    ``collective_time`` are the same formulas — drift between them would
+    silently bias every fit."""
+    ic = C.Interconnect("pcie-tree", 17e9, 3.3e-6, 1, eff_gamma=0.08)
+    for coll in C.COLLECTIVES:
+        for world in (2, 3, 4, 6, 8):
+            for nbytes in (0.0, 512.0, 3e6):
+                for algo in ("ring", "tree"):
+                    A, V = CC._algo_coeffs(coll, algo, nbytes, world)
+                    expect = (A * ic.link_latency
+                              + V / ic.bus_bw(world))
+                    got = float(C.collective_time(coll, nbytes, world, ic,
+                                                  algorithm=algo)[0])
+                    assert got == pytest.approx(expect, rel=1e-12), (
+                        coll, algo, world, nbytes)
+
+
+# ---------------------------------------------------------------------------
+# artifact plumbing
+# ---------------------------------------------------------------------------
+
+def _fit(dev="a100_80g"):
+    return CC.CommFit("nvlink-mesh", 23e9, 2.6e-6, 0.045, 12,
+                      rel_err=0.01, n_points=90)
+
+
+def test_artifact_round_trip(tmp_path):
+    path = str(tmp_path / "comm_calibration.json")
+    cal = CC.CommCalibration(fits={"a100_80g": _fit()},
+                             cache={"cpu_host": {"l2_bytes": 1e6,
+                                                 "hit_rate": 0.5,
+                                                 "speedup": 2.0}},
+                             meta={"seconds": 1.0})
+    cal.save(path)
+    back = CC.load_calibration(path)
+    assert back is not None
+    assert back.fits["a100_80g"] == _fit()
+    assert back.cache["cpu_host"]["hit_rate"] == 0.5
+    ic = back.fits["a100_80g"].interconnect()
+    assert ic == C.Interconnect("nvlink-mesh", 23e9, 2.6e-6, 12,
+                                eff_gamma=0.045)
+
+
+def test_load_missing_is_none(tmp_path):
+    assert CC.load_calibration(str(tmp_path / "nope.json")) is None
+
+
+def test_load_corrupt_raises(tmp_path):
+    path = str(tmp_path / "comm_calibration.json")
+    with open(path, "w") as f:
+        f.write("{not json")
+    with pytest.raises(ValueError, match="comm_calibration.json"):
+        CC.load_calibration(path)
+
+
+def test_load_schema_mismatch_warns_once_and_ignores(tmp_path):
+    path = str(tmp_path / "comm_calibration.json")
+    with open(path, "w") as f:
+        json.dump({"schema": 999, "fits": {}}, f)
+    with pytest.warns(UserWarning, match="schema"):
+        assert CC.load_calibration(path) is None
+    # second load: memoized / warn-once, still treated as absent
+    assert CC.load_calibration(path) is None
+
+
+def test_save_is_atomic_and_invalidates_memo(tmp_path):
+    path = str(tmp_path / "comm_calibration.json")
+    CC.CommCalibration(fits={"a100_80g": _fit()}).save(path)
+    first = CC.load_calibration(path)
+    assert "a100_80g" in first.fits
+    cal2 = CC.CommCalibration(fits={"l4": CC.CommFit("pcie-tree", 27e9,
+                                                     6.5e-6, 0.15)})
+    cal2.save(path)
+    back = CC.load_calibration(path)
+    assert set(back.fits) == {"l4"}
+    assert not os.path.exists(path + ".tmp")
+
+
+def test_calibrated_interconnect_fallbacks(tmp_path):
+    path = str(tmp_path / "comm_calibration.json")
+    # no artifact: exact datasheet objects
+    assert (CC.calibrated_interconnect("a100_80g", path)
+            == C.interconnect_for("a100_80g"))
+    assert (CC.calibrated_interconnect(None, path)
+            == C.DEFAULT_INTERCONNECT)
+    CC.CommCalibration(fits={"a100_80g": _fit()}).save(path)
+    # fitted device: the measured constants; unfitted: datasheet still
+    assert CC.calibrated_interconnect("a100_80g", path).link_bw == 23e9
+    assert (CC.calibrated_interconnect("l4", path)
+            == C.interconnect_for("l4"))
+
+
+def test_calibration_tag(tmp_path):
+    path = str(tmp_path / "comm_calibration.json")
+    assert CC.calibration_tag("a100_80g", path) is None
+    CC.CommCalibration(fits={"a100_80g": _fit()}).save(path)
+    tag = CC.calibration_tag("a100_80g", path)
+    assert tag is not None and len(tag) == 8
+    assert CC.calibration_tag("a100_80g", path) == tag     # stable
+    assert CC.calibration_tag("l4", path) is None          # unfitted device
+    # a different fit fingerprints differently (self-invalidation)
+    other = dataclasses.replace(_fit(), link_bw=24e9)
+    CC.CommCalibration(fits={"a100_80g": other}).save(path)
+    assert CC.calibration_tag("a100_80g", path) != tag
+
+
+def test_cache_device_tagging(tmp_path, monkeypatch, calibration_store):
+    from repro.core.batch_predict import BatchPredictor
+    from repro.core import calibrate
+    path = str(tmp_path / "comm_calibration.json")
+    monkeypatch.setenv(CC.CALIBRATION_ENV, path)
+    bp = BatchPredictor(calibration_store, calibrate.device_name())
+    bp.host_profile()
+    a100 = bp.for_device("a100_80g")
+    assert a100.cache_device == "a100_80g"        # absent: bare name
+    CC.CommCalibration(fits={"a100_80g": _fit()}).save(path)
+    tagged = a100.cache_device
+    assert tagged.startswith("a100_80g+cc") and len(tagged) > len("a100_80g")
+    assert bp.cache_device == calibrate.device_name()   # host unfitted
+
+
+def test_env_override_points_lookup(tmp_path, monkeypatch):
+    path = str(tmp_path / "somewhere_else.json")
+    monkeypatch.setenv(CC.CALIBRATION_ENV, path)
+    assert CC.default_calibration_path() == path
+    assert CC.load_calibration() is None
+    CC.CommCalibration(fits={"l4": CC.CommFit("pcie-tree", 27e9, 6.5e-6,
+                                              0.15)}).save(path)
+    assert CC.calibrated_interconnect("l4").link_bw == 27e9
+
+
+# ---------------------------------------------------------------------------
+# measured L2 cache correction (memory_model.CacheCorrection)
+# ---------------------------------------------------------------------------
+
+def test_cache_correction_factor_properties():
+    from repro.core.memory_model import CacheCorrection
+    cc = CacheCorrection(l2_bytes=32e6, hit_rate=0.6, speedup=3.0)
+    assert type(cc.factor(1e6)) is float
+    assert isinstance(cc.factor(np.array([1e6, 1e9])), np.ndarray)
+    w = np.logspace(3, 10, 50)
+    f = cc.factor(w)
+    assert ((f > 0) & (f <= 1.0)).all()
+    assert (np.diff(f) >= -1e-15).all()           # fades toward 1 as w grows
+    # fully resident: the whole discount; far past L2: asymptotically none
+    assert cc.factor(1e4) == pytest.approx(1 - 0.6 * (1 - 1 / 3.0))
+    assert cc.factor(1e12) == pytest.approx(1.0, abs=1e-4)
+    identity = CacheCorrection(l2_bytes=32e6, hit_rate=0.0, speedup=1.0)
+    assert identity.factor(123.0) == 1.0
+
+
+def test_fit_cache_correction_recovers_truth():
+    from repro.core.memory_model import CacheCorrection, fit_cache_correction
+    coef = np.array([1e-10, 0.0, 0.0, 2e-6])
+    truth = CacheCorrection(l2_bytes=32e6, hit_rate=0.55, speedup=2.5)
+    rng = np.random.default_rng(5)
+    w = np.logspace(4.5, 9.5, 24)
+    y = (coef[0] * w * truth.factor(w) + coef[3]) * rng.lognormal(
+        0.0, 0.01, w.size)
+    samples = [{"bytes": float(b), "duration": float(d)}
+               for b, d in zip(w, y)]
+    fit, rel = fit_cache_correction(samples, coef, 32e6)
+    assert rel < 0.03
+    # hit_rate and speedup trade off along h·(1 - 1/s) = const in the
+    # resident regime — assert the identified discount, not the raw pair
+    discount = fit.hit_rate * (1 - 1 / fit.speedup)
+    truth_discount = 0.55 * (1 - 1 / 2.5)
+    assert abs(discount - truth_discount) < 0.05
+    w_chk = np.logspace(4.5, 9.5, 40)
+    assert np.allclose(fit.factor(w_chk), truth.factor(w_chk), rtol=0.05)
+
+
+def test_fit_cache_correction_no_effect_is_identity():
+    from repro.core.memory_model import fit_cache_correction
+    coef = np.array([1e-10, 0.0, 0.0, 2e-6])
+    w = np.logspace(5, 9, 12)
+    samples = [{"bytes": float(b), "duration": float(coef[0] * b + coef[3])}
+               for b in w]
+    fit, _ = fit_cache_correction(samples, coef, 32e6)
+    assert fit.hit_rate == 0.0 and fit.speedup == 1.0
+    assert fit.factor(1e5) == 1.0
+
+
+def test_memory_model_cache_round_trip_and_predict():
+    from repro.core.memory_model import CacheCorrection, MemoryModel
+    base = MemoryModel(coef=np.array([1e-10, 0.0, 0.0, 2e-6]))
+    feats = {"bytes": 1e6, "flops": 0.0, "transcendentals": 0.0}
+    plain = base.predict(feats)
+    cc = CacheCorrection(l2_bytes=32e6, hit_rate=0.6, speedup=3.0)
+    cached = dataclasses.replace(base, cache=cc)
+    corrected = cached.predict(feats)
+    assert corrected < plain                       # L2 makes it cheaper
+    expect = 1e-10 * 1e6 * cc.factor(1e6) + 2e-6
+    assert corrected == pytest.approx(expect, rel=1e-12)
+    back = MemoryModel.from_json(cached.to_json())
+    assert back.cache == cc
+    assert back.predict(feats) == corrected
+    # no-cache round trip keeps cache=None (and the exact prediction)
+    back0 = MemoryModel.from_json(base.to_json())
+    assert back0.cache is None and back0.predict(feats) == plain
+
+
+def test_apply_cache_identity_is_same_object():
+    from repro.core.memory_model import MemoryModel
+    m = MemoryModel(coef=np.zeros(4))
+    X = np.ones((3, 4))
+    assert m.apply_cache(X) is X                   # no copy on the hot path
+
+
+def test_transfer_reanchors_cache_l2():
+    from repro.core import devices as D
+    from repro.core.memory_model import MemoryModel
+    from repro.core.transfer import transfer_memory_model
+    src = D.get_profile("a100_80g")
+    dst = D.get_profile("l4")
+    mm = {"coef": [1e-10, 1e-12, 1e-9, 2e-6], "train_rel_err": 0.05,
+          "class_coef": {},
+          "cache": {"l2_bytes": float(src.l2_bytes), "hit_rate": 0.5,
+                    "speedup": 2.0}}
+    out = transfer_memory_model(mm, src, dst)
+    assert out["cache"]["l2_bytes"] == float(dst.l2_bytes)
+    assert out["cache"]["hit_rate"] == 0.5         # ratios travel unchanged
+    tpu = D.get_profile("tpu_v5e")
+    assert "cache" not in transfer_memory_model(mm, src, tpu)  # no L2 known
+    assert MemoryModel.from_json(out).cache is not None
+
+
+# ---------------------------------------------------------------------------
+# host sweeps (measured on this machine)
+# ---------------------------------------------------------------------------
+
+def test_host_sweep_fits(tmp_path):
+    """A reduced loopback sweep produces a fittable curve with positive
+    bandwidth (kept small — the full default sweep is the slow test)."""
+    recs = CC.run_host_sweep(sizes=(4096, 65536, 1 << 20), worlds=(2, 4),
+                             colls=("all_reduce", "broadcast"), min_reps=2)
+    assert len(recs) == 12
+    assert all(r.measured_s > 0 for r in recs)
+    fit = CC.fit_interconnect(recs, "ethernet")
+    assert fit.link_bw > 1e8                       # host memcpy >> 100 MB/s
+
+
+@pytest.mark.slow
+def test_calibrate_comm_full_loop(tmp_path, monkeypatch):
+    """The whole measured loop end-to-end (host sweep + bundled traces +
+    cache sweep), persisted and re-loaded — the real-run path of
+    ``benchmarks/comm_validation.py``."""
+    path = str(tmp_path / "comm_calibration.json")
+    monkeypatch.setenv(CC.CALIBRATION_ENV, path)
+    cal = CC.calibrate_comm(path, verbose=False)
+    assert os.path.exists(path)
+    back = CC.load_calibration(path)
+    assert set(back.fits) >= {"a100_80g", "l4"}    # bundled trace devices
+    for dev in ("a100_80g", "l4"):
+        assert back.fits[dev].rel_err < 0.10       # recorded traces fit tight
+    from repro.core.calibrate import device_name
+    host = back.fits[device_name()]                # host loopback fit
+    # real memcpy timings on a shared machine are noisy — only require a
+    # sane positive fit, not the bundled-trace error budget
+    assert host.link_bw > 0 and host.rel_err < 1.0
+    assert back.cache                              # L2 sweep ran
+
+
+# ---------------------------------------------------------------------------
+# golden regression: the calibration-ABSENT path is bit-identical
+# ---------------------------------------------------------------------------
+
+# Captured from the pre-calibration tree (commit 0134888) over the
+# checked-in artifacts/calibration_cpu_host.json tables.  EXACT equality:
+# the datasheet path must not move by a single bit.
+_GOLDEN = {
+    "query_2_64": 0.01884406102754936,
+    "par_tp4_a100": (0.0008527656980281522, 0.00013486102186666666,
+                     0.00013486102186666658),
+    "train_dp4_a100": (0.00461687269633054, 0.0001943345152),
+    "par_pp2_a100": 0.0018555790805328094,
+    "sweep_train_l4": (0.0038144750794291537, 0.0032544664977142467,
+                       0.0040597596703971115),
+    "decode_grid_a100": (0.0008109118250398105, 0.0008201451967491993,
+                         0.0008204409006889957, 0.0008573743875265506),
+}
+
+
+@pytest.fixture(scope="module")
+def _svc(calibration_store):
+    from repro.serving.latency_service import LatencyService
+    return LatencyService(store=calibration_store)
+
+
+def test_golden_absent_query(_svc):
+    assert _svc.latency_query("qwen3-mini", 2, 64).seconds \
+        == _GOLDEN["query_2_64"]
+
+
+def test_golden_absent_parallel(_svc):
+    r = _svc.latency_parallel("qwen3-mini", 2, 64, tp=4, device="a100_80g")
+    assert (r.seconds, r.comm_seconds, r.exposed_comm_seconds) \
+        == _GOLDEN["par_tp4_a100"]
+    p = _svc.latency_parallel("qwen3-mini", 2, 64, pp=2, microbatches=4,
+                              device="a100_80g")
+    assert p.seconds == _GOLDEN["par_pp2_a100"]
+
+
+def test_golden_absent_train_and_sweep(_svc):
+    t = _svc.latency_train("qwen3-mini", 2, 64, dp=4, microbatches=2,
+                           bucket_mb=4.0, device="a100_80g")
+    assert (t.seconds, t.comm_seconds) == _GOLDEN["train_dp4_a100"]
+    from repro.core.opgraph import ParallelismSpec
+    sw = _svc.sweep_train("qwen3-mini", 2, 64,
+                          [ParallelismSpec(dp=2), ParallelismSpec(tp=2),
+                           ParallelismSpec(pp=2, microbatches=2)],
+                          device="l4")
+    assert tuple(float(x) for x in sw.seconds) == _GOLDEN["sweep_train_l4"]
+
+
+def test_golden_absent_decode_grid(_svc):
+    d = _svc.predictor.predict_decode_grid(_svc._resolve("qwen3-mini"),
+                                           [1, 4], [128, 512],
+                                           device="a100_80g")
+    assert tuple(float(x) for x in d.ravel()) == _GOLDEN["decode_grid_a100"]
+
+
+def test_golden_absent_cache_keys_untagged(_svc):
+    """Without an artifact, cache keys carry the bare device name — the
+    byte-identical pre-calibration key format."""
+    pred = _svc.predictor.for_device("a100_80g")
+    assert pred.cache_device == "a100_80g"
+    assert _svc.predictor.cache_device == _svc.predictor.device

@@ -1,0 +1,236 @@
+"""Measured-vs-predicted trace replay (``core/validate.py``).
+
+The bundled recorded traces under ``artifacts/traces/`` are part of the
+repo contract: replaying them through ``collective_time`` /
+``schedule.simulate`` must be deterministic and bit-identical run to run,
+the fitted constants must land every trace inside the pinned error budget,
+and a deliberately perturbed interconnect must FAIL the budget (the
+harness can actually reject a bad model, not just bless everything).
+"""
+import copy
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.core import collectives as C
+from repro.core import comm_calibrate as CC
+from repro.core import validate as V
+
+
+def _traces():
+    return {t["name"]: t for t in (V.load_trace(p) for p in V.list_traces())}
+
+
+@pytest.fixture(scope="module")
+def traces():
+    out = _traces()
+    assert set(out) == {"nccl_a100_nvlink_w8", "nccl_l4_pcie_w4",
+                        "gpipe_pp2_mb4", "ddp_bucket_overlap"}
+    return out
+
+
+def _fit_of(trace):
+    recs = [CC.CommRecord.from_json(r) for r in trace["records"]]
+    return CC.fit_interconnect(recs, trace["topology"],
+                               links_per_gpu=trace.get("links_per_gpu", 1))
+
+
+# ---------------------------------------------------------------------------
+# golden replay: the bundled traces fit and replay bit-identically
+# ---------------------------------------------------------------------------
+
+# Exact fit/replay numbers for the checked-in traces.  These pin BOTH the
+# trace bytes and the whole fit→replay pipeline: any change to the fitter,
+# the α–β formulas, or the trace files moves them.
+_REPLAY_GOLDEN = {
+    "nccl_a100_nvlink_w8": dict(mean=0.0099585354100176736,
+                                max=0.035353641105227256, n=120,
+                                link_bw=23342011156.49515,
+                                link_latency=2.5935714369154594e-06,
+                                eff_gamma=0.05199999999999999),
+    "nccl_l4_pcie_w4": dict(mean=0.010627816306485509,
+                            max=0.029531143897997842, n=80,
+                            link_bw=27286438753.643906,
+                            link_latency=6.517664292882866e-06,
+                            eff_gamma=0.156),
+    "gpipe_pp2_mb4": dict(mean=0.017681728880157212,
+                          max=0.017681728880157212, n=1),
+    "ddp_bucket_overlap": dict(mean=0.0080645161290321937,
+                               max=0.0080645161290321937, n=1),
+}
+
+
+def test_collective_traces_replay_bit_identically(traces):
+    for name in ("nccl_a100_nvlink_w8", "nccl_l4_pcie_w4"):
+        g = _REPLAY_GOLDEN[name]
+        fit = _fit_of(traces[name])
+        assert fit.link_bw == g["link_bw"], name
+        assert fit.link_latency == g["link_latency"], name
+        assert fit.eff_gamma == g["eff_gamma"], name
+        rep = V.validate_collective_trace(traces[name], ic=fit.interconnect())
+        assert rep.mean_rel_err == g["mean"], name
+        assert rep.max_rel_err == g["max"], name
+        assert rep.n_points == g["n"], name
+        assert rep.passed and rep.budget == V.BUDGETS["collective"]
+
+
+def test_schedule_traces_replay_bit_identically(traces):
+    for name in ("gpipe_pp2_mb4", "ddp_bucket_overlap"):
+        g = _REPLAY_GOLDEN[name]
+        rep = V.validate_schedule_trace(traces[name])
+        assert rep.mean_rel_err == g["mean"], name
+        assert rep.max_rel_err == g["max"], name
+        assert rep.n_points == g["n"], name
+        assert rep.passed and rep.budget == V.BUDGETS["schedule"]
+
+
+def test_replay_is_deterministic(traces):
+    """Two independent passes over every trace produce byte-equal reports."""
+    def one_pass():
+        return {n: V.validate_trace(t).to_json()
+                for n, t in sorted(_traces().items())}
+    a, b = one_pass(), one_pass()
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+def test_perturbed_constants_fail_budget(traces):
+    """A 3x-slower interconnect must blow the collective budget on every
+    bundled trace — the budget actually discriminates."""
+    for name in ("nccl_a100_nvlink_w8", "nccl_l4_pcie_w4"):
+        fit = _fit_of(traces[name])
+        bad = dataclasses.replace(fit.interconnect(),
+                                  link_bw=fit.link_bw / 3.0)
+        rep = V.validate_collective_trace(traces[name], ic=bad)
+        assert not rep.passed
+        assert rep.mean_rel_err > 3 * V.BUDGETS["collective"]
+
+
+def test_perturbed_schedule_fails_budget(traces):
+    """Stretch one recorded duration 2x: the replayed makespan must leave
+    the (tight) schedule budget."""
+    tr = copy.deepcopy(traces["gpipe_pp2_mb4"])
+    tr["nodes"][0]["duration_s"] *= 2.0
+    rep = V.validate_schedule_trace(tr)
+    assert not rep.passed
+
+
+def test_error_report_tables(traces):
+    rep = V.validate_collective_trace(
+        traces["nccl_a100_nvlink_w8"],
+        ic=_fit_of(traces["nccl_a100_nvlink_w8"]).interconnect())
+    groups = {r.group for r in rep.rows}
+    assert {"coll=all_reduce", "coll=all_gather", "world=8"} <= groups
+    assert any(g.startswith("size") for g in groups)
+    assert sum(r.n for r in rep.rows if r.group.startswith("coll=")) \
+        == rep.n_points
+    txt = rep.table()
+    assert "nccl_a100_nvlink_w8" in txt and "mean=" in txt and "PASS" in txt
+    j = rep.to_json()
+    assert j["passed"] is True and len(j["rows"]) == len(rep.rows)
+
+
+def test_run_validation_end_to_end(traces):
+    """With the traces' own fitted constants every report passes; with the
+    datasheet constants (no calibration) the recorded NVLink trace — whose
+    ground truth deliberately differs from the spec sheet — does not."""
+    cal = CC.CommCalibration(fits={
+        traces[n]["device"]: CC.CommFit(
+            traces[n]["topology"], f.link_bw, f.link_latency, f.eff_gamma,
+            f.links_per_gpu, rel_err=f.rel_err, n_points=f.n_points)
+        for n in ("nccl_a100_nvlink_w8", "nccl_l4_pcie_w4")
+        for f in (_fit_of(traces[n]),)})
+    reports = V.run_validation(calibration=cal)
+    assert {r.name for r in reports} == set(traces)
+    assert all(r.passed for r in reports)
+    uncal = {r.name: r for r in V.run_validation()}
+    assert not uncal["nccl_a100_nvlink_w8"].passed
+
+
+# ---------------------------------------------------------------------------
+# loader error policy: loud failures, never silent garbage
+# ---------------------------------------------------------------------------
+
+def test_load_trace_rejects_bad_schema(tmp_path):
+    p = str(tmp_path / "t.json")
+    with open(p, "w") as f:
+        json.dump({"schema": 99, "kind": "collective", "name": "x",
+                   "records": []}, f)
+    with pytest.raises(ValueError, match="schema"):
+        V.load_trace(p)
+
+
+def test_load_trace_rejects_unknown_kind(tmp_path):
+    p = str(tmp_path / "t.json")
+    with open(p, "w") as f:
+        json.dump({"schema": V.TRACE_SCHEMA, "kind": "mystery", "name": "x"},
+                  f)
+    with pytest.raises(ValueError, match="kind"):
+        V.load_trace(p)
+
+
+def test_load_trace_rejects_corrupt_json(tmp_path):
+    p = str(tmp_path / "t.json")
+    with open(p, "w") as f:
+        f.write("{nope")
+    with pytest.raises(ValueError, match="t.json"):
+        V.load_trace(p)
+
+
+def test_schedule_validator_rejects_forward_deps():
+    tr = {"schema": V.TRACE_SCHEMA, "kind": "schedule", "name": "bad",
+          "device": None,
+          "nodes": [{"name": "a", "stream": "s", "duration_s": 1.0,
+                     "deps": ["b"]},
+                    {"name": "b", "stream": "s", "duration_s": 1.0,
+                     "deps": []}],
+          "measured": {"makespan_s": 2.0}}
+    with pytest.raises(ValueError, match="forward"):
+        V.validate_schedule_trace(tr)
+
+
+def test_collective_validator_skips_degenerate_rows(traces):
+    tr = copy.deepcopy(traces["nccl_l4_pcie_w4"])
+    n = len(tr["records"])
+    tr["records"].append({"coll": "all_reduce", "nbytes": 1024.0,
+                          "world": 1, "measured_s": 1e-6})
+    tr["records"].append({"coll": "all_reduce", "nbytes": 1024.0,
+                          "world": 4, "measured_s": 0.0})
+    rep = V.validate_collective_trace(tr, ic=_fit_of(traces[
+        "nccl_l4_pcie_w4"]).interconnect())
+    assert rep.n_points == n                       # both degenerates skipped
+
+
+def test_size_bucket_labels():
+    assert V._size_bucket(512) == "size<1KiB"
+    lab = V._size_bucket(8192)
+    assert lab.startswith("size=") and "KiB" in lab
+    assert V._size_bucket(512) != V._size_bucket(1 << 26)
+
+
+# ---------------------------------------------------------------------------
+# benchmarks/comm_validation.py dry-run (the --calib CI lane entry point)
+# ---------------------------------------------------------------------------
+
+def test_comm_validation_dry_run():
+    import subprocess
+    import sys
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.comm_validation", "--dry-run"],
+        cwd=root, env=env, capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stdout + out.stderr
+    # dry runs land under artifacts/ only (never the tracked repo root)
+    with open(os.path.join(root, "artifacts",
+                           "BENCH_comm_validation_dry.json")) as f:
+        payload = json.load(f)
+    assert payload["dry"] is True
+    assert len(payload["reports"]) == 4
+    assert all(r["passed"] for r in payload["reports"])
+    assert all(p["mean_rel_err"] > payload["budgets"]["collective"]
+               for p in payload["perturbed"])
+    assert set(payload["fits"]) == {"a100_80g", "l4"}
+    assert not os.path.exists(
+        os.path.join(root, "BENCH_comm_validation_dry.json"))
