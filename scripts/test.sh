@@ -123,6 +123,18 @@ print(f"latency_serve ok: cap{r.capacity}.tp{r.tp} "
       f"{r.tokens_per_sec:.1f} tok/s ttft_p95={r.ttft_p95*1e3:.3f}ms "
       f"tpot_p95={r.tpot_p95*1e3:.3f}ms occ={r.occupancy:.2f}; "
       f"cached-hit ok")
+# plan_serving answers the full pow2 (capacity, tp) grid in ONE batched
+# pass — 36 points at devices=32/max_capacity=32 — and leaves every
+# point cached for the scalar endpoint
+plan = svc.plan_serving("qwen3-mini", mix, devices=32, max_capacity=32,
+                        memory_gb=1024.0)
+assert plan.n_candidates == 36, plan.n_candidates
+assert svc.latency_serve("qwen3-mini", mix, capacity=plan.capacity,
+                         tp=plan.tp).cached
+print(f"plan_serving ok: cap{plan.capacity}.tp{plan.tp} "
+      f"{plan.tokens_per_sec:.1f} tok/s "
+      f"({plan.n_feasible}/{plan.n_candidates} feasible, one batched "
+      f"pass); winner cached-hit ok")
 PY
   echo "--- smoke: serving-sweep benchmark (--dry-run, degenerate + GQA goldens) ---"
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TIMEOUT" \

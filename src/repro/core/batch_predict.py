@@ -809,6 +809,35 @@ class BatchPredictor:
             out[bi] = base + var
         return out
 
+    def serving_tables(self, cfg: C.ModelConfig, mix, *, capacity: int,
+                       dtype: Optional[str] = None,
+                       spec: Optional[og.ParallelismSpec] = None,
+                       device: Optional[str] = None):
+        """Price one serving point's full latency substrate
+        (``schedule.ServingTables``) in two vectorized passes: a prefill
+        entry per distinct prompt length — the scalar ``predict_model``
+        float path (``schedule_parallel`` makespan under a spec), so a
+        degenerate zero-decode mix stays bit-identical to the scalar
+        endpoints — and ONE ``predict_decode_grid`` call covering
+        ``(1..capacity, 1..mix.max_ctx)``.  The grid rows are
+        batch-independent, so a max-capacity table serves every smaller
+        capacity in a sweep bit-identically."""
+        if device is not None and device != self.device:
+            return self.for_device(device).serving_tables(
+                cfg, mix, capacity=capacity, dtype=dtype, spec=spec)
+        from repro.core import schedule as S
+        pre: Dict[int, float] = {}
+        for p in sorted(set(int(p) for p in mix.prompt_lens)):
+            if spec is None:
+                pre[p] = float(self.predict_model(cfg, 1, p, dtype=dtype)[0])
+            else:
+                pre[p] = float(self.schedule_parallel(cfg, 1, p, spec,
+                                                      dtype=dtype).makespan)
+        grid = self.predict_decode_grid(cfg, np.arange(1, int(capacity) + 1),
+                                        np.arange(1, mix.max_ctx + 1),
+                                        dtype=dtype, spec=spec)
+        return S.ServingTables(prefill=pre, decode=grid)
+
     # ----- cached interface -----
     def predict_model_cached(self, cfg: C.ModelConfig, batch: int, seq: int,
                              dtype: Optional[str] = None,
@@ -883,7 +912,14 @@ class PredictionCache:
     #    suffix (``BatchPredictor.cache_device``).  Without an artifact,
     #    keys and values are byte-identical to schema 6; the bump guards
     #    pre-calibration caches read by calibration-aware code.
-    SCHEMA = 7
+    # 8: serving-entry accounting fixes — ``occupancy`` is now the
+    #    duration-weighted decode-batch fill (unit-weighted per-step
+    #    averaging before) and TPOT percentiles run over multi-token
+    #    requests only, so ``serve.capN.tpN.<mix-tag>`` entry VALUES
+    #    change for any mix with a varying decode batch or single-token
+    #    requests.  Keys and every non-serving entry are unchanged from
+    #    schema 7.
+    SCHEMA = 8
 
     def __init__(self, maxsize: int = 65536, path: Optional[str] = None):
         self.maxsize = int(maxsize)

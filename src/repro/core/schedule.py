@@ -1650,28 +1650,112 @@ class ServingStats:
         return ServingStats(**{f: float(d[f]) for f in ServingStats.FIELDS})
 
 
-def simulate_serving(mix: TrafficMix, capacity: int,
-                     prefill_seconds, decode_step_seconds,
-                     return_detail: bool = False):
-    """Continuous-batching slot-refill loop over PREDICTED per-step
-    latencies.
+@dataclasses.dataclass(frozen=True)
+class ServingTables:
+    """Precomputed per-phase latency tables for one serving point — the
+    grid-priced substrate ``simulate_serving`` consumes instead of
+    per-step closures.  ``prefill[plen]`` prices one prompt forward for
+    each distinct prompt length in the mix; ``decode[b-1, c-1]`` prices
+    one decode step for ``b`` co-scheduled slots at KV length ``c`` (one
+    ``BatchPredictor.predict_decode_grid`` call per (device, tp) fills
+    the whole grid).  Rows/cols beyond what a point needs are harmless:
+    the simulators only read ``decode[:capacity, :mix.max_ctx]``, so one
+    max-capacity grid serves every smaller capacity bit-identically."""
+    prefill: Dict[int, float]
+    decode: np.ndarray
 
-    ``prefill_seconds(plen)`` prices one prompt forward;
-    ``decode_step_seconds(batch, ctx)`` prices one decode step for
-    ``batch`` co-scheduled slots at KV length ``ctx`` (the longest slot's
-    post-append length — batched decode runs one kernel wave sized by the
-    longest cache).  Admission is prefill-priority: whenever a slot is
-    free and a request has arrived, the engine prefills it (stalling
-    in-flight decodes — the stall shows up in the admitted-earlier
-    requests' TPOT, as on a real engine); otherwise it runs one decode
-    step for every active slot.  The prefill's last forward samples the
-    FIRST output token, so TTFT is the prefill completion time minus the
-    submit time and a request with ``output_len == 1`` never enters the
-    decode batch.  TPOT is the per-token gap over the remaining
-    ``output_len - 1`` tokens; occupancy is the mean decode-batch fill
-    ``active / capacity`` over decode steps."""
+    def __post_init__(self):
+        d = np.asarray(self.decode, np.float64)
+        if d.ndim != 2:
+            raise ValueError(
+                f"decode grid must be 2-D (batch, ctx): shape {d.shape}")
+        object.__setattr__(self, "decode", d)
+        object.__setattr__(
+            self, "prefill",
+            {int(k): float(v) for k, v in dict(self.prefill).items()})
+
+    @staticmethod
+    def from_callables(mix: "TrafficMix", capacity: int,
+                       prefill_seconds, decode_step_seconds
+                       ) -> "ServingTables":
+        """Materialize legacy closures into tables (one call per distinct
+        prompt length and per (batch, ctx) cell)."""
+        pre = {int(p): float(prefill_seconds(int(p)))
+               for p in sorted(set(int(p) for p in mix.prompt_lens))}
+        ctx = mix.max_ctx
+        dec = [[float(decode_step_seconds(b, c)) for c in range(1, ctx + 1)]
+               for b in range(1, int(capacity) + 1)]
+        return ServingTables(prefill=pre, decode=np.asarray(dec, np.float64))
+
+    def validate(self, mix: "TrafficMix", capacity: int) -> None:
+        if (self.decode.shape[0] < capacity
+                or self.decode.shape[1] < mix.max_ctx):
+            raise ValueError(
+                f"decode grid {self.decode.shape} smaller than "
+                f"(capacity={capacity}, max_ctx={mix.max_ctx})")
+        missing = sorted(set(int(p) for p in mix.prompt_lens)
+                         - set(self.prefill))
+        if missing:
+            raise ValueError(
+                f"prefill table missing prompt lengths {missing}")
+
+
+def _as_serving_tables(mix: TrafficMix, capacity: int, prefill,
+                       decode) -> ServingTables:
+    """Accept closures (legacy API), a ``{plen: seconds}`` mapping plus a
+    ``(batch, ctx)`` grid, or mixed — always return validated tables."""
+    if callable(prefill):
+        pre = {int(p): float(prefill(int(p)))
+               for p in sorted(set(int(p) for p in mix.prompt_lens))}
+    else:
+        pre = dict(prefill)
+    if callable(decode):
+        dec = np.asarray(
+            [[float(decode(b, c)) for c in range(1, mix.max_ctx + 1)]
+             for b in range(1, int(capacity) + 1)], np.float64)
+    else:
+        dec = decode
+    tab = ServingTables(prefill=pre, decode=dec)
+    tab.validate(mix, capacity)
+    return tab
+
+
+def _finalize_serving(capacity, makespan, ttft, tpot, lat, multi,
+                      tokens_out, occ_num, occ_den) -> ServingStats:
+    """Shared stats finalization: TPOT percentiles run over multi-token
+    requests only (an ``output_len == 1`` request emits its single token
+    at prefill and has no per-token gap — an all-single-token mix pins
+    ``tpot_p50 == tpot_p95 == 0.0``); occupancy is the
+    duration-weighted decode-batch fill
+    ``sum(batch * step_seconds) / (capacity * sum(step_seconds))``."""
+    tp = tpot[multi]
+    return ServingStats(
+        capacity=float(capacity), n_requests=float(ttft.size),
+        makespan=float(makespan), tokens_out=tokens_out,
+        tokens_per_sec=tokens_out / makespan if makespan > 0 else 0.0,
+        ttft_p50=float(np.percentile(ttft, 50)),
+        ttft_p95=float(np.percentile(ttft, 95)),
+        tpot_p50=float(np.percentile(tp, 50)) if tp.size else 0.0,
+        tpot_p95=float(np.percentile(tp, 95)) if tp.size else 0.0,
+        latency_p50=float(np.percentile(lat, 50)),
+        latency_p95=float(np.percentile(lat, 95)),
+        occupancy=float(occ_num / (occ_den * capacity))
+        if occ_den > 0 else 0.0)
+
+
+def simulate_serving_steps(mix: TrafficMix, capacity: int,
+                           prefill_seconds, decode_step_seconds,
+                           return_detail: bool = False):
+    """Reference token-by-token serving loop: one decode step per
+    iteration, O(total generated tokens).  ``simulate_serving``
+    fast-forwards whole constant-batch runs and must agree with this
+    loop bit-for-bit on every time value (the property suite pins it;
+    ``benchmarks/serving_sweep.py`` times the gap).  Accepts the same
+    closure / table arguments as ``simulate_serving``."""
     if capacity < 1:
         raise ValueError(f"capacity must be >=1: {capacity}")
+    tab = _as_serving_tables(mix, int(capacity), prefill_seconds,
+                             decode_step_seconds)
     plens, olens, arrivals = mix.sample()
     n = len(plens)
     order = np.argsort(arrivals, kind="stable")
@@ -1680,14 +1764,14 @@ def simulate_serving(mix: TrafficMix, capacity: int,
     t = 0.0
     nxt = 0
     active: List[List[int]] = []    # [kv_len, remaining_tokens, request_idx]
-    occ_sum = 0.0
-    occ_steps = 0
+    occ_num = 0.0
+    occ_den = 0.0
     while nxt < n or active:
         while (len(active) < capacity and nxt < n
                and float(arrivals[order[nxt]]) <= t):
             i = int(order[nxt])
             nxt += 1
-            t += float(prefill_seconds(int(plens[i])))
+            t += tab.prefill[int(plens[i])]
             tfirst[i] = t
             if int(olens[i]) > 1:
                 # KV holds plen prompt entries + the just-sampled token
@@ -1696,9 +1780,10 @@ def simulate_serving(mix: TrafficMix, capacity: int,
                 tdone[i] = t
         if active:
             ctx = max(sl[0] + 1 for sl in active)
-            t += float(decode_step_seconds(len(active), ctx))
-            occ_sum += len(active) / float(capacity)
-            occ_steps += 1
+            dur = float(tab.decode[len(active) - 1, ctx - 1])
+            t += dur
+            occ_num += len(active) * dur
+            occ_den += dur
             still = []
             for sl in active:
                 sl[0] += 1
@@ -1714,19 +1799,232 @@ def simulate_serving(mix: TrafficMix, capacity: int,
     lat = tdone - arrivals
     multi = olens > 1
     tpot = np.zeros(n)
-    tpot[multi] = (tdone[multi] - tfirst[multi]) / (olens[multi] - 1)
+    tpot[multi] = (tdone[multi] - tfirst[multi]) / (olens[multi] - 1.0)
+    stats = _finalize_serving(capacity, float(t), ttft, tpot, lat, multi,
+                              float(olens.sum()), occ_num, occ_den)
+    if return_detail:
+        return stats, {"ttft": ttft, "tpot": tpot, "latency": lat,
+                       "prompt_lens": plens, "output_lens": olens,
+                       "arrivals": arrivals}
+    return stats
+
+
+def simulate_serving(mix: TrafficMix, capacity: int,
+                     prefill_seconds, decode_step_seconds,
+                     return_detail: bool = False):
+    """Continuous-batching slot-refill simulation over PREDICTED
+    per-step latencies — event-driven.
+
+    ``prefill_seconds`` prices one prompt forward (a closure over plen,
+    or a ``{plen: seconds}`` mapping / ``ServingTables.prefill``);
+    ``decode_step_seconds`` prices one decode step for ``batch``
+    co-scheduled slots at KV length ``ctx`` — the longest slot's
+    post-append length, since batched decode runs one kernel wave sized
+    by the longest cache — as a closure or a ``(batch, ctx)`` grid
+    (``ServingTables.decode``).  Admission is prefill-priority: whenever
+    a slot is free and a request has arrived, the engine prefills it
+    (stalling in-flight decodes — the stall shows up in the
+    admitted-earlier requests' TPOT, as on a real engine).  The
+    prefill's last forward samples the FIRST output token, so TTFT is
+    the prefill completion time minus the submit time and a request with
+    ``output_len == 1`` never enters the decode batch.  TPOT is the
+    per-token gap over the remaining ``output_len - 1`` tokens;
+    occupancy is the duration-weighted decode-batch fill.
+
+    Between admissions and completions the decode batch is constant and
+    ctx advances by exactly 1 per step, so instead of looping per token
+    the simulator fast-forwards each run in O(1) numpy ops
+    (``simulate_serving_batch`` with S=1); ``simulate_serving_steps``
+    keeps the naive loop as the bit-identical reference."""
+    if capacity < 1:
+        raise ValueError(f"capacity must be >=1: {capacity}")
+    tab = _as_serving_tables(mix, int(capacity), prefill_seconds,
+                             decode_step_seconds)
+    out = simulate_serving_batch(mix, [int(capacity)], [tab],
+                                 return_detail=return_detail)
+    if not return_detail:
+        return out[0]
+    stats, det = out
+    return stats[0], {
+        k: (v[0] if k in ("ttft", "tpot", "latency") else v)
+        for k, v in det.items()}
+
+
+def simulate_serving_batch(mix: TrafficMix, capacities: Sequence[int],
+                           tables: Sequence[ServingTables],
+                           return_detail: bool = False):
+    """Evaluate S (capacity, latency-table) serving points over ONE
+    shared sampled trace, every per-event update a length-S vector op —
+    the serving analogue of ``simulate_batch``.
+
+    Each row is bit-identical to ``simulate_serving`` run scalar on the
+    same point (pinned by tests): between admissions and completions the
+    decode batch is constant and ctx advances by exactly 1 per step, so
+    a run of ``k = min(remaining)`` decode steps is ``np.cumsum`` over a
+    slice of the point's decode-grid row — the exact sequence of float
+    additions the naive loop performs.  A pending arrival into a free
+    slot truncates the run at the first step whose completion time
+    reaches the arrival (the naive loop re-checks admission after every
+    step).  Complexity is O(events), not O(total generated tokens).
+
+    Returns ``[ServingStats] * S`` in input order; with
+    ``return_detail``, also a dict of (S, n) per-request arrays plus the
+    shared trace."""
+    caps = np.asarray(list(capacities), np.int64)
+    S = int(caps.size)
+    tabs = list(tables)
+    if len(tabs) != S:
+        raise ValueError(f"{S} capacities but {len(tabs)} tables")
+    if S == 0:
+        return ([], {}) if return_detail else []
+    if (caps < 1).any():
+        raise ValueError(f"capacity must be >=1: {caps.tolist()}")
+    plens, olens, arrivals = mix.sample()
+    n = int(plens.size)
+    order = np.argsort(arrivals, kind="stable")
+    max_ctx = mix.max_ctx
+    maxcap = int(caps.max())
+    # pack per-UNIQUE-table arrays once (sweeps share one table across
+    # many capacities); tmap[s] is point s's row in Pre/D
+    uniq: Dict[int, int] = {}
+    tmap = np.empty(S, np.int64)
+    packed: List[ServingTables] = []
+    for s, tab in enumerate(tabs):
+        tab.validate(mix, int(caps[s]))
+        u = uniq.setdefault(id(tab), len(packed))
+        if u == len(packed):
+            packed.append(tab)
+        tmap[s] = u
+    U = len(packed)
+    Pre = np.empty((U, n))
+    D = np.zeros((U, maxcap, max_ctx))
+    for u, tab in enumerate(packed):
+        Pre[u] = [tab.prefill[int(p)] for p in plens]
+        rows = min(maxcap, tab.decode.shape[0])
+        D[u, :rows] = tab.decode[:rows, :max_ctx]
+    BIG = np.iinfo(np.int64).max
+    arr_next = np.append(arrivals[order], np.inf)  # arrival of order[nxt]
+    t = np.zeros(S)
+    nxt = np.zeros(S, np.int64)
+    seated = np.zeros((S, n), bool)
+    kv = np.zeros((S, n), np.int64)
+    rem = np.zeros((S, n), np.int64)
+    tfirst = np.zeros((S, n))
+    tdone = np.zeros((S, n))
+    occ_num = np.zeros(S)
+    occ_den = np.zeros(S)
+    while True:
+        nact = seated.sum(axis=1)
+        pending = nxt < n
+        if not (pending.any() or nact.any()):
+            break
+        # --- admission (prefill-priority): per pass, each point admits
+        #     its longest burst of ready requests in one cumsum — the
+        #     scalar inner-while's exact sequence of float additions.
+        #     The burst is bounded by free slots (single-token requests
+        #     never seat, so the outer while picks up any remainder) and
+        #     stops at the first not-yet-arrived request; prefills
+        #     advance t, so later arrivals may qualify mid-burst ---
+        while True:
+            jcap = np.minimum(caps - nact, n - nxt)
+            can = (jcap > 0) & (arr_next[nxt] <= t)
+            if not can.any():
+                break
+            sa = np.nonzero(can)[0]
+            jmax = int(jcap[sa].max())
+            offs = np.arange(jmax)
+            pos = np.minimum(nxt[sa][:, None] + offs[None, :], n - 1)
+            inrun = offs[None, :] < jcap[sa][:, None]
+            req = order[pos]
+            prem = np.where(inrun, Pre[tmap[sa][:, None], req], 0.0)
+            T = np.cumsum(np.concatenate([t[sa][:, None], prem], axis=1),
+                          axis=1)
+            # request i joins iff it has arrived by the time the engine
+            # reaches it (the prefill end of request i-1)
+            okm = inrun & (np.where(inrun, arr_next[pos], np.inf)
+                           <= T[:, :-1])
+            j = np.where(okm.all(axis=1), jmax, (~okm).argmax(axis=1))
+            adm = offs[None, :] < j[:, None]
+            asel, aoff = np.nonzero(adm)
+            sg = sa[asel]
+            rg = req[asel, aoff]
+            tf = T[asel, aoff + 1]
+            tfirst[sg, rg] = tf
+            mlt = olens[rg] > 1
+            # KV holds plen prompt entries + the just-sampled token
+            seated[sg[mlt], rg[mlt]] = True
+            kv[sg[mlt], rg[mlt]] = plens[rg[mlt]] + 1
+            rem[sg[mlt], rg[mlt]] = olens[rg[mlt]] - 1
+            tdone[sg[~mlt], rg[~mlt]] = tf[~mlt]
+            t[sa] = T[np.arange(sa.size), j]
+            nxt[sa] += j
+            nact = seated.sum(axis=1)
+            pending = nxt < n
+        # --- decode: fast-forward one constant-batch run per point ---
+        if nact.any():
+            sd = np.nonzero(nact > 0)[0]
+            b = nact[sd]
+            seat = seated[sd]
+            c0 = np.where(seat, kv[sd], 0).max(axis=1) + 1  # first-step ctx
+            k = np.where(seat, rem[sd], BIG).min(axis=1)    # next completion
+            free = (b < caps[sd]) & (nxt[sd] < n)
+            arr = np.where(free, arr_next[nxt[sd]], np.inf)
+            kmax = int(k.max())
+            off = np.arange(kmax)
+            steps = (c0 - 1)[:, None] + off[None, :]        # ctx-1 per step
+            valid = off[None, :] < k[:, None]
+            durs = np.where(
+                valid,
+                D[tmap[sd][:, None], (b - 1)[:, None],
+                  np.minimum(steps, max_ctx - 1)],
+                0.0)
+            times = np.cumsum(
+                np.concatenate([t[sd][:, None], durs], axis=1), axis=1)
+            crossed = times[:, 1:] >= arr[:, None]
+            hit = crossed.any(axis=1)
+            k = np.where(hit, np.minimum(k, crossed.argmax(axis=1) + 1), k)
+            t_end = times[np.arange(sd.size), k]
+            run = t_end - t[sd]
+            occ_num[sd] += b * run
+            occ_den[sd] += run
+            t[sd] = t_end
+            adv = np.where(seat, k[:, None], 0)
+            kv[sd] += adv
+            rem[sd] -= adv
+            fin = seat & (rem[sd] <= 0)
+            fs, fr = np.nonzero(fin)
+            tdone[sd[fs], fr] = t_end[fs]
+            seated[sd] = seat & ~fin
+        # --- idle: no active slots, next request not yet arrived ---
+        idle = (nact == 0) & pending
+        if idle.any():
+            si = np.nonzero(idle)[0]
+            t[si] = np.maximum(t[si], arr_next[nxt[si]])
+    ttft = tfirst - arrivals[None, :]
+    lat = tdone - arrivals[None, :]
+    multi = olens > 1
+    tpot = np.zeros((S, n))
+    if multi.any():
+        tpot[:, multi] = ((tdone[:, multi] - tfirst[:, multi])
+                          / (olens[multi] - 1.0))
     tokens_out = float(olens.sum())
-    stats = ServingStats(
-        capacity=float(capacity), n_requests=float(n), makespan=float(t),
+    # one vectorized percentile call per metric (per-row results are the
+    # same partition + linear interpolation ``_finalize_serving`` runs on
+    # a single row, so each row stays bit-identical to the scalar path)
+    ttft_q = np.percentile(ttft, [50, 95], axis=1)
+    lat_q = np.percentile(lat, [50, 95], axis=1)
+    tp_q = (np.percentile(tpot[:, multi], [50, 95], axis=1)
+            if multi.any() else np.zeros((2, S)))
+    stats = [ServingStats(
+        capacity=float(caps[s]), n_requests=float(n), makespan=float(t[s]),
         tokens_out=tokens_out,
-        tokens_per_sec=tokens_out / t if t > 0 else 0.0,
-        ttft_p50=float(np.percentile(ttft, 50)),
-        ttft_p95=float(np.percentile(ttft, 95)),
-        tpot_p50=float(np.percentile(tpot, 50)),
-        tpot_p95=float(np.percentile(tpot, 95)),
-        latency_p50=float(np.percentile(lat, 50)),
-        latency_p95=float(np.percentile(lat, 95)),
-        occupancy=occ_sum / occ_steps if occ_steps else 0.0)
+        tokens_per_sec=tokens_out / float(t[s]) if t[s] > 0 else 0.0,
+        ttft_p50=float(ttft_q[0, s]), ttft_p95=float(ttft_q[1, s]),
+        tpot_p50=float(tp_q[0, s]), tpot_p95=float(tp_q[1, s]),
+        latency_p50=float(lat_q[0, s]), latency_p95=float(lat_q[1, s]),
+        occupancy=float(occ_num[s] / (occ_den[s] * caps[s]))
+        if occ_den[s] > 0 else 0.0)
+        for s in range(S)]
     if return_detail:
         return stats, {"ttft": ttft, "tpot": tpot, "latency": lat,
                        "prompt_lens": plens, "output_lens": olens,

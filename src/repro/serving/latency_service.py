@@ -585,6 +585,103 @@ class LatencyService:
     # ----- serving (prefill/decode) endpoints -----
     _SERVE_EXTRAS = ("decode_step_seconds", "gqa_ratio", "kv_cache_bytes")
 
+    def _serve_tables(self, cfg, prompt_lens, max_ctx: int, *,
+                      capacity: int, tp: int, dtype: Optional[str],
+                      device: Optional[str]):
+        """One (device, tp) ``schedule.ServingTables``: a prefill entry
+        per distinct prompt length through the CACHED scalar endpoints —
+        the same keys/float path as ``latency_query`` /
+        ``latency_parallel``, so the zero-decode degenerate mix stays
+        bit-identical and prefill entries are shared with them — plus
+        ONE ``predict_decode_grid`` call sized ``(capacity, max_ctx)``
+        (the in-cache twin of ``BatchPredictor.serving_tables``)."""
+        from repro.core import opgraph as og
+        from repro.core import schedule as S
+        pred = self.predictor.for_device(device)
+        if tp == 1:
+            pre = {int(p): self.latency_query(cfg, 1, int(p), dtype=dtype,
+                                              device=device).seconds
+                   for p in set(prompt_lens)}
+        else:
+            pre = {int(p): self.latency_parallel(cfg, 1, int(p), tp=tp,
+                                                 dtype=dtype,
+                                                 device=device).seconds
+                   for p in set(prompt_lens)}
+        spec = None if tp == 1 else og.ParallelismSpec(tp=tp)
+        grid = pred.predict_decode_grid(cfg, np.arange(1, capacity + 1),
+                                        np.arange(1, max_ctx + 1),
+                                        dtype=dtype, spec=spec)
+        return S.ServingTables(prefill=pre, decode=grid)
+
+    def _sweep_serve_points(self, cfg, mix, points, dtype, device,
+                            tables_for=None) -> list:
+        """Price a ``[(capacity, tp), ...]`` list for one mix: cache hits
+        answer directly; ALL misses run through one
+        ``simulate_serving_batch`` call over tables from
+        ``tables_for(tp, capacity)`` (default: one decode grid per tp,
+        sized to the largest missing capacity).  Grid rows and cells are
+        batch/ctx-independent, so every entry is bit-identical to pricing
+        that point alone, under the same ``serve.capN.tpN.<mix-tag>``
+        key ``latency_serve`` reads."""
+        from repro.core import opgraph as og
+        from repro.core import schedule as S
+        pred = self.predictor.for_device(device)
+        mix_tag = mix.tag()
+        fields = set(S.ServingStats.FIELDS) | set(self._SERVE_EXTRAS)
+
+        def result(point, d, cached):
+            c, tp = point
+            return ServeLatencyResult(
+                model=cfg.name, device=pred.device,
+                dtype=dtype or "float32", capacity=int(c), tp=int(tp),
+                mix_tag=mix_tag, cached=cached,
+                **{f: d[f] for f in S.ServingStats.FIELDS
+                   if f != "capacity"},
+                **{f: d[f] for f in self._SERVE_EXTRAS})
+
+        keys = [PredictionCache.make_key(
+                    config_key(cfg), pred.cache_device, dtype, int(c),
+                    mix.max_ctx,
+                    spec=f"serve.cap{int(c)}.tp{int(tp)}.{mix_tag}")
+                for c, tp in points]
+        out: list = [None] * len(points)
+        miss = []
+        for i, key in enumerate(keys):
+            hit = self.cache.get(key)
+            # entries missing expected fields (foreign writer) are misses
+            if isinstance(hit, dict) and fields <= hit.keys():
+                out[i] = result(points[i], hit, True)
+            else:
+                miss.append(i)
+        if miss:
+            if tables_for is None:
+                maxcap: dict = {}
+                for i in miss:
+                    c, tp = points[i]
+                    maxcap[int(tp)] = max(maxcap.get(int(tp), 0), int(c))
+                shared = {tp: self._serve_tables(
+                              cfg, mix.prompt_lens, mix.max_ctx,
+                              capacity=c, tp=tp, dtype=dtype, device=device)
+                          for tp, c in maxcap.items()}
+                tables_for = lambda tp, c: shared[int(tp)]
+            caps = [int(points[i][0]) for i in miss]
+            tabs = [tables_for(int(points[i][1]), int(points[i][0]))
+                    for i in miss]
+            stats = S.simulate_serving_batch(mix, caps, tabs)
+            gqa = float(max(1, cfg.n_heads // max(1, cfg.n_kv_heads)))
+            for i, st, tab in zip(miss, stats, tabs):
+                c, tp = points[i]
+                d = st.to_entry()
+                d.update(
+                    decode_step_seconds=float(
+                        tab.decode[int(c) - 1, mix.max_ctx - 1]),
+                    gqa_ratio=gqa,
+                    kv_cache_bytes=float(og.kv_cache_bytes(
+                        cfg, int(c), mix.max_ctx, dtype=dtype)))
+                self.cache.put(keys[i], d)
+                out[i] = result(points[i], d, False)
+        return out
+
     def latency_serve(self, model: Union[str, ModelConfig], mix, *,
                       capacity: int = 8, tp: int = 1,
                       dtype: Optional[str] = None,
@@ -597,75 +694,65 @@ class LatencyService:
         — and decode steps come from ``predict_decode_grid``: sq=1
         KV-cache-read attention priced memory-bound, the GQA ratio visible
         in the breakdown (``kv_read@gqaN`` kernel rows, ``gqa_ratio``
-        here).  The full record is cached under a
-        ``serve.capN.tpN.<mix-tag>`` spec key (schema 6)."""
-        from repro.core import opgraph as og
-        from repro.core import schedule as S
+        here).  The simulation is the event-driven
+        ``schedule.simulate_serving_batch`` over precomputed tables; the
+        full record is cached under a ``serve.capN.tpN.<mix-tag>`` spec
+        key (schema 8)."""
         cfg = self._resolve(model)
-        pred = self.predictor.for_device(device)
         capacity, tp = int(capacity), int(tp)
         if capacity < 1 or tp < 1:
             raise ValueError(f"capacity/tp must be >=1: {capacity}, {tp}")
-        mix_tag = mix.tag()
-        key = PredictionCache.make_key(
-            config_key(cfg), pred.cache_device, dtype, capacity, mix.max_ctx,
-            spec=f"serve.cap{capacity}.tp{tp}.{mix_tag}")
-        _FIELDS = set(S.ServingStats.FIELDS) | set(self._SERVE_EXTRAS)
-
-        def result(d, cached):
-            return ServeLatencyResult(
-                model=cfg.name, device=pred.device,
-                dtype=dtype or "float32", capacity=capacity, tp=tp,
-                mix_tag=mix_tag, cached=cached,
-                **{f: d[f] for f in S.ServingStats.FIELDS
-                   if f != "capacity"},
-                **{f: d[f] for f in self._SERVE_EXTRAS})
-
-        hit = self.cache.get(key)
-        # entries missing expected fields (foreign writer) are misses
-        if isinstance(hit, dict) and _FIELDS <= hit.keys():
-            return result(hit, True)
-        # prefill: one cached forward per distinct prompt length, the
-        # same keys/float path as the scalar endpoints
-        if tp == 1:
-            pre = {int(p): self.latency_query(cfg, 1, int(p), dtype=dtype,
-                                              device=device).seconds
-                   for p in set(mix.prompt_lens)}
-        else:
-            pre = {int(p): self.latency_parallel(cfg, 1, int(p), tp=tp,
-                                                 dtype=dtype,
-                                                 device=device).seconds
-                   for p in set(mix.prompt_lens)}
-        # decode: one (batch, ctx) grid, exact integer lookup in the loop
-        spec = None if tp == 1 else og.ParallelismSpec(tp=tp)
-        ctxs = np.arange(1, mix.max_ctx + 1)
-        grid = pred.predict_decode_grid(cfg, np.arange(1, capacity + 1),
-                                        ctxs, dtype=dtype, spec=spec)
-        stats = S.simulate_serving(
-            mix, capacity, lambda p: pre[int(p)],
-            lambda b, c: float(grid[b - 1, min(int(c), mix.max_ctx) - 1]))
-        d = stats.to_entry()
-        d.update(
-            decode_step_seconds=float(grid[capacity - 1, mix.max_ctx - 1]),
-            gqa_ratio=float(max(1, cfg.n_heads // max(1, cfg.n_kv_heads))),
-            kv_cache_bytes=float(og.kv_cache_bytes(cfg, capacity,
-                                                   mix.max_ctx,
-                                                   dtype=dtype)))
-        self.cache.put(key, d)
-        return result(d, False)
+        return self._sweep_serve_points(cfg, mix, [(capacity, tp)],
+                                        dtype, device)[0]
 
     def sweep_serve(self, model: Union[str, ModelConfig], mix,
                     capacities: Sequence[int], *,
                     tps: Sequence[int] = (1,),
                     dtype: Optional[str] = None,
                     device: Optional[str] = None) -> list:
-        """``latency_serve`` over the (capacity, tp) product grid; every
-        point lands in (or answers from) the shared cache, so follow-up
-        scalar queries on any swept point are hits.  Returns the
-        ``ServeLatencyResult`` list in grid order (capacity-major)."""
-        return [self.latency_serve(model, mix, capacity=c, tp=t,
-                                   dtype=dtype, device=device)
-                for c in capacities for t in tps]
+        """``latency_serve`` over the (mix, capacity, tp) product grid in
+        ONE batched pass per mix: all missing points share one decode
+        grid per tp (sized to the largest requested capacity and the
+        longest mix — smaller points read the same rows bit-identically)
+        and one ``simulate_serving_batch`` call per mix.  Every point
+        still lands in (or answers from) the shared cache under its own
+        ``serve.capN.tpN.<mix-tag>`` key, bit-identical to the scalar
+        call, so follow-up ``latency_serve`` queries on any swept point
+        are hits.  ``mix`` may be a single ``schedule.TrafficMix`` or a
+        sequence of mix variants sharing the table work.  Returns the
+        ``ServeLatencyResult`` list mix-major, then capacity-major (the
+        historical grid order)."""
+        cfg = self._resolve(model)
+        mixes = list(mix) if isinstance(mix, (list, tuple)) else [mix]
+        if not mixes:
+            return []
+        tps = [int(t) for t in tps]
+        capacities = [int(c) for c in capacities]
+        if (any(c < 1 for c in capacities) or any(t < 1 for t in tps)):
+            raise ValueError(
+                f"capacity/tp must be >=1: {capacities}, {tps}")
+        points = [(c, t) for c in capacities for t in tps]
+        # lazy shared tables: prefill over the union of prompt lengths,
+        # ctx to the longest mix, one decode grid per tp on first miss
+        plens = tuple(sorted({int(p) for m in mixes
+                              for p in m.prompt_lens}))
+        max_ctx = max(m.max_ctx for m in mixes)
+        top = max(capacities)
+        shared: dict = {}
+
+        def tables_for(tp, c):
+            tab = shared.get(tp)
+            if tab is None:
+                tab = self._serve_tables(cfg, plens, max_ctx, capacity=top,
+                                         tp=tp, dtype=dtype, device=device)
+                shared[tp] = tab
+            return tab
+
+        out: list = []
+        for m in mixes:
+            out.extend(self._sweep_serve_points(cfg, m, points, dtype,
+                                                device, tables_for))
+        return out
 
     def plan_serving(self, model: Union[str, ModelConfig], mix, *,
                      devices: int = 1,
@@ -680,8 +767,12 @@ class LatencyService:
         points whose per-device weights + full KV cache
         (``opgraph.kv_cache_bytes``, both sharded by tp) exceed capacity,
         reject points whose predicted p95 TTFT/TPOT miss the SLO, and
-        return the max-tokens/sec survivor.  Every priced point shares
-        cache entries with ``latency_serve`` / ``sweep_serve``."""
+        return the max-tokens/sec survivor.  The whole feasible grid is
+        priced in ONE batched pass (one decode grid per tp, one
+        ``simulate_serving_batch`` call), and every point shares cache
+        entries with ``latency_serve`` / ``sweep_serve`` bit-identically
+        — a 32-devices/32-capacity question (36 grid points) is one
+        cached call."""
         from repro.core import opgraph as og
         from repro.core.collectives import dtype_bytes
         cfg = self._resolve(model)
@@ -718,10 +809,10 @@ class LatencyService:
                 f"no (capacity, tp) point fits in {cap / 2**30:.1f} GiB: "
                 f"weights alone are {wbytes / 2**30:.2f} GiB — raise "
                 f"devices/memory or shorten the mix")
+        priced = self._sweep_serve_points(
+            cfg, mix, [(c, t) for c, t, _ in feasible], dtype, device)
         scored = []
-        for c, t, kvb in feasible:
-            r = self.latency_serve(cfg, mix, capacity=c, tp=t, dtype=dtype,
-                                   device=device)
+        for (c, t, kvb), r in zip(feasible, priced):
             ok = ((slo_ttft is None or r.ttft_p95 <= slo_ttft)
                   and (slo_tpot is None or r.tpot_p95 <= slo_tpot))
             scored.append((r, kvb, ok))
@@ -748,23 +839,49 @@ class LatencyService:
 
     def decode_oracle(self, model: Union[str, ModelConfig],
                       dtype: Optional[str] = None,
-                      device: Optional[str] = None):
+                      device: Optional[str] = None, *,
+                      maxsize: int = 4096,
+                      capacity: Optional[int] = None,
+                      max_ctx: Optional[int] = None):
         """A memoized ``(batch, ctx) -> per-decode-step seconds`` callable
         — the admission-control oracle ``serving/engine.py`` consults
-        before seating a request in the decode batch."""
+        before seating a request in the decode batch.  The memo is an
+        LRU bounded at ``maxsize`` (long engine runs previously grew it
+        without limit); pass ``capacity``/``max_ctx`` to pre-price the
+        whole ``(1..capacity, 1..max_ctx)`` grid in one
+        ``predict_decode_grid`` call, making every in-grid step a pure
+        array lookup that never touches the memo.
+        ``step_seconds.cache_info()`` reports size/maxsize/grid."""
+        from collections import OrderedDict
         cfg = self._resolve(model)
         pred = self.predictor.for_device(device)
-        memo: dict = {}
+        memo: "OrderedDict" = OrderedDict()
+        maxsize = max(1, int(maxsize))
+        grid = None
+        if capacity is not None and max_ctx is not None:
+            grid = pred.predict_decode_grid(
+                cfg, np.arange(1, int(capacity) + 1),
+                np.arange(1, int(max_ctx) + 1), dtype=dtype)
 
         def step_seconds(batch: int, ctx: int) -> float:
             b, c = int(batch), max(int(ctx), 1)
+            if (grid is not None and 1 <= b <= grid.shape[0]
+                    and c <= grid.shape[1]):
+                return float(grid[b - 1, c - 1])
             val = memo.get((b, c))
             if val is None:
                 val = float(pred.predict_decode_grid(
                     cfg, [b], [c], dtype=dtype)[0, 0])
                 memo[(b, c)] = val
+                if len(memo) > maxsize:
+                    memo.popitem(last=False)
+            else:
+                memo.move_to_end((b, c))
             return val
 
+        step_seconds.cache_info = lambda: {
+            "size": len(memo), "maxsize": maxsize,
+            "grid": None if grid is None else tuple(grid.shape)}
         return step_seconds
 
     def latency_breakdown(self, model: Union[str, ModelConfig], batch: int,
